@@ -1,0 +1,97 @@
+"""Shared benchmark substrate: datasets, indices, and system wrappers are
+built once and cached across figures.  Scale via REPRO_BENCH_N (default
+20,000 vectors; the paper runs 10^9 — all counts are per-query so the
+*mechanisms* reproduce at reduced scale, see EXPERIMENTS.md §Repro)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.anns_datasets import SIFT_SMALL
+from repro.configs.base import ANNSConfig
+from repro.core.baselines import (DiskAnnLike, HIGpu, HIPq, RummyLike,
+                                  SpannLike)
+from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
+from repro.core.perf_model import DeviceModel, QueryDemand
+from repro.data.synthetic import clustered_vectors
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", 20000))
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", 48))
+
+# reduced-scale stand-ins for the paper's three datasets (Table 1):
+# same dim ratios/dtypes, Gaussian-mixture distribution
+DATASETS = {
+    "sift": dict(dim=128, dtype=np.float32),   # SIFT1B: 128-d uint8
+    "spacev": dict(dim=100, dtype=np.float32),  # SPACEV1B: 100-d int8
+    "deep": dict(dim=96, dtype=np.float32),    # DEEP1B: 96-d float32
+}
+
+HW = DeviceModel()
+
+
+@dataclasses.dataclass
+class Bundle:
+    cfg: ANNSConfig
+    data: np.ndarray
+    queries: np.ndarray
+    gt: np.ndarray
+    index: FusionANNSIndex
+
+
+@functools.lru_cache(maxsize=4)
+def bundle(dataset: str = "sift", n: int = BENCH_N) -> Bundle:
+    spec = DATASETS[dataset]
+    seed = {"sift": 11, "spacev": 22, "deep": 33}[dataset]
+    rng = np.random.default_rng(seed)
+    cfg = dataclasses.replace(
+        SIFT_SMALL, name=dataset, n_vectors=n, dim=spec["dim"],
+        pq_m=spec["dim"] // 4,    # dsub=4 — the 1B configs' compression rate
+        n_posting_fraction=0.02, top_m=24, top_n=256, rerank_batch=32)
+    # queries are held-out draws from the same mixture (standard protocol)
+    everything = clustered_vectors(rng, n + N_QUERIES, spec["dim"],
+                                   n_clusters=max(16, n // 400))
+    data, queries = everything[:n], everything[n:]
+    t0 = time.time()
+    index = FusionANNSIndex.build(data, cfg)
+    print(f"# [{dataset}] index build {time.time()-t0:.1f}s "
+          f"({index.posting.n_clusters} lists, "
+          f"replication {index.posting.replication_factor():.2f}x)")
+    gt = ground_truth(data, queries, 10)
+    return Bundle(cfg=cfg, data=data, queries=queries, gt=gt, index=index)
+
+
+def fusion_demand(index: FusionANNSIndex, queries, **kw) -> Dict:
+    """Measured per-query demands + recall for the FusionANNS engine."""
+    results = [index.query(q, **kw) for q in queries]
+    stats = [r.stats for r in results]
+    m = index.cfg.pq_m
+    demand = QueryDemand(
+        ssd_ios=float(np.mean([s.ios for s in stats])),
+        ssd_bytes=float(np.mean([s.ssd_bytes for s in stats])),
+        h2d_bytes=float(np.mean([s.h2d_bytes for s in stats])),
+        gpu_lookups=float(np.mean([s.candidates_scanned for s in stats])) * m,
+        cpu_dist_ops=float(np.mean(
+            [s.rerank_scored for s in stats])) * index.ssd.vectors.shape[1],
+        graph_hops=2.0 * index.cfg.top_m,
+    )
+    return {"results": results, "demand": demand, "stats": stats}
+
+
+def tune_for_recall(index, queries, gt, target: float,
+                    top_ms=(8, 16, 24, 48, 96), top_ns=(128, 256, 512)):
+    """Find the cheapest (top_m, top_n) reaching the recall target —
+    the paper's per-accuracy-level operating points."""
+    for top_m in top_ms:
+        for top_n in top_ns:
+            res = [index.query(q, top_m=top_m, top_n=top_n)
+                   for q in queries]
+            rec = recall_at_k(np.stack([r.ids for r in res]), gt, 10)
+            if rec >= target:
+                return top_m, top_n, rec
+    return top_ms[-1], top_ns[-1], rec

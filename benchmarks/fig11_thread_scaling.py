@@ -1,0 +1,55 @@
+"""Fig. 11: QPS + latency vs thread count (1..64) for all four systems."""
+
+import numpy as np
+
+from benchmarks.common import HW, bundle, fusion_demand
+from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
+from repro.core.perf_model import QueryDemand, sweep_threads
+
+
+def _mean_demand(results) -> QueryDemand:
+    fields = ("ssd_ios", "ssd_bytes", "h2d_bytes", "gpu_lookups",
+              "cpu_lookups", "cpu_dist_ops", "graph_hops")
+    return QueryDemand(**{f: float(np.mean([getattr(r.demand, f)
+                                            for r in results]))
+                          for f in fields})
+
+
+def run():
+    b = bundle("sift")
+    diskann = DiskAnnLike(b.data, degree=24)
+    fus = fusion_demand(b.index, b.queries)
+    demands = {
+        "FusionANNS": fus["demand"],
+        "SPANN": _mean_demand([SpannLike(b.index, b.data)
+                               .query(q, 10, b.cfg.top_m)
+                               for q in b.queries]),
+        "RUMMY": _mean_demand([RummyLike(b.index, b.data)
+                               .query(q, 10, b.cfg.top_m)
+                               for q in b.queries]),
+        "DiskANN": _mean_demand([diskann.query(q, 10) for q in b.queries]),
+    }
+    rows = []
+    for name, dm in demands.items():
+        sweep = sweep_threads(dm, HW)
+        curve = " ".join(f"t{t}={v['qps']:.0f}" for t, v in sweep.items())
+        peak = max(sweep, key=lambda t: sweep[t]["qps"])
+        rows.append({
+            "name": f"fig11.{name}",
+            "us_per_call": sweep[peak]["latency_ms"] * 1e3,
+            "derived": f"peak@t{peak} {curve}",
+        })
+    f64 = sweep_threads(demands["FusionANNS"], HW)[64]["qps"]
+    s64 = sweep_threads(demands["SPANN"], HW)[64]["qps"]
+    d64 = sweep_threads(demands["DiskANN"], HW)[64]["qps"]
+    r64 = sweep_threads(demands["RUMMY"], HW)[64]["qps"]
+    rows.append({"name": "fig11.speedups_at_t64", "us_per_call": 0,
+                 "derived": (f"vs_spann={f64/s64:.1f}x vs_diskann={f64/d64:.1f}x "
+                             f"vs_rummy={f64/r64:.1f}x "
+                             f"(paper: 13.2x / 3.8x / 5.1x)")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,39 @@
+"""Fig. 3: SPANN throughput saturates at few threads (SSD bandwidth-bound);
+latency split graph-vs-postinglist grows with threads."""
+
+import numpy as np
+
+from benchmarks.common import HW, bundle
+from repro.core.baselines import SpannLike
+from repro.core.perf_model import sweep_threads
+
+
+def run():
+    b = bundle("sift")
+    spann = SpannLike(b.index, b.data)
+    res = [spann.query(q, 10, b.cfg.top_m) for q in b.queries]
+    demand = res[0].demand
+    for r in res[1:]:
+        for f in ("ssd_ios", "ssd_bytes", "cpu_dist_ops", "graph_hops"):
+            setattr(demand, f, getattr(demand, f) + getattr(r.demand, f))
+    for f in ("ssd_ios", "ssd_bytes", "cpu_dist_ops", "graph_hops"):
+        setattr(demand, f, getattr(demand, f) / len(res))
+    sweep = sweep_threads(demand, HW)
+    rows = []
+    peak_t = max(sweep, key=lambda t: sweep[t]["qps"])
+    for t, v in sweep.items():
+        rows.append({
+            "name": f"fig3.spann.threads{t}",
+            "us_per_call": v["latency_ms"] * 1e3,
+            "derived": f"qps={v['qps']:.0f}",
+        })
+    rows.append({"name": "fig3.spann.peak_threads", "us_per_call": 0,
+                 "derived": f"peak_at_threads={peak_t} "
+                            f"(paper: ~4; bandwidth-bound "
+                            f"bytes/q={demand.ssd_bytes:.0f})"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

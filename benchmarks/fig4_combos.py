@@ -1,0 +1,66 @@
+"""Fig. 4: the straw-man combinations (HI, HI+GPU, HI+PQ, HI+PQ+GPU):
+latency breakdown (a), QPS (b), I/O counts (c), CPU<->GPU volume (d)."""
+
+import numpy as np
+
+from benchmarks.common import HW, bundle, fusion_demand
+from repro.core.baselines import HIGpu, HIPq, SpannLike
+from repro.core.engine import recall_at_k
+from repro.core.perf_model import qps_at_threads, single_thread_latency
+
+
+def run():
+    b = bundle("sift")
+    systems = {
+        "HI": lambda q: SpannLike(b.index, b.data).query(q, 10, b.cfg.top_m),
+    }
+    spann = SpannLike(b.index, b.data)
+    higpu = HIGpu(b.index, b.data)
+    hipq = HIPq(b.index, b.data, gpu=False)
+    hipqgpu = HIPq(b.index, b.data, gpu=True)
+
+    rows = []
+    agg = {}
+    for name, sysq in [("HI", spann), ("HI+GPU", higpu)]:
+        res = [sysq.query(q, 10, b.cfg.top_m) for q in b.queries]
+        agg[name] = res
+    for name, sysq in [("HI+PQ", hipq), ("HI+PQ+GPU", hipqgpu)]:
+        res = [sysq.query(q, 10, b.cfg.top_m, b.cfg.top_n)
+               for q in b.queries]
+        agg[name] = res
+    fus = fusion_demand(b.index, b.queries)
+    rec_f = recall_at_k(np.stack([r.ids for r in fus["results"]]), b.gt, 10)
+
+    for name, res in agg.items():
+        d = res[0].demand
+        n = len(res)
+        mean = lambda f: float(np.mean([getattr(r.demand, f) for r in res]))
+        from repro.core.perf_model import QueryDemand
+        dm = QueryDemand(**{f: mean(f) for f in (
+            "ssd_ios", "ssd_bytes", "h2d_bytes", "gpu_lookups",
+            "cpu_lookups", "cpu_dist_ops", "graph_hops")})
+        lat = single_thread_latency(dm, HW)
+        qps = qps_at_threads(dm, HW, 64)
+        rec = recall_at_k(np.stack([r.ids for r in res]), b.gt, 10)
+        rows.append({
+            "name": f"fig4.{name}",
+            "us_per_call": lat * 1e6,
+            "derived": (f"qps64={qps:.0f} ios={dm.ssd_ios:.1f} "
+                        f"ssd_KB={dm.ssd_bytes/1e3:.1f} "
+                        f"h2d_KB={dm.h2d_bytes/1e3:.1f} recall={rec:.3f}"),
+        })
+    dm = fus["demand"]
+    lat = single_thread_latency(dm, HW)
+    rows.append({
+        "name": "fig4.FusionANNS",
+        "us_per_call": lat * 1e6,
+        "derived": (f"qps64={qps_at_threads(dm, HW, 64):.0f} "
+                    f"ios={dm.ssd_ios:.1f} ssd_KB={dm.ssd_bytes/1e3:.1f} "
+                    f"h2d_KB={dm.h2d_bytes/1e3:.1f} recall={rec_f:.3f}"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,68 @@
+"""Fig. 9: QPS + latency of SPANN / DiskANN / RUMMY / FusionANNS across the
+three dataset profiles at Recall@10>=0.9 (peak-thread operating point)."""
+
+import numpy as np
+
+from benchmarks.common import HW, bundle, fusion_demand
+from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
+from repro.core.engine import recall_at_k
+from repro.core.perf_model import (QueryDemand, qps_at_threads,
+                                   latency_at_threads)
+
+
+def _mean_demand(results) -> QueryDemand:
+    fields = ("ssd_ios", "ssd_bytes", "h2d_bytes", "gpu_lookups",
+              "cpu_lookups", "cpu_dist_ops", "graph_hops")
+    return QueryDemand(**{f: float(np.mean([getattr(r.demand, f)
+                                            for r in results]))
+                          for f in fields})
+
+
+def best_qps(demand, threads=(1, 2, 4, 8, 16, 32, 64)):
+    best = max(threads, key=lambda t: qps_at_threads(demand, HW, t))
+    return (qps_at_threads(demand, HW, best),
+            latency_at_threads(demand, HW, best), best)
+
+
+def run():
+    rows = []
+    for ds in ("sift", "spacev", "deep"):
+        b = bundle(ds)
+        diskann = DiskAnnLike(b.data, degree=24)
+        systems = {}
+        fus = fusion_demand(b.index, b.queries)
+        systems["FusionANNS"] = (fus["demand"],
+                                 np.stack([r.ids for r in fus["results"]]))
+        sp = [SpannLike(b.index, b.data).query(q, 10, b.cfg.top_m)
+              for q in b.queries]
+        systems["SPANN"] = (_mean_demand(sp), np.stack([r.ids for r in sp]))
+        ru = [RummyLike(b.index, b.data).query(q, 10, b.cfg.top_m)
+              for q in b.queries]
+        systems["RUMMY"] = (_mean_demand(ru), np.stack([r.ids for r in ru]))
+        da = [diskann.query(q, 10) for q in b.queries]
+        systems["DiskANN"] = (_mean_demand(da), np.stack([r.ids for r in da]))
+
+        qps_map = {}
+        for name, (demand, ids) in systems.items():
+            rec = recall_at_k(ids, b.gt, 10)
+            qps, lat, t = best_qps(demand)
+            qps_map[name] = qps
+            rows.append({
+                "name": f"fig9.{ds}.{name}",
+                "us_per_call": lat * 1e6,
+                "derived": f"qps={qps:.0f}@t{t} recall={rec:.3f}",
+            })
+        rows.append({
+            "name": f"fig9.{ds}.speedup",
+            "us_per_call": 0,
+            "derived": (f"vs_spann={qps_map['FusionANNS']/qps_map['SPANN']:.1f}x "
+                        f"vs_diskann={qps_map['FusionANNS']/qps_map['DiskANN']:.1f}x "
+                        f"vs_rummy={qps_map['FusionANNS']/qps_map['RUMMY']:.1f}x "
+                        f"(paper: 9.4-13.1x / 3.2-4.3x / 2-4.9x)"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: us/call of the ADC scan + exact-L2 oracle paths
+(jnp on CPU; Pallas interpret path checked for parity, not speed)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.l2dist import l2_distances
+from repro.kernels.pq_adc import pq_adc, pq_adc_topk
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, m in [(65536, 32), (262144, 32)]:
+        codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+        lut = jnp.asarray(rng.random((m, 256)), jnp.float32)
+        us = _time(lambda c, l: pq_adc(c, l, use_kernel=False), codes, lut)
+        lookups_per_s = n * m / (us / 1e6)
+        rows.append({"name": f"kern.pq_adc.n{n}", "us_per_call": us,
+                     "derived": f"lookups_per_s={lookups_per_s:.2e}"})
+        us = _time(lambda c, l: pq_adc_topk(c, l, 256, use_kernel=False),
+                   codes, lut)
+        rows.append({"name": f"kern.pq_adc_topk.n{n}", "us_per_call": us,
+                     "derived": "fused scan+topk (jnp path)"})
+    q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
+    us = _time(lambda a, b: l2_distances(a, b, use_kernel=False), q, v)
+    rows.append({"name": "kern.l2dist.64x4096x128", "us_per_call": us,
+                 "derived": f"gflops={2*64*4096*128/us/1e3:.1f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

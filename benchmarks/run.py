@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV (harness contract)."""
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (beyond_fused_batch, fig3_spann_scaling, fig4_combos,
+                        fig5_rerank, fig9_throughput_latency,
+                        fig10_accuracy_levels, fig11_thread_scaling,
+                        fig12_ablation, kernels_bench, tab2_tab3_cost)
+
+ALL = {
+    "fig3": fig3_spann_scaling,
+    "fig4": fig4_combos,
+    "fig5": fig5_rerank,
+    "fig9": fig9_throughput_latency,
+    "fig10": fig10_accuracy_levels,
+    "fig11": fig11_thread_scaling,
+    "fig12": fig12_ablation,
+    "tab2_tab3": tab2_tab3_cost,
+    "kernels": kernels_bench,
+    "beyond": beyond_fused_batch,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(ALL),
+                    help="run a subset of figures")
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    print("name,us_per_call,derived")
+    ok = True
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = ALL[name].run()
+            for r in rows:
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{name},0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

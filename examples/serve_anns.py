@@ -1,0 +1,72 @@
+"""End-to-end serving driver (the paper's kind): build a FusionANNS index
+and serve batched query traffic, reporting recall / simulated-I/O / modelled
+QPS-vs-threads — the full online pipeline of paper §3.
+
+    PYTHONPATH=src python examples/serve_anns.py --n 30000 --queries 64
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.configs.anns_datasets import SIFT_SMALL
+from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
+from repro.core.perf_model import DeviceModel, QueryDemand, sweep_threads
+from repro.data.synthetic import clustered_vectors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30_000)
+    ap.add_argument("--dim", type=int, default=96)
+    ap.add_argument("--queries", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=args.n, dim=args.dim,
+                              pq_m=args.dim // 4, n_posting_fraction=0.02,
+                              top_m=24, top_n=256)
+    rng = np.random.default_rng(0)
+    everything = clustered_vectors(rng, args.n + args.queries, args.dim,
+                                   n_clusters=max(16, args.n // 400))
+    data, queries = everything[:args.n], everything[args.n:]
+
+    t0 = time.time()
+    index = FusionANNSIndex.build(data, cfg)
+    print(f"# build {time.time()-t0:.1f}s")
+    gt = ground_truth(data, queries, 10)
+
+    t0 = time.time()
+    results = index.batch_query(queries)
+    wall = time.time() - t0
+    rec = recall_at_k(np.stack([r.ids for r in results]), gt, 10)
+
+    stats = [r.stats for r in results]
+    demand = QueryDemand(
+        ssd_ios=float(np.mean([s.ios for s in stats])),
+        ssd_bytes=float(np.mean([s.ssd_bytes for s in stats])),
+        h2d_bytes=float(np.mean([s.h2d_bytes for s in stats])),
+        gpu_lookups=float(np.mean([s.candidates_scanned for s in stats]))
+        * cfg.pq_m,
+        cpu_dist_ops=float(np.mean([s.rerank_scored for s in stats]))
+        * args.dim,
+        graph_hops=2.0 * cfg.top_m)
+    sweep = sweep_threads(demand, DeviceModel())
+
+    print(json.dumps({
+        "recall@10": round(rec, 4),
+        "host_wall_ms_per_query": round(1e3 * wall / len(queries), 2),
+        "mean_ssd_ios": round(demand.ssd_ios, 1),
+        "mean_h2d_bytes": int(demand.h2d_bytes),
+        "early_stop_rate": round(float(np.mean(
+            [s.early_stopped for s in stats])), 3),
+        "modelled_qps": {f"t{t}": round(v["qps"]) for t, v in sweep.items()},
+        "modelled_latency_ms": {f"t{t}": round(v["latency_ms"], 2)
+                                for t, v in sweep.items()},
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+import json, sys
+def load(p):
+    return {(r['arch'], r['shape'], r['mesh']): r
+            for r in map(json.loads, open(p)) if r.get('ok')}
+a = load(sys.argv[1]); b = load(sys.argv[2])
+keys = sorted(set(a) & set(b))
+for k in keys:
+    ra, rb = a[k]['roofline'], b[k]['roofline']
+    da = max(ra['t_compute_s'], ra['t_memory_s'], ra['t_collective_s'])
+    db = max(rb['t_compute_s'], rb['t_memory_s'], rb['t_collective_s'])
+    if abs(da - db) / max(da, 1e-12) > 0.03 or \
+       abs(ra['t_collective_s'] - rb['t_collective_s']) / max(ra['t_collective_s'], 1e-12) > 0.05:
+        print(f"{k[0]:20s} {k[1]:14s} {k[2]:6s} dom {da:.3e}->{db:.3e} "
+              f"coll {ra['t_collective_s']:.3e}->{rb['t_collective_s']:.3e} "
+              f"mem {ra['t_memory_s']:.3e}->{rb['t_memory_s']:.3e} "
+              f"peak {a[k]['memory']['peak_bytes_per_device']/2**30:.2f}->{b[k]['memory']['peak_bytes_per_device']/2**30:.2f}GiB")

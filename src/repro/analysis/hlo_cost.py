@@ -1,0 +1,288 @@
+"""Loop-aware HLO cost model (text-based).
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE — useless for
+scan-over-layers programs (everything here is scanned).  This analyzer walks
+the post-SPMD HLO text, multiplies loop bodies by their
+``known_trip_count`` (printed in ``backend_config``), and accumulates:
+
+  * flops        — dot ops (2*K*numel(result)) + elementwise (1/elem)
+  * hbm bytes    — fusion/op boundary operand+result bytes
+  * collective operand bytes, per kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute)
+
+All numbers describe the *per-device* partitioned module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "xor", "not", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "atan2", "cosine",
+    "sine", "erf", "exponential-minus-one", "log-plus-one", "clamp",
+}
+_ZERO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_numel_bytes(shape_str: str) -> Tuple[int, int]:
+    numel_total, bytes_total = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in self.coll:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.shapes: Dict[str, str] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc and line.rstrip().endswith("{"):
+                cur = mc.group(1)
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                # typed params in the header
+                for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      mc.group(2)):
+                    self.shapes.setdefault(pm.group(1), pm.group(2))
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                ins = Instr(mi.group(1), mi.group(2), mi.group(3),
+                            mi.group(4))
+                self.comps[cur].append(ins)
+                self.shapes[ins.name] = ins.shape
+
+    def _operands(self, ins: Instr) -> List[str]:
+        # operand list = %names inside the first balanced paren group
+        depth, buf = 1, []
+        for ch in ins.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        return _OPND_RE.findall("".join(buf))
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        return sum(_shape_numel_bytes(self.shapes.get(n, ""))[1]
+                   for n in self._operands(ins))
+
+    def _fusion_boundary_bytes(self, ins: Instr, called: str) -> float:
+        """Slice-aware fusion boundary bytes (matches HloCostAnalysis
+        semantics): a parameter consumed only by dynamic-slice/gather
+        contributes the *slice* bytes, not the full buffer; a root
+        dynamic-update-slice writes only the update region."""
+        comp = self.comps.get(called, [])
+        params: Dict[int, str] = {}
+        consumers: Dict[str, List[Instr]] = {}
+        for i in comp:
+            if i.op == "parameter":
+                try:
+                    params[int(i.rest.split(")")[0])] = i.name
+                except ValueError:
+                    pass
+            for opnd in self._operands(i):
+                consumers.setdefault(opnd, []).append(i)
+        operands = self._operands(ins)
+        total = 0.0
+        for pos, opnd in enumerate(operands):
+            full = _shape_numel_bytes(self.shapes.get(opnd, ""))[1]
+            pname = params.get(pos)
+            uses = consumers.get(pname, []) if pname else []
+            if uses and all(u.op in ("dynamic-slice", "gather", "slice")
+                            for u in uses):
+                total += sum(_shape_numel_bytes(u.shape)[1] for u in uses)
+            else:
+                total += full
+        # root write: in-place dynamic-update-slice only touches the update
+        root = comp[-1] if comp else None
+        if root is not None and root.op == "dynamic-update-slice":
+            ops = self._operands(root)
+            upd = (_shape_numel_bytes(self.shapes.get(ops[1], ""))[1]
+                   if len(ops) > 1 else 0)
+            total += upd
+        else:
+            total += _shape_numel_bytes(ins.shape)[1]
+        return total
+
+    def _instr_cost(self, ins: Instr) -> Cost:
+        c = Cost()
+        numel, rbytes = _shape_numel_bytes(ins.shape)
+        op = ins.op
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            return c
+        if base in _COLLECTIVES:
+            ob = self._operand_bytes(ins)
+            if ob == 0:
+                ob = rbytes
+            # bytes a device moves over ICI: all-gather RECEIVES the full
+            # result; reduce-scatter/all-reduce/a2a move ~operand bytes.
+            moved = rbytes if base == "all-gather" else ob
+            c.coll[base] += moved
+            c.bytes += ob + rbytes
+            return c
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.rest)
+            if m:
+                inner = self.comp_cost(m.group(1))
+                c.flops += inner.flops
+                for k in c.coll:
+                    c.coll[k] += inner.coll[k]
+                c.bytes += self._fusion_boundary_bytes(ins, m.group(1))
+            else:
+                c.bytes += self._operand_bytes(ins) + rbytes
+            return c
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the slice; indices negligible
+            c.bytes += 2.0 * rbytes
+            return c
+        if op == "dynamic-update-slice":
+            ops = self._operands(ins)
+            upd = (_shape_numel_bytes(self.shapes.get(ops[1], ""))[1]
+                   if len(ops) > 1 else rbytes)
+            c.bytes += 2.0 * upd
+            return c
+        if op == "scatter":
+            ops = self._operands(ins)
+            upd = (_shape_numel_bytes(self.shapes.get(ops[2], ""))[1]
+                   if len(ops) > 2 else rbytes)
+            c.bytes += 3.0 * upd
+            return c
+        if op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            body = _BODY_RE.search(ins.rest)
+            cond = _COND_RE.search(ins.rest)
+            if body:
+                c += self.comp_cost(body.group(1)).scaled(trip)
+            if cond:
+                c += self.comp_cost(cond.group(1)).scaled(trip)
+            return c
+        if op == "dot":
+            k = 1
+            mc = _CDIMS_RE.search(ins.rest)
+            ops = self._operands(ins)
+            if mc and ops:
+                lhs_shape = self.shapes.get(ops[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for ci in mc.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            c.flops += 2.0 * numel * k
+            c.bytes += self._operand_bytes(ins) + rbytes
+            return c
+        if op in _ELEMENTWISE:
+            c.flops += numel
+            c.bytes += self._operand_bytes(ins) + rbytes
+            return c
+        if op == "reduce":
+            ops = self._operands(ins)
+            if ops:
+                on, ob = _shape_numel_bytes(self.shapes.get(ops[0], ""))
+                c.flops += on
+                c.bytes += ob + rbytes
+            return c
+        if op in _ZERO_BYTES:
+            return c
+        # default: memory op (copy, gather, scatter, slice, sort, ...)
+        c.bytes += self._operand_bytes(ins) + rbytes
+        return c
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total           # guard vs cycles
+        for ins in self.comps.get(name, []):
+            total += self._instr_cost(ins)
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

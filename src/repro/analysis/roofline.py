@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e target):
+  peak bf16:     197 TFLOP/s per chip
+  HBM bandwidth: 819 GB/s per chip
+  ICI link:      ~50 GB/s per chip (effective per-direction)
+
+``cost_analysis``/``memory_analysis`` on an SPMD-partitioned executable
+describe the *per-device* program, so all three terms below are per-chip
+seconds directly comparable to each other:
+
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes_accessed / HBM_BW
+  collective = sum(operand bytes of all-gather/all-reduce/reduce-scatter/
+               all-to-all/collective-permute in the post-SPMD HLO) / ICI_BW
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (per chip, effective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][\w\-]*)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuples '(f32[2,3], u8[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *operand* bytes per collective kind from post-SPMD HLO text.
+
+    Two-pass: (1) map instruction name -> result bytes, (2) for each
+    collective, sum the result-bytes of its operands (start/done pairs are
+    counted once via the -start form; plain forms counted directly)."""
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1).lstrip("%")] = _shape_bytes(m.group(2))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    opnd = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # operands: inside the first (...) after the op name
+        try:
+            args = line.split(op + "(", 1)[1]
+        except IndexError:
+            continue
+        depth, buf = 1, []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        arg_str = "".join(buf)
+        total = 0
+        for name in opnd.findall(arg_str):
+            if name in sizes:
+                total += sizes[name]
+        if total == 0:
+            total = _shape_bytes(m.group(2))   # fallback: result bytes
+        out[base] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops (loop-aware)
+    hbm_bytes: float             # per-device bytes accessed (loop-aware)
+    coll_bytes: float            # per-device collective operand bytes
+    coll_breakdown: Dict[str, int]
+    model_flops: float           # global analytic "useful" flops
+    n_chips: int
+    xla_flops: float = 0.0       # XLA cost_analysis (loop bodies counted 1x)
+    xla_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        denom = self.flops * self.n_chips
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-roofline bound achieved by useful work:
+        (model-flops time at peak) / (dominant term)."""
+        t_ideal = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_dom if t_dom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_flops_per_chip": self.xla_flops,
+            "xla_bytes_per_chip": self.xla_bytes,
+        }
+
+
+def from_compiled(compiled, model_flops: float, n_chips: int,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Primary source: the loop-aware text analyzer (hlo_cost) — XLA's
+    cost_analysis counts while bodies once, which under-counts every
+    scan-over-layers program.  XLA's numbers are kept as reference."""
+    from repro.analysis import hlo_cost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):            # older jax returns [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    c = hlo_cost.analyze(text)
+    return Roofline(flops=max(c.flops, xla_flops),
+                    hbm_bytes=max(c.bytes, xla_bytes),
+                    coll_bytes=float(sum(c.coll.values())),
+                    coll_breakdown={k: int(v) for k, v in c.coll.items()},
+                    model_flops=model_flops, n_chips=n_chips,
+                    xla_flops=xla_flops, xla_bytes=xla_bytes)

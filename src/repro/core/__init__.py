@@ -1,0 +1,8 @@
+from repro.core.engine import (  # noqa: F401
+    FusionANNSIndex,
+    QueryResult,
+    QueryStats,
+    ground_truth,
+    recall_at_k,
+)
+from repro.core.topk import sharded_topk  # noqa: F401

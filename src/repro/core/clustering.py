@@ -1,0 +1,131 @@
+"""Posting-list construction (paper §4.1): hierarchical balanced clustering
++ the ε-replication closure of Eq. (2) with the ≤8-replica cap."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PostingLists:
+    centroids: np.ndarray            # (C, D) f32
+    members: List[np.ndarray]        # per-cluster vector-ids (with replicas)
+    primary: np.ndarray              # (N,) nearest-cluster id per vector
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.members)
+
+    def replication_factor(self) -> float:
+        total = sum(len(m) for m in self.members)
+        return total / max(len(self.primary), 1)
+
+
+def _kmeans(rng: np.random.Generator, data: np.ndarray, k: int,
+            iters: int = 10, chunk: int = 65536) -> np.ndarray:
+    """Plain Lloyd k-means (numpy, chunked distance) — the leaf step of the
+    hierarchical balanced clustering."""
+    n = len(data)
+    centers = data[rng.choice(n, size=k, replace=n < k)].astype(np.float32)
+    for _ in range(iters):
+        assign = np.empty(n, np.int32)
+        for s in range(0, n, chunk):
+            blk = data[s:s + chunk]
+            d2 = (np.sum(blk ** 2, -1)[:, None]
+                  - 2.0 * blk @ centers.T + np.sum(centers ** 2, -1)[None])
+            assign[s:s + chunk] = np.argmin(d2, -1)
+        for c in range(k):
+            pts = data[assign == c]
+            if len(pts):
+                centers[c] = pts.mean(0)
+    return centers
+
+
+def hierarchical_balanced_clustering(
+        rng: np.random.Generator, data: np.ndarray, n_clusters: int,
+        branch: int = 8, max_leaf: Optional[int] = None) -> np.ndarray:
+    """Recursively k-means-split the largest partition until ``n_clusters``
+    leaves exist (keeps leaves balanced — the paper's [34] lineage).
+    Returns centroids (n_clusters, D)."""
+    parts: List[np.ndarray] = [np.arange(len(data))]
+    while len(parts) < n_clusters:
+        parts.sort(key=len)
+        big = parts.pop()                      # split the largest
+        k = min(branch, max(2, n_clusters - len(parts)))
+        if len(big) <= k:
+            parts.append(big)
+            break
+        centers = _kmeans(rng, data[big], k, iters=6)
+        d2 = (np.sum(data[big] ** 2, -1)[:, None]
+              - 2.0 * data[big] @ centers.T
+              + np.sum(centers ** 2, -1)[None])
+        assign = np.argmin(d2, -1)
+        new = [big[assign == c] for c in range(k)]
+        parts.extend(p for p in new if len(p))
+    cents = np.stack([data[p].mean(0) if len(p) else data[0]
+                      for p in parts[:n_clusters]]).astype(np.float32)
+    # polish with a few global Lloyd rounds
+    return _kmeans_polish(data, cents, iters=4)
+
+
+def _kmeans_polish(data: np.ndarray, centers: np.ndarray,
+                   iters: int = 4, chunk: int = 65536) -> np.ndarray:
+    for _ in range(iters):
+        sums = np.zeros_like(centers)
+        cnts = np.zeros(len(centers))
+        for s in range(0, len(data), chunk):
+            blk = data[s:s + chunk]
+            d2 = (np.sum(blk ** 2, -1)[:, None]
+                  - 2.0 * blk @ centers.T + np.sum(centers ** 2, -1)[None])
+            a = np.argmin(d2, -1)
+            np.add.at(sums, a, blk)
+            np.add.at(cnts, a, 1)
+        nz = cnts > 0
+        centers[nz] = sums[nz] / cnts[nz, None]
+    return centers
+
+
+def assign_with_replication(data: np.ndarray, centroids: np.ndarray,
+                            eps: float = 0.10, max_replicas: int = 8,
+                            chunk: int = 32768) -> PostingLists:
+    """Eq. (2): v ∈ C_i  ⇔  Dist(v, C_i) ≤ (1+ε)·Dist(v, C_1), capped at
+    ``max_replicas`` clusters per vector."""
+    n = len(data)
+    c = len(centroids)
+    r = min(max_replicas, c)
+    members: List[List[int]] = [[] for _ in range(c)]
+    primary = np.empty(n, np.int32)
+    for s in range(0, n, chunk):
+        blk = data[s:s + chunk].astype(np.float32)
+        d2 = (np.sum(blk ** 2, -1)[:, None]
+              - 2.0 * blk @ centroids.T + np.sum(centroids ** 2, -1)[None])
+        idx = np.argpartition(d2, r - 1, axis=1)[:, :r]
+        dd = np.take_along_axis(d2, idx, axis=1)
+        order = np.argsort(dd, axis=1)
+        idx = np.take_along_axis(idx, order, axis=1)
+        dd = np.take_along_axis(dd, order, axis=1)
+        primary[s:s + chunk] = idx[:, 0]
+        # Eq. 2 threshold on *distances* (squared dist => (1+eps)^2)
+        thresh = (1.0 + eps) ** 2 * dd[:, :1]
+        ok = dd <= thresh
+        for row in range(len(blk)):
+            vid = s + row
+            for j in range(r):
+                if ok[row, j]:
+                    members[idx[row, j]].append(vid)
+    return PostingLists(
+        centroids=centroids.astype(np.float32),
+        members=[np.asarray(m, np.int32) for m in members],
+        primary=primary)
+
+
+def build_posting_lists(rng: np.random.Generator, data: np.ndarray,
+                        n_clusters: int, eps: float = 0.10,
+                        max_replicas: int = 8) -> PostingLists:
+    cents = hierarchical_balanced_clustering(rng, data, n_clusters)
+    return assign_with_replication(data, cents, eps, max_replicas)

@@ -1,0 +1,137 @@
+"""Distributed FusionANNS scan: PQ codes row-sharded across every device's
+HBM (the paper's "pinned in GPU HBM" tier, scaled to a pod — DESIGN.md §2).
+
+Per query batch: each device ADC-scans its code shard (Pallas kernel on TPU,
+jnp oracle under interpret/CPU), takes a *local* top-n, and one small
+``all_gather`` of (dist, global-id) pairs merges shards — vector contents
+never cross the interconnect, exactly the paper's ID-only invariant."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels.pq_adc.ref import pq_adc_ref
+from repro.models.layers import ShardCtx
+
+
+def _local_scan_topn(codes, lut, top_n: int, axes, n_shards: int):
+    n_loc = codes.shape[0]
+    dist = pq_adc_ref(codes, lut)                     # (n_loc,) f32
+    tk = min(top_n, n_loc)
+    neg, idx = jax.lax.top_k(-dist, tk)
+    me = jax.lax.axis_index(axes) if n_shards > 1 else 0
+    gids = idx + me * n_loc
+    vals = -neg
+    if n_shards > 1:
+        vals = jax.lax.all_gather(vals, axes, axis=0, tiled=True)
+        gids = jax.lax.all_gather(gids, axes, axis=0, tiled=True)
+    neg, pos = jax.lax.top_k(-vals, tk)
+    return -neg, gids[pos]
+
+
+def sharded_adc_topn(codes: jax.Array, lut: jax.Array, top_n: int,
+                     ctx: ShardCtx) -> Tuple[jax.Array, jax.Array]:
+    """codes (N, M) uint8 sharded over ``corpus`` axes; lut (M, K) f32
+    replicated -> (dists (top_n,), global ids (top_n,)) replicated."""
+    if ctx.mesh is None:
+        dist = pq_adc_ref(codes, lut)
+        neg, ids = jax.lax.top_k(-dist, min(top_n, codes.shape[0]))
+        return -neg, ids
+    axes = ctx.rules.corpus
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in axes_t:
+        n_shards *= ctx.mesh.shape[a]
+    body = functools.partial(_local_scan_topn, top_n=top_n, axes=axes_t,
+                             n_shards=n_shards)
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(codes, lut)
+
+
+def _local_scan_topn_blocked(codes, luts, top_n: int, axes, n_shards: int,
+                             block_n: int = 65536):
+    """§Perf hillclimb A (jnp form): scan code BLOCKS, scoring all B
+    queries per block in one flat gather, with a running per-query top-n —
+    the Pallas `pq_adc_batch` kernel is the VMEM-resident version of this
+    loop (LUTs + accumulators never leave VMEM)."""
+    n_loc, m = codes.shape
+    b, _, k = luts.shape
+    bn = min(block_n, n_loc)
+    n_blocks = n_loc // bn
+    assert n_blocks * bn == n_loc, (n_loc, bn)
+    flat = luts.reshape(b, m * k)
+    tk = min(top_n, bn)
+
+    def body(carry, blk_idx):
+        run_v, run_i = carry
+        blk = jax.lax.dynamic_slice_in_dim(codes, blk_idx * bn, bn)
+        idx = blk.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                       * k)[None, :]
+        vals = jnp.take(flat, idx.reshape(-1), axis=1)        # (B, bn*M)
+        dist = jnp.sum(vals.reshape(b, bn, m), axis=-1)       # (B, bn)
+        neg, pos = jax.lax.top_k(-dist, tk)
+        ids = pos + blk_idx * bn
+        cat_v = jnp.concatenate([run_v, -neg], axis=1)
+        cat_i = jnp.concatenate([run_i, ids], axis=1)
+        neg2, pos2 = jax.lax.top_k(-cat_v, tk)
+        return (-neg2, jnp.take_along_axis(cat_i, pos2, axis=1)), None
+
+    init = (jnp.full((b, tk), jnp.inf, jnp.float32),
+            jnp.full((b, tk), -1, jnp.int32))
+    (vals, ids), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    me = jax.lax.axis_index(axes) if n_shards > 1 else 0
+    gids = ids + me * n_loc
+    if n_shards > 1:
+        vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
+        gids = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
+    neg, pos = jax.lax.top_k(-vals, tk)
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
+
+
+def sharded_adc_topn_batch(codes: jax.Array, luts: jax.Array, top_n: int,
+                           ctx: ShardCtx, *, blocked: bool = True
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Batched queries: luts (B, M, K) replicated -> ((B, top_n) x2).
+
+    The scan is the bandwidth-bound stage; queries amortise the code
+    traffic (each code byte is read once per *batch*, not per query).
+    ``blocked=False`` falls back to the per-query map (the §Perf baseline).
+    """
+    if ctx.mesh is None:
+        def one(lut):
+            d = pq_adc_ref(codes, lut)
+            neg, ids = jax.lax.top_k(-d, min(top_n, codes.shape[0]))
+            return -neg, ids
+        return jax.lax.map(one, luts)
+    axes = ctx.rules.corpus
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in axes_t:
+        n_shards *= ctx.mesh.shape[a]
+
+    if blocked:
+        def body(codes_l, luts_l):
+            return _local_scan_topn_blocked(codes_l, luts_l, top_n, axes_t,
+                                            n_shards)
+    else:
+        def body(codes_l, luts_l):
+            def one(lut):
+                return _local_scan_topn(codes_l, lut, top_n, axes_t,
+                                        n_shards)
+            return jax.lax.map(one, luts_l)
+
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(axes, None), P(None, None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )(codes, luts)

@@ -1,0 +1,322 @@
+"""FusionANNS engine: offline index build (§3 Offline) + the 8-step online
+query pipeline (§3 Online).
+
+Tier placement in this build (DESIGN.md §2):
+  * navigation graph + posting-list vector-IDs  -> host numpy ("DRAM")
+  * PQ codes + codebooks                        -> jax arrays ("HBM";
+    sharded via core.distributed on a mesh)
+  * raw vectors                                 -> SSDSim (4 KB page model)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ANNSConfig
+from repro.core import clustering, navgraph as ng, pq
+from repro.core.io_sim import IOStats, SSDSim, StorageLayout
+from repro.core.rerank import RerankResult, heuristic_rerank
+from repro.kernels.pq_adc.ops import pq_adc, pq_adc_topk
+
+
+@functools.partial(jax.jit, static_argnames=("top_n", "use_kernel"))
+def _scan_topn(cand_codes, lut, n_valid, top_n: int, use_kernel: bool):
+    """Bucketed ADC scan + top-n with padded-slot masking."""
+    d = pq_adc(cand_codes, lut, use_kernel=use_kernel)
+    d = jnp.where(jnp.arange(d.shape[0]) < n_valid, d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, top_n)
+    return -neg, idx
+
+
+@dataclasses.dataclass
+class QueryStats:
+    ios: int
+    pages_requested: int
+    buffer_hits: int
+    ssd_bytes: int
+    h2d_bytes: int               # vector-IDs sent CPU -> accelerator
+    candidates_scanned: int      # PQ distance calculations
+    rerank_batches: int
+    rerank_scored: int
+    early_stopped: bool
+    t_graph: float = 0.0
+    t_scan: float = 0.0
+    t_rerank: float = 0.0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    ids: np.ndarray
+    dists: np.ndarray
+    stats: QueryStats
+
+
+@dataclasses.dataclass
+class FusionANNSIndex:
+    cfg: ANNSConfig
+    codebook: pq.PQCodebook          # HBM tier
+    codes: jax.Array                 # (N, M) uint8, HBM tier
+    posting: clustering.PostingLists  # DRAM tier: IDs only
+    graph: ng.NavGraph               # DRAM tier
+    ssd: SSDSim                      # SSD tier: raw vectors
+    use_kernel: bool = False         # Pallas interpret is slow on CPU hosts
+    # beyond-paper: OPQ rotation (core/opq.py); applied to queries before
+    # the LUT build only — clustering/graph/re-rank stay in raw space.
+    rotation: Optional[np.ndarray] = None
+
+    def _lut_query(self, q: np.ndarray) -> np.ndarray:
+        return q @ self.rotation if self.rotation is not None else q
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(data: np.ndarray, cfg: ANNSConfig, seed: int = 0,
+              *, intra_merge: bool = True, use_buffer: bool = True,
+              optimized_layout: bool = True,
+              use_opq: bool = False) -> "FusionANNSIndex":
+        n, d = data.shape
+        rng = np.random.default_rng(seed)
+        key = jax.random.key(seed)
+        # 1. posting lists (hierarchical balanced clustering + Eq.2 replicas)
+        n_clusters = max(4, int(n * cfg.n_posting_fraction))
+        posting = clustering.build_posting_lists(
+            rng, data.astype(np.float32), n_clusters,
+            eps=cfg.replication_eps, max_replicas=cfg.max_replicas)
+        # 2. navigation graph over centroids (DRAM)
+        graph = ng.build_navgraph(posting.centroids, degree=cfg.graph_degree)
+        # 3. PQ codes pinned in HBM (optionally OPQ-rotated — beyond-paper)
+        rotation = None
+        if use_opq:
+            from repro.core.opq import train_opq
+            ocb, _ = train_opq(key, data, cfg.pq_m, cfg.pq_nbits)
+            cb, rotation = ocb.cb, ocb.rotation
+            codes = pq.encode(cb, jnp.asarray(
+                data.astype(np.float32) @ rotation))
+        else:
+            cb = pq.train_codebooks(key, jnp.asarray(data, jnp.float32),
+                                    cfg.pq_m, cfg.pq_nbits)
+            codes = pq.encode(cb, jnp.asarray(data, jnp.float32))
+        # 4. raw vectors on SSD, bucketed by primary centroid (§4.3)
+        layout = StorageLayout.build(
+            posting.primary, posting.n_clusters,
+            vec_bytes=data.dtype.itemsize * d, page_bytes=cfg.page_bytes,
+            optimized=optimized_layout)
+        ssd = SSDSim(data, layout, buffer_pages=cfg.dram_buffer_pages,
+                     intra_merge=intra_merge, use_buffer=use_buffer)
+        # NOTE: intermediate posting-list *contents* are discarded here —
+        # only the ID metadata survives in DRAM (paper §4.1).
+        return FusionANNSIndex(cfg=cfg, codebook=cb, codes=codes,
+                               posting=posting, graph=graph, ssd=ssd,
+                               rotation=rotation)
+
+    # --------------------------------------------------------------- updates
+    # SPFresh-style incremental maintenance (the paper's cited sibling,
+    # SOSP'23): appends go to fresh SSD pages bucketed by their primary
+    # centroid; deletes are tombstoned and filtered at candidate collection.
+    tombstones: Optional[np.ndarray] = None
+
+    def insert(self, vectors: np.ndarray) -> np.ndarray:
+        """Append vectors to all three tiers.  Returns their new ids."""
+        from repro.core.clustering import assign_with_replication
+        n_old = len(self.ssd.vectors)
+        new_pl = assign_with_replication(
+            vectors.astype(np.float32), self.posting.centroids,
+            eps=self.cfg.replication_eps, max_replicas=self.cfg.max_replicas)
+        new_ids = np.arange(n_old, n_old + len(vectors), dtype=np.int64)
+        # DRAM tier: extend the ID metadata
+        for c in range(self.posting.n_clusters):
+            mem = new_pl.members[c]
+            if len(mem):
+                self.posting.members[c] = np.concatenate(
+                    [self.posting.members[c],
+                     (mem + n_old).astype(np.int32)])
+        self.posting.primary = np.concatenate(
+            [self.posting.primary, new_pl.primary])
+        # HBM tier: encode + append PQ codes (rotated if OPQ)
+        enc_in = vectors.astype(np.float32)
+        if self.rotation is not None:
+            enc_in = enc_in @ self.rotation
+        new_codes = pq.encode(self.codebook, jnp.asarray(enc_in))
+        self.codes = jnp.concatenate([self.codes, new_codes], axis=0)
+        # SSD tier: fresh pages, bucketed by primary centroid
+        lay = self.ssd.layout
+        order = np.argsort(new_pl.primary, kind="stable")
+        new_pages = lay.n_pages + (np.arange(len(vectors))
+                                   // lay.per_page)
+        page_of = np.empty(len(vectors), np.int64)
+        page_of[order] = new_pages
+        lay.page_of = np.concatenate([lay.page_of, page_of])
+        lay.n_pages = int(lay.page_of.max()) + 1
+        self.ssd.vectors = np.concatenate(
+            [self.ssd.vectors, vectors.astype(self.ssd.vectors.dtype)])
+        if self.tombstones is not None:
+            self.tombstones = np.concatenate(
+                [self.tombstones, np.zeros(len(vectors), bool)])
+        return new_ids
+
+    def delete(self, ids: np.ndarray) -> None:
+        """Tombstone ids (compaction is an offline rebuild, as in SPFresh)."""
+        if self.tombstones is None:
+            self.tombstones = np.zeros(len(self.ssd.vectors), bool)
+        self.tombstones[np.asarray(ids, np.int64)] = True
+
+    # ------------------------------------------------------------------ query
+    def candidate_ids(self, query: np.ndarray, top_m: int,
+                      dedup: bool = True) -> np.ndarray:
+        """Stages ②③⑤: graph traversal -> ID collection -> dedup."""
+        cids = ng.search(self.graph, query.astype(np.float32), top_m)
+        ids = np.concatenate([self.posting.members[c] for c in cids]) \
+            if len(cids) else np.zeros((0,), np.int32)
+        if dedup:
+            ids = np.unique(ids)
+        if self.tombstones is not None and len(ids):
+            ids = ids[~self.tombstones[ids]]
+        return ids
+
+    def query(self, query: np.ndarray, *, k: Optional[int] = None,
+              top_m: Optional[int] = None, top_n: Optional[int] = None,
+              disable_early_stop: bool = False) -> QueryResult:
+        cfg = self.cfg
+        k = k or cfg.top_k
+        top_m = top_m or cfg.top_m
+        top_n = top_n or cfg.top_n
+
+        t0 = time.perf_counter()
+        ids = self.candidate_ids(query, top_m)        # ②③⑤ (host)
+        t1 = time.perf_counter()
+
+        # ①④⑥⑦: LUT + ADC scan + top-n on the accelerator.  Only the
+        # vector-IDs cross the host->device boundary (4 B each).  IDs are
+        # padded to a power-of-two bucket so the jit cache stays warm across
+        # queries with different candidate counts.
+        lut = pq.adc_lut(self.codebook, jnp.asarray(self._lut_query(query)))
+        n_ids = len(ids)
+        bucket = max(64, 1 << int(np.ceil(np.log2(max(n_ids, 1)))))
+        padded = np.full(bucket, -1, np.int64)
+        padded[:n_ids] = ids
+        cand_codes = jnp.take(self.codes, jnp.asarray(np.maximum(padded, 0)),
+                              axis=0)
+        n_eff = min(top_n, n_ids)
+        dists, local = _scan_topn(cand_codes, lut, n_ids, min(top_n, bucket),
+                                  self.use_kernel)
+        local = np.asarray(local)[:n_eff]
+        order_ids = ids[local[local < n_ids]]
+        t2 = time.perf_counter()
+
+        # ⑧: heuristic re-ranking against the SSD tier (host).
+        rr = heuristic_rerank(
+            query, order_ids, self.ssd, k,
+            batch_size=cfg.rerank_batch, eps=cfg.rerank_eps,
+            beta=cfg.rerank_beta, disable_early_stop=disable_early_stop)
+        t3 = time.perf_counter()
+
+        stats = QueryStats(
+            ios=rr.io.ios, pages_requested=rr.io.pages_requested,
+            buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
+            h2d_bytes=4 * len(ids), candidates_scanned=len(ids),
+            rerank_batches=rr.batches_run, rerank_scored=rr.candidates_scored,
+            early_stopped=rr.early_stopped,
+            t_graph=t1 - t0, t_scan=t2 - t1, t_rerank=t3 - t2)
+        return QueryResult(ids=rr.ids, dists=rr.dists, stats=stats)
+
+    def batch_query(self, queries: np.ndarray, **kw) -> List[QueryResult]:
+        return [self.query(q, **kw) for q in queries]
+
+    def query_batch_fused(self, queries: np.ndarray, *,
+                          k: Optional[int] = None,
+                          top_m: Optional[int] = None,
+                          top_n: Optional[int] = None) -> List[QueryResult]:
+        """Beyond-paper batched mode (the TPU adaptation's natural shape):
+        one ADC scan over the UNION of the batch's candidate ids with all B
+        LUTs resident (kernels.pq_adc_batch), per-query masking + top-n.
+
+        Inter-query dedup: concurrent queries share posting lists, so the
+        union is much smaller than B x |cand| — the same redundancy insight
+        the paper exploits on the SSD tier (§4.3), applied to the HBM scan.
+        Re-ranking stays per-query on the host (unchanged semantics)."""
+        cfg = self.cfg
+        k = k or cfg.top_k
+        top_m = top_m or cfg.top_m
+        top_n = top_n or cfg.top_n
+        B = len(queries)
+
+        t0 = time.perf_counter()
+        per_q = [self.candidate_ids(q, top_m) for q in queries]
+        union = np.unique(np.concatenate(per_q)) if per_q else \
+            np.zeros((0,), np.int64)
+        t1 = time.perf_counter()
+
+        u = len(union)
+        bucket = max(64, 1 << int(np.ceil(np.log2(max(u, 1)))))
+        padded = np.zeros(bucket, np.int64)
+        padded[:u] = union
+        cand_codes = jnp.take(self.codes, jnp.asarray(padded), axis=0)
+        luts = pq.adc_lut_batch(self.codebook, jnp.asarray(
+            np.stack([self._lut_query(q) for q in queries])))
+        from repro.kernels.pq_adc.ops import pq_adc_batch
+        dists = np.asarray(pq_adc_batch(cand_codes, luts,
+                                        use_kernel=self.use_kernel))  # (B,bk)
+        # per-query mask: only the query's own candidates compete
+        pos_of = {int(v): i for i, v in enumerate(union)}
+        results: List[QueryResult] = []
+        t2 = time.perf_counter()
+        for qi, q in enumerate(queries):
+            ids_q = per_q[qi]
+            cols = np.fromiter((pos_of[int(v)] for v in ids_q), np.int64,
+                               len(ids_q))
+            d_q = dists[qi, cols]
+            order_ids = ids_q[np.argsort(d_q)[:min(top_n, len(ids_q))]]
+            rr = heuristic_rerank(q, order_ids, self.ssd, k,
+                                  batch_size=cfg.rerank_batch,
+                                  eps=cfg.rerank_eps, beta=cfg.rerank_beta)
+            stats = QueryStats(
+                ios=rr.io.ios, pages_requested=rr.io.pages_requested,
+                buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
+                h2d_bytes=4 * u // B,            # amortised union transfer
+                candidates_scanned=u,            # union, ONCE per batch
+                rerank_batches=rr.batches_run,
+                rerank_scored=rr.candidates_scored,
+                early_stopped=rr.early_stopped,
+                t_graph=(t1 - t0) / B, t_scan=(t2 - t1) / B)
+            results.append(QueryResult(ids=rr.ids, dists=rr.dists,
+                                       stats=stats))
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers
+# ---------------------------------------------------------------------------
+
+def ground_truth(data: np.ndarray, queries: np.ndarray, k: int,
+                 chunk: int = 4096) -> np.ndarray:
+    """Exact top-k ids per query (brute force, chunked)."""
+    q = queries.astype(np.float32)
+    out = np.empty((len(q), k), np.int64)
+    d2_best = None
+    for qi in range(0, len(q), 128):
+        qb = q[qi:qi + 128]
+        d2 = np.empty((len(qb), len(data)), np.float32)
+        for s in range(0, len(data), chunk):
+            blk = data[s:s + chunk].astype(np.float32)
+            d2[:, s:s + chunk] = (np.sum(qb ** 2, -1)[:, None]
+                                  - 2.0 * qb @ blk.T
+                                  + np.sum(blk ** 2, -1)[None])
+        idx = np.argpartition(d2, k - 1, axis=1)[:, :k]
+        dd = np.take_along_axis(d2, idx, axis=1)
+        out[qi:qi + len(qb)] = np.take_along_axis(
+            idx, np.argsort(dd, axis=1), axis=1)
+    return out
+
+
+def recall_at_k(result_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    """Recall@k — |result ∩ gt| / k, averaged over queries."""
+    hits = 0
+    for r, g in zip(np.atleast_2d(result_ids), np.atleast_2d(gt_ids)):
+        hits += len(set(r[:k].tolist()) & set(g[:k].tolist()))
+    return hits / (len(np.atleast_2d(gt_ids)) * k)

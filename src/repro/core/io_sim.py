@@ -1,0 +1,195 @@
+"""SSD tier simulation with exact 4 KB-page semantics (paper §4.3).
+
+Implements the optimised storage layout (per-centroid buckets, max-min
+remainder bin-packing so partial pages are shared), the vec->page mapping
+table, Direct-I/O page reads, and the two dedup mechanisms:
+
+  * intra-mini-batch: requests hitting the same page are merged,
+  * inter-mini-batch: an (per-query) DRAM page buffer absorbs repeats.
+
+Every mechanism can be disabled independently for the Fig. 12 ablation.
+I/O counts and byte volumes are exact; latency is modelled by the analytic
+device model in ``core.baselines`` (no NVMe in this container — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IOStats:
+    ios: int = 0                 # page reads issued to the "SSD"
+    pages_requested: int = 0     # before any dedup
+    buffer_hits: int = 0
+    bytes_read: int = 0
+
+    def merge(self, other: "IOStats") -> "IOStats":
+        return IOStats(self.ios + other.ios,
+                       self.pages_requested + other.pages_requested,
+                       self.buffer_hits + other.buffer_hits,
+                       self.bytes_read + other.bytes_read)
+
+
+class PageBuffer:
+    """LRU DRAM page buffer (inter-mini-batch dedup)."""
+
+    def __init__(self, capacity_pages: int):
+        self.capacity = capacity_pages
+        self._lru: "OrderedDict[int, bool]" = OrderedDict()
+
+    def hit(self, page: int) -> bool:
+        if page in self._lru:
+            self._lru.move_to_end(page)
+            return True
+        return False
+
+    def insert(self, page: int) -> None:
+        self._lru[page] = True
+        self._lru.move_to_end(page)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+
+    def clear(self) -> None:
+        self._lru.clear()
+
+
+def pack_buckets_maxmin(bucket_sizes: Sequence[int], per_page: int
+                        ) -> Tuple[List[List[int]], int]:
+    """Max-min packing of bucket *remainders* into shared pages (§4.3).
+
+    Full pages are dedicated; remainders are sorted descending and each is
+    placed with the largest remainder(s) that still fit (classic max-min /
+    first-fit-decreasing).  Returns (groups of bucket-ids sharing a page,
+    total pages used)."""
+    full_pages = sum(s // per_page for s in bucket_sizes)
+    rema = [(s % per_page, i) for i, s in enumerate(bucket_sizes)
+            if s % per_page]
+    rema.sort(reverse=True)
+    groups: List[List[int]] = []
+    loads: List[int] = []
+    for size, bid in rema:
+        placed = False
+        for gi in range(len(groups)):
+            if loads[gi] + size <= per_page:
+                groups[gi].append(bid)
+                loads[gi] += size
+                placed = True
+                break
+        if not placed:
+            groups.append([bid])
+            loads.append(size)
+    return groups, full_pages + len(groups)
+
+
+@dataclasses.dataclass
+class StorageLayout:
+    """vec_id -> page mapping under the optimised bucket layout."""
+
+    page_of: np.ndarray            # (N,) int64 page id per vector
+    n_pages: int
+    per_page: int
+    page_bytes: int
+
+    @staticmethod
+    def build(primary_cluster: np.ndarray, n_clusters: int,
+              vec_bytes: int, page_bytes: int = 4096,
+              optimized: bool = True) -> "StorageLayout":
+        """``primary_cluster[v]`` = the single bucket that stores v (no
+        duplicates across buckets — paper §4.3).  ``optimized=False`` lays
+        vectors out in insertion order (the straw-man layout)."""
+        n = len(primary_cluster)
+        per_page = max(1, page_bytes // vec_bytes)
+        page_of = np.empty(n, np.int64)
+        if not optimized:
+            page_of[:] = np.arange(n) // per_page
+            return StorageLayout(page_of, int(page_of.max()) + 1 if n else 0,
+                                 per_page, page_bytes)
+        # group vectors by bucket; remainders share pages via max-min
+        order = np.argsort(primary_cluster, kind="stable")
+        sizes = np.bincount(primary_cluster, minlength=n_clusters)
+        groups, n_pages = pack_buckets_maxmin(sizes.tolist(), per_page)
+        # assign pages: first the full pages bucket-by-bucket, then groups
+        page = 0
+        starts = np.zeros(n_clusters + 1, np.int64)
+        np.cumsum(sizes, out=starts[1:])
+        slot_page = np.empty(n, np.int64)   # page of the i-th sorted vector
+        rem_start: Dict[int, int] = {}
+        for c in range(n_clusters):
+            full = sizes[c] // per_page
+            for f in range(full):
+                s = starts[c] + f * per_page
+                slot_page[s:s + per_page] = page
+                page += 1
+            rem_start[c] = starts[c] + full * per_page
+        for grp in groups:
+            for bid in grp:
+                s = rem_start[bid]
+                e = starts[bid] + sizes[bid]
+                slot_page[s:e] = page
+            page += 1
+        page_of[order] = slot_page
+        return StorageLayout(page_of, page, per_page, page_bytes)
+
+
+class SSDSim:
+    """Raw-vector store with page-granular reads + dedup mechanisms."""
+
+    def __init__(self, vectors: np.ndarray, layout: StorageLayout,
+                 buffer_pages: int = 1024, *,
+                 intra_merge: bool = True, use_buffer: bool = True):
+        self.vectors = vectors
+        self.layout = layout
+        self.intra_merge = intra_merge
+        self.use_buffer = use_buffer
+        self.buffer = PageBuffer(buffer_pages)
+
+    def begin_query(self) -> IOStats:
+        """Per-query buffer scope (the paper's DRAM buffer is per-query
+        working memory)."""
+        self.buffer.clear()
+        return IOStats()
+
+    def fetch(self, vec_ids: np.ndarray, stats: IOStats) -> np.ndarray:
+        """One re-ranking mini-batch: returns the raw vectors, accounting
+        page I/O with intra-batch merge + buffer dedup."""
+        pages = self.layout.page_of[vec_ids]
+        stats.pages_requested += len(pages)
+        wanted = pages if not self.intra_merge else np.unique(pages)
+        for p in wanted:
+            if self.use_buffer and self.buffer.hit(int(p)):
+                stats.buffer_hits += 1
+                continue
+            stats.ios += 1
+            stats.bytes_read += self.layout.page_bytes
+            if self.use_buffer:
+                self.buffer.insert(int(p))
+        return self.vectors[vec_ids]
+
+
+@dataclasses.dataclass
+class PostingListStore:
+    """SPANN-style layout: whole posting lists stored contiguously on SSD;
+    a query reads each selected list in full (multi-page I/Os)."""
+
+    list_pages: np.ndarray        # pages per posting list
+    page_bytes: int = 4096
+
+    @staticmethod
+    def build(member_counts: Sequence[int], entry_bytes: int,
+              page_bytes: int = 4096) -> "PostingListStore":
+        pages = np.array([max(1, int(np.ceil(c * entry_bytes / page_bytes)))
+                          for c in member_counts], np.int64)
+        return PostingListStore(pages, page_bytes)
+
+    def read_lists(self, list_ids: np.ndarray, stats: IOStats) -> None:
+        # one I/O per list (SPANN issues large sequential reads), but the
+        # byte volume spans all its pages
+        pages = self.list_pages[list_ids]
+        stats.ios += len(list_ids)
+        stats.pages_requested += int(pages.sum())
+        stats.bytes_read += int(pages.sum()) * self.page_bytes

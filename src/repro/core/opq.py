@@ -1,0 +1,67 @@
+"""OPQ: optimized product quantization (beyond-paper PQ-quality lever).
+
+Learns an orthonormal rotation R so that sub-space energy is balanced
+before PQ (Ge et al., OPQ, CVPR'13 — standard companion to IVF-PQ systems;
+FAISS applies it by default at billion scale).  Alternating minimisation:
+  E-step: PQ-encode R·x;  M-step: R <- Procrustes(X, decoded codes).
+Drop-in: wrap the codebook; queries rotate once before the LUT build."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq
+
+
+@dataclasses.dataclass(frozen=True)
+class OPQCodebook:
+    rotation: np.ndarray          # (D, D) orthonormal
+    cb: pq.PQCodebook
+
+    @property
+    def m(self) -> int:
+        return self.cb.m
+
+
+def train_opq(key: jax.Array, data: np.ndarray, m: int, nbits: int = 8,
+              iters: int = 4, kmeans_iters: int = 8
+              ) -> Tuple[OPQCodebook, float]:
+    """Returns (codebook, final mean squared reconstruction error)."""
+    x = np.asarray(data, np.float32)
+    n, d = x.shape
+    r = np.eye(d, dtype=np.float32)
+    cb = None
+    err = np.inf
+    for _ in range(iters):
+        xr = x @ r
+        cb = pq.train_codebooks(key, jnp.asarray(xr), m, nbits,
+                                iters=kmeans_iters)
+        recon = np.asarray(pq.decode(cb, pq.encode(cb, jnp.asarray(xr))))
+        err = float(np.mean(np.sum((xr - recon) ** 2, -1)))
+        # Procrustes: R = argmin ||XR - recon||  =>  R = U V^T of X^T recon
+        u, _, vt = np.linalg.svd(x.T @ recon, full_matrices=False)
+        r = (u @ vt).astype(np.float32)
+    return OPQCodebook(rotation=r, cb=cb), err
+
+
+def encode(ocb: OPQCodebook, data: np.ndarray) -> jax.Array:
+    return pq.encode(ocb.cb, jnp.asarray(
+        np.asarray(data, np.float32) @ ocb.rotation))
+
+
+def adc_lut(ocb: OPQCodebook, query: np.ndarray) -> jax.Array:
+    """Rotation preserves L2, so rotated-space ADC distances estimate the
+    original-space distances directly."""
+    return pq.adc_lut(ocb.cb, jnp.asarray(
+        np.asarray(query, np.float32) @ ocb.rotation))
+
+
+def reconstruction_error(ocb: OPQCodebook, data: np.ndarray) -> float:
+    xr = np.asarray(data, np.float32) @ ocb.rotation
+    recon = np.asarray(pq.decode(ocb.cb, encode(ocb, data)))
+    return float(np.mean(np.sum((xr - recon) ** 2, -1)))

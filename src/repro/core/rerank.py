@@ -1,0 +1,122 @@
+"""Heuristic re-ranking — paper §4.2, Algorithm 1.
+
+Host version (numpy): the production placement — the CPU re-ranks using raw
+vectors fetched from the SSD tier (``core.io_sim``), max-heap top-k, change
+rate Δ = |S_n − S_n∩S_{n−1}|/k, early termination after β stable batches.
+
+Device version (``lax.while_loop``): same control flow with a fixed-size
+top-k buffer, for TPU-resident re-ranking when raw vectors live in HBM
+(beyond-paper mode used by the distributed engine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.io_sim import IOStats, SSDSim
+
+
+@dataclasses.dataclass
+class RerankResult:
+    ids: np.ndarray                 # (k,) final neighbour ids (ascending dist)
+    dists: np.ndarray               # (k,)
+    batches_run: int
+    candidates_scored: int
+    io: IOStats
+    early_stopped: bool
+
+
+def heuristic_rerank(query: np.ndarray, candidate_ids: np.ndarray,
+                     ssd: SSDSim, k: int, *, batch_size: int = 32,
+                     eps: float = 0.05, beta: int = 2,
+                     disable_early_stop: bool = False) -> RerankResult:
+    """Algorithm 1.  ``candidate_ids`` must be sorted by ascending PQ
+    distance (the GPU's output order — step ⑦)."""
+    q = query.astype(np.float32)
+    stats = ssd.begin_query()
+    heap: list = []                 # max-heap via negated dists
+    stability = 0
+    batches = 0
+    scored = 0
+    early = False
+    n = len(candidate_ids)
+
+    def heap_ids() -> set:
+        return {vid for _, vid in heap}
+
+    for start in range(0, n, batch_size):
+        prev = heap_ids()
+        batch = candidate_ids[start:start + batch_size]
+        vecs = ssd.fetch(batch, stats)                     # I/O + dedup
+        d = np.sum((vecs.astype(np.float32) - q[None]) ** 2, axis=1)
+        for dist, vid in zip(d, batch):
+            scored += 1
+            if len(heap) < k:
+                heapq.heappush(heap, (-dist, int(vid)))
+            elif dist < -heap[0][0]:
+                heapq.heapreplace(heap, (-dist, int(vid)))
+        batches += 1
+        cur = heap_ids()
+        delta = len(cur - prev) / max(k, 1)                # Eq. 3
+        if not disable_early_stop:
+            if delta < eps:
+                stability += 1
+                if stability >= beta:
+                    early = True
+                    break
+            else:
+                stability = 0
+
+    order = sorted(((-nd, vid) for nd, vid in heap))
+    ids = np.array([vid for _, vid in order], np.int32)
+    dd = np.array([d for d, _ in order], np.float32)
+    return RerankResult(ids=ids, dists=dd, batches_run=batches,
+                        candidates_scored=scored, io=stats,
+                        early_stopped=early)
+
+
+def heuristic_rerank_jax(query: jax.Array, cand_vectors: jax.Array,
+                         cand_ids: jax.Array, k: int, *,
+                         batch_size: int = 32, eps: float = 0.05,
+                         beta: int = 2):
+    """Device-side Algorithm 1 over HBM-resident candidates.
+
+    cand_vectors (n, D) sorted by PQ distance; returns (ids (k,), dists (k,),
+    batches_run).  Distances of unprocessed batches never affect the heap —
+    the while_loop stops exactly like the host version."""
+    n, d = cand_vectors.shape
+    n_batches = n // batch_size
+    q = query.astype(jnp.float32)
+
+    top_d0 = jnp.full((k,), jnp.inf, jnp.float32)
+    top_i0 = jnp.full((k,), -1, jnp.int32)
+
+    def body(state):
+        b, top_d, top_i, stab, done = state
+        start = b * batch_size
+        vecs = jax.lax.dynamic_slice_in_dim(cand_vectors, start, batch_size)
+        ids = jax.lax.dynamic_slice_in_dim(cand_ids, start, batch_size)
+        dist = jnp.sum((vecs.astype(jnp.float32) - q[None]) ** 2, axis=1)
+        all_d = jnp.concatenate([top_d, dist])
+        all_i = jnp.concatenate([top_i, ids.astype(jnp.int32)])
+        neg, pos = jax.lax.top_k(-all_d, k)
+        new_d, new_i = -neg, all_i[pos]
+        # Δ = fraction of heap slots replaced this batch (Eq. 3)
+        changed = jnp.sum(~jnp.isin(new_i, top_i)) / k
+        stab = jnp.where(changed < eps, stab + 1, 0)
+        done = stab >= beta
+        return b + 1, new_d, new_i, stab, done
+
+    def cond(state):
+        b, _, _, _, done = state
+        return jnp.logical_and(b < n_batches, ~done)
+
+    b, top_d, top_i, stab, done = jax.lax.while_loop(
+        cond, body, (0, top_d0, top_i0, 0, False))
+    return top_i, top_d, b

@@ -1,0 +1,80 @@
+"""Graph utilities: synthetic graphs, CSR, and the uniform neighbor sampler
+required by the ``minibatch_lg`` cell (GraphSAGE fanout sampling)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def random_graph(rng: np.random.Generator, n_nodes: int, n_edges: int,
+                 d_feat: int, n_classes: int) -> Dict[str, np.ndarray]:
+    """Preferential-attachment-flavoured random graph (power-law-ish degree)."""
+    # Bias destinations toward low ids -> heavy-tailed in-degree.
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = (n_nodes * rng.power(3.0, n_edges)).astype(np.int64) % n_nodes
+    edges = np.stack([src, dst], axis=1).astype(np.int32)
+    return {
+        "edges": edges,
+        "features": rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+        "labels": rng.integers(0, n_classes, n_nodes).astype(np.int32),
+    }
+
+
+def build_csr(edges: np.ndarray, n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
+    """edge list (E,2) src->dst  =>  CSR over *incoming* edges per dst."""
+    dst = edges[:, 1]
+    order = np.argsort(dst, kind="stable")
+    sorted_src = edges[order, 0].astype(np.int32)
+    counts = np.bincount(dst, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, sorted_src
+
+
+def neighbor_sample(rng: np.random.Generator, indptr: np.ndarray,
+                    indices: np.ndarray, nodes: np.ndarray,
+                    fanout: int) -> np.ndarray:
+    """Uniform with-replacement fanout sampling: (B,) -> (B, fanout).
+
+    Isolated nodes sample themselves (self-loop fallback)."""
+    starts = indptr[nodes]
+    degs = indptr[nodes + 1] - starts
+    r = rng.integers(0, np.maximum(degs, 1)[:, None],
+                     (len(nodes), fanout))
+    picked = indices[np.minimum(starts[:, None] + r,
+                                len(indices) - 1 if len(indices) else 0)] \
+        if len(indices) else np.zeros((len(nodes), fanout), np.int32)
+    picked = np.where(degs[:, None] > 0, picked, nodes[:, None])
+    return picked.astype(np.int32)
+
+
+def sample_two_hop(rng: np.random.Generator, indptr, indices, batch_nodes,
+                   fanouts: Tuple[int, int], features: np.ndarray):
+    """Returns the dense minibatch tensors for sage_forward_minibatch."""
+    f0, f1 = fanouts
+    hop1 = neighbor_sample(rng, indptr, indices, batch_nodes, f0)   # (B,f0)
+    hop2 = neighbor_sample(rng, indptr, indices, hop1.reshape(-1), f1)
+    hop2 = hop2.reshape(len(batch_nodes), f0, f1)
+    return (features[batch_nodes],
+            features[hop1],
+            features[hop2])
+
+
+def block_diagonal_batch(rng: np.random.Generator, n_graphs: int,
+                         nodes_per: int, edges_per: int, d_feat: int,
+                         n_classes: int) -> Dict[str, np.ndarray]:
+    """Batched small molecules flattened into one block-diagonal graph."""
+    offs = np.arange(n_graphs)[:, None] * nodes_per
+    src = rng.integers(0, nodes_per, (n_graphs, edges_per)) + offs
+    dst = rng.integers(0, nodes_per, (n_graphs, edges_per)) + offs
+    edges = np.stack([src.reshape(-1), dst.reshape(-1)], 1).astype(np.int32)
+    n_nodes = n_graphs * nodes_per
+    return {
+        "edges": edges,
+        "features": rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+        "graph_ids": np.repeat(np.arange(n_graphs), nodes_per).astype(
+            np.int32),
+        "labels": rng.integers(0, n_classes, n_graphs).astype(np.int32),
+    }

@@ -1,0 +1,44 @@
+"""Host-side edge partitioning for the dst-partitioned GNN path
+(§Perf hillclimb B): range-partition edges by destination node, pad every
+shard to equal length with zero-weight edges."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def pad_nodes(features: np.ndarray, labels: np.ndarray, mask: np.ndarray,
+              n_shards: int):
+    """Pad node arrays so n_nodes % n_shards == 0 (pad rows masked out)."""
+    n = len(features)
+    pad = (-n) % n_shards
+    if pad:
+        features = np.pad(features, ((0, pad), (0, 0)))
+        labels = np.pad(labels, (0, pad))
+        mask = np.pad(mask, (0, pad))
+    return features, labels, mask
+
+
+def partition_edges_by_dst(edges: np.ndarray, n_nodes: int, n_shards: int
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (edges (n_shards*E_max, 2) grouped by owning shard, weights).
+
+    Every shard gets the same edge count (padded with w=0 self-edges on the
+    shard's first node, which contribute nothing to the weighted mean)."""
+    assert n_nodes % n_shards == 0
+    n_loc = n_nodes // n_shards
+    dst = edges[:, 1]
+    shard = dst // n_loc
+    groups = [edges[shard == i] for i in range(n_shards)]
+    e_max = max((len(g) for g in groups), default=1) or 1
+    out_e = np.zeros((n_shards * e_max, 2), edges.dtype)
+    out_w = np.zeros((n_shards * e_max,), np.float32)
+    for i, g in enumerate(groups):
+        s = i * e_max
+        out_e[s:s + len(g)] = g
+        out_w[s:s + len(g)] = 1.0
+        # pads: dst inside shard i's range (node i*n_loc), weight 0
+        out_e[s + len(g):s + e_max] = [0, i * n_loc]
+    return out_e, out_w

@@ -1,0 +1,2 @@
+from repro.kernels.flash_attn.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attn.ref import flash_attn_ref  # noqa: F401

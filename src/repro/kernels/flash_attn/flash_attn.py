@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention forward (the §Roofline answer for the
+memory-bound LM train/prefill cells: score blocks live in VMEM, never HBM).
+
+Canonical revisited-grid structure: grid = (B, Hk, G, S/bq, T/bk) with the
+innermost dimension sweeping KV blocks while the output block index ignores
+it — running (m, l, acc) persist in VMEM scratch across those revisits and
+the normalised output is written on the last KV step.  Causal blocks wholly
+above the diagonal are skipped via @pl.when.
+
+VMEM working set per grid step: q(bq,dh) + k/v(bk,dh) + scores(bq,bk) +
+acc(bq,dh) floats — MXU-aligned for bq,bk multiples of 128 and dh 128.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  n_kv: int):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _step():
+        q = q_ref[0, 0, 0].astype(jnp.float32) * scale     # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * bq + jnp.arange(bq)
+            k_pos = ki * bk + jnp.arange(bk)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, _NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    if causal:
+        # skip KV blocks entirely above the diagonal
+        pl.when(ki * bk <= qi * bq + bq - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale=None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q (B,S,H,dh), k/v (B,T,Hk,dh) -> (B,S,H,dh).  GQA via the G grid dim
+    (no KV replication in memory — each (kh, g) step reads the same KV
+    block)."""
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    n_kv = T // bk
+    # layout: q (B, Hk, G, S, dh); kv (B, Hk, T, dh)
+    q5 = q.reshape(B, S, Hk, G, dh).transpose(0, 2, 3, 1, 4)
+    k4 = k.transpose(0, 2, 1, 3)
+    v4 = v.transpose(0, 2, 1, 3)
+    grid = (B, Hk, G, S // bq, n_kv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bq, dh),
+                         lambda b, kh, g, i, j: (b, kh, g, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, kh, g, i, j: (b, kh, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, kh, g, i, j: (b, kh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bq, dh),
+                               lambda b, kh, g, i, j: (b, kh, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q5, k4, v4)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dh)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the flash-attention forward kernel.
+
+On TPU this is the production forward for the memory-bound train/prefill
+cells (scores never leave VMEM — see EXPERIMENTS.md §Roofline); on CPU the
+interpret path validates correctness and `models.layers.blockwise_attention`
+remains the lowering used by the dry-run."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_fwd
+from repro.kernels.flash_attn.ref import flash_attn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "use_kernel", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, use_kernel: bool = True,
+                    interpret: bool = True):
+    if not use_kernel:
+        return flash_attn_ref(q, k, v, causal=causal)
+    bq = min(block_q, q.shape[1])
+    bk = min(block_k, k.shape[1])
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=bq,
+                               block_k=bk, interpret=interpret)

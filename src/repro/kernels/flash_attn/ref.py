@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention forward kernel (GQA-aware)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = True, scale=None) -> jnp.ndarray:
+    """q (B,S,H,dh), k/v (B,T,Hk,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, S, Hk, G, dh) * scale
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, dh).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.l2dist.ops import l2_distances  # noqa: F401
+from repro.kernels.l2dist.ref import l2dist_ref  # noqa: F401

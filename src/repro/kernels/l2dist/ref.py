@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the exact-L2 re-rank kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2dist_ref(queries: jnp.ndarray, vectors: jnp.ndarray) -> jnp.ndarray:
+    """queries (B, D), vectors (N, D) -> squared L2 (B, N) f32."""
+    q = queries.astype(jnp.float32)
+    v = vectors.astype(jnp.float32)
+    return (jnp.sum(q * q, -1)[:, None]
+            - 2.0 * q @ v.T
+            + jnp.sum(v * v, -1)[None, :])

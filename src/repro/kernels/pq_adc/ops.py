@@ -1,0 +1,71 @@
+"""jit'd wrappers for the ADC kernels (padding + merge glue)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_adc.pq_adc import (pq_adc_scan, pq_adc_scan_batch,
+                                         pq_adc_scan_topk)
+from repro.kernels.pq_adc.ref import pq_adc_batch_ref, pq_adc_ref
+
+
+def _pad_codes(codes: jax.Array, block_n: int):
+    n = codes.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((pad, codes.shape[1]), codes.dtype)], axis=0)
+    return codes, n, pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_kernel",
+                                             "interpret"))
+def pq_adc(codes: jax.Array, lut: jax.Array, *, block_n: int = 2048,
+           use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+    """distances (N,) f32.  use_kernel=False falls back to the jnp oracle
+    (identical results; used on CPU hot paths where interpret-mode Pallas
+    is slow)."""
+    if not use_kernel:
+        return pq_adc_ref(codes, lut)
+    padded, n, pad = _pad_codes(codes, min(block_n, max(codes.shape[0], 8)))
+    bn = min(block_n, padded.shape[0])
+    out = pq_adc_scan(padded, lut, block_n=bn, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_kernel",
+                                             "interpret"))
+def pq_adc_batch(codes: jax.Array, luts: jax.Array, *, block_n: int = 2048,
+                 use_kernel: bool = True, interpret: bool = True):
+    """Batched queries: (N, M) x (B, M, K) -> (B, N) distances."""
+    if not use_kernel:
+        return pq_adc_batch_ref(codes, luts)
+    padded, n, pad = _pad_codes(codes, min(block_n, max(codes.shape[0], 8)))
+    bn = min(block_n, padded.shape[0])
+    out = pq_adc_scan_batch(padded, luts, block_n=bn, interpret=interpret)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "block_n", "use_kernel",
+                                             "interpret"))
+def pq_adc_topk(codes: jax.Array, lut: jax.Array, topk: int, *,
+                block_n: int = 2048, use_kernel: bool = True,
+                interpret: bool = True):
+    """Fused scan + top-k: returns (dists (topk,), ids (topk,)) ascending."""
+    n = codes.shape[0]
+    if not use_kernel:
+        d = pq_adc_ref(codes, lut)
+        neg, ids = jax.lax.top_k(-d, min(topk, n))
+        return -neg, ids
+    padded, n, pad = _pad_codes(codes, min(block_n, max(n, 8)))
+    bn = min(block_n, padded.shape[0])
+    tk = min(topk, bn)
+    vals, ids = pq_adc_scan_topk(padded, lut, tk, block_n=bn,
+                                 interpret=interpret)
+    # mask padding ids, then global merge
+    vals = jnp.where(ids < n, vals, jnp.inf)
+    neg, pos = jax.lax.top_k(-vals, min(topk, vals.shape[0]))
+    return -neg, ids[pos]

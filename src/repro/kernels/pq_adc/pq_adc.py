@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: PQ ADC scan (paper step ⑥, TPU-native — DESIGN.md §2).
+
+The (M, K) distance LUT (≤ 128 KB for M ≤ 128, K = 256, f32) is pinned in
+VMEM for the whole grid; PQ codes stream HBM→VMEM in (block_n, M) uint8
+tiles.  Arithmetic intensity is ~2 FLOP/byte → the kernel is sized for
+bandwidth: block_n * M bytes per grid step, one f32 row out.
+
+Unlike the paper's CUDA kernel (one thread per dimension + coordinator
+accumulation + spinlock hash dedup), the TPU formulation is a vectorised
+flat-index gather over the VMEM-resident LUT with a sum over M — no atomics
+exist in Pallas and none are needed (dedup is a separate sort-based pass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(codes_ref, lut_ref, out_ref, *, m: int, k: int):
+    codes = codes_ref[...]                       # (block_n, M) uint8
+    lut_flat = lut_ref[...].reshape(m * k)       # (M*K,) f32 in VMEM
+    idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                     * k)[None, :]
+    vals = jnp.take(lut_flat, idx.reshape(-1), axis=0)
+    out_ref[...] = jnp.sum(vals.reshape(codes.shape), axis=-1)
+
+
+def pq_adc_scan(codes: jax.Array, lut: jax.Array, *, block_n: int = 2048,
+                interpret: bool = True) -> jax.Array:
+    """codes (N, M) uint8, lut (M, K) f32 -> distances (N,) f32.
+
+    N must be a multiple of block_n (callers pad; ops.py handles it)."""
+    n, m = codes.shape
+    mk, k = lut.shape
+    assert mk == m, (m, mk)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_adc_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),   # stream codes
+            pl.BlockSpec((m, k), lambda i: (0, 0)),         # LUT resident
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+
+
+def _adc_batch_kernel(codes_ref, luts_ref, out_ref, *, m: int, k: int,
+                      n_q: int):
+    """Batched-query ADC: codes tile (block_n, M) is read ONCE from HBM and
+    scanned against ALL ``n_q`` LUTs resident in VMEM (n_q*M*K*4 B; 2 MB at
+    B=64, M=32).  This is the §Perf hillclimb-A kernel: HBM traffic drops
+    from B x codes-bytes (per-query scan) to 1 x codes-bytes per batch."""
+    codes = codes_ref[...]                       # (block_n, M) uint8
+    luts = luts_ref[...]                         # (n_q, M, K) f32
+    idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                     * k)[None, :]            # (bn, M)
+    flat = luts.reshape(n_q, m * k)              # (B, M*K)
+    vals = jnp.take(flat, idx.reshape(-1), axis=1)            # (B, bn*M)
+    out_ref[...] = jnp.sum(
+        vals.reshape(n_q, codes.shape[0], m), axis=-1)        # (B, bn)
+
+
+def pq_adc_scan_batch(codes: jax.Array, luts: jax.Array, *,
+                      block_n: int = 2048,
+                      interpret: bool = True) -> jax.Array:
+    """codes (N, M) uint8, luts (B, M, K) f32 -> distances (B, N) f32."""
+    n, m = codes.shape
+    b, mk, k = luts.shape
+    assert mk == m and n % block_n == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_adc_batch_kernel, m=m, k=k, n_q=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((b, m, k), lambda i: (0, 0, 0)),   # LUTs resident
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(codes, luts)
+
+
+def _adc_topk_kernel(codes_ref, lut_ref, vals_ref, idx_ref, *,
+                     m: int, k: int, topk: int, block_n: int):
+    """Fused scan + per-block top-k: each grid step emits only (topk) pairs
+    instead of block_n distances — the HBM write traffic drops by
+    block_n/topk (the §Perf 'fused partial top-k' optimisation)."""
+    i = pl.program_id(0)
+    codes = codes_ref[...]
+    lut_flat = lut_ref[...].reshape(m * k)
+    idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                     * k)[None, :]
+    vals = jnp.take(lut_flat, idx.reshape(-1), axis=0)
+    dist = jnp.sum(vals.reshape(codes.shape), axis=-1)      # (block_n,)
+    neg, pos = jax.lax.top_k(-dist, topk)
+    vals_ref[...] = -neg
+    idx_ref[...] = (pos + i * block_n).astype(jnp.int32)
+
+
+def pq_adc_scan_topk(codes: jax.Array, lut: jax.Array, topk: int, *,
+                     block_n: int = 2048, interpret: bool = True):
+    """Fused ADC scan + block-local top-k.
+
+    Returns (vals (n_blocks*topk,), global_ids (n_blocks*topk,)); callers
+    finish with one small lax.top_k merge (ops.pq_adc_topk)."""
+    n, m = codes.shape
+    _, k = lut.shape
+    assert n % block_n == 0 and topk <= block_n
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_adc_topk_kernel, m=m, k=k, topk=topk,
+                          block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((topk,), lambda i: (i,)),
+            pl.BlockSpec((topk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // block_n * topk,), jnp.float32),
+            jax.ShapeDtypeStruct((n // block_n * topk,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes, lut)

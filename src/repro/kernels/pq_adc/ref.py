@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the PQ ADC scan kernel (Eq. 1)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """codes (N, M) uint8, lut (M, K) f32 -> distances (N,) f32."""
+    m, k = lut.shape
+    flat = lut.reshape(-1)
+    idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                     * k)[None, :]
+    return jnp.sum(jnp.take(flat, idx), axis=-1)
+
+
+def pq_adc_batch_ref(codes: jnp.ndarray, luts: jnp.ndarray) -> jnp.ndarray:
+    """codes (N, M), luts (B, M, K) -> (B, N)."""
+    b, m, k = luts.shape
+    flat = luts.reshape(b, m * k)
+    idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
+                                     * k)[None, :]
+    return jnp.sum(flat[:, idx], axis=-1)

@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state; dryrun.py sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    if multi_pod:
+        assert n % 2 == 0 and n >= 8
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    return jax.make_mesh((2, n // 2), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch qwen3-0.6b --reduced --steps 50
+
+Full-scale runs use the production mesh (on real TPU pods this process is
+per-host with jax.distributed.initialize; on CPU it runs the reduced config
+end-to-end with checkpointing + the fault supervisor)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as tfm
+from repro.models.layers import LOCAL_CTX
+from repro.optim.adamw import OptimizerConfig
+from repro.train.loop import TrainConfig, init_state, make_train_step, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = tfm.init_lm(jax.random.key(0), cfg)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    tcfg = TrainConfig(
+        opt=OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                            total_steps=args.steps),
+        microbatches=args.microbatches,
+        grad_compress_bits=args.grad_compress_bits,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+
+    import jax.numpy as jnp
+
+    def loss_fn(p, batch):
+        return tfm.lm_loss(p, batch, cfg, LOCAL_CTX, dtype=jnp.float32)
+
+    step_fn = jax.jit(make_train_step(loss_fn, tcfg), donate_argnums=(0,))
+    state = init_state(params, tcfg)
+
+    rng = np.random.default_rng(0)
+
+    def batches():
+        for _ in range(args.steps):
+            b = lm_batch(rng, args.batch, args.seq, cfg.vocab_size)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    state, step, history = run(step_fn, state, batches(), tcfg, log_every=10)
+    for h in history:
+        print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in h.items()}))
+    if args.log:
+        with open(args.log, "w") as f:
+            json.dump(history, f)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {step} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,517 @@
+"""Uniform Arch API: builds, for every (arch x shape) cell, the step
+function + abstract inputs + shardings.  Used by launch/dryrun.py (AOT
+lower+compile), tests (reduced smoke execution) and benchmarks.
+
+``build_cell(arch_id, shape_id, mesh, reduced)`` returns a :class:`Cell`:
+  * ``fn``            — the step callable (train_step / prefill / serve_step /
+                        retrieval)
+  * ``args``          — pytree of jax.ShapeDtypeStruct (dry-run) or a builder
+                        for real arrays (smoke)
+  * ``in_shardings``  — matching pytree of NamedSharding (None local)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgs
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from repro.configs.registry import get_config
+from repro.core.topk import sharded_topk
+from repro.models import gnn, recsys, transformer as tfm
+from repro.models.layers import LOCAL_CTX, ShardCtx
+from repro.optim.adamw import OptimizerConfig, adamw_init, adamw_update, \
+    opt_state_specs
+from repro.sharding.spec import Rules, rules_for_mesh
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_id: str
+    step: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Optional[Tuple[Any, ...]]
+    donate_argnums: Tuple[int, ...] = ()
+    init_fn: Optional[Callable] = None      # real param init (smoke tests)
+    bounds: Optional[Dict[str, int]] = None  # int-leaf upper bounds by name
+
+
+def realize(cell: Cell, seed: int = 0):
+    """Materialise real (small) arguments for a cell — used by smoke tests.
+    Params come from the arch's real init; int leaves are bounded by
+    ``cell.bounds`` (matched by path substring); float leaves ~ 0.1*N(0,1)."""
+    rng = np.random.default_rng(seed)
+    bounds = cell.bounds or {}
+
+    def conc(path, x):
+        if not isinstance(x, jax.ShapeDtypeStruct):
+            return x
+        name = jax.tree_util.keystr(path)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            hi = 2
+            for key, b in bounds.items():
+                if key in name:
+                    hi = b
+                    break
+            return jnp.asarray(rng.integers(0, max(hi, 1), x.shape), x.dtype)
+        return jnp.asarray(0.1 * rng.standard_normal(x.shape), x.dtype)
+
+    args = list(cell.args)
+    if cell.init_fn is not None:
+        params = cell.init_fn(jax.random.key(seed))
+        if cell.step == "train_step":
+            args[0] = {"params": params, "opt": adamw_init(params)}
+        else:
+            args[0] = params
+    rest = jax.tree_util.tree_map_with_path(
+        conc, tuple(args[1:]),
+        is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct))
+    return (args[0],) + tuple(rest)
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _shardings(mesh: Optional[Mesh], spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _ctx(mesh: Optional[Mesh], rules: Optional[Rules] = None) -> ShardCtx:
+    if mesh is None:
+        return LOCAL_CTX
+    return ShardCtx(mesh=mesh, rules=rules or rules_for_mesh(mesh))
+
+
+OPT = OptimizerConfig()
+
+
+# ---------------------------------------------------------------------------
+# Generic train-step wrapper (loss_fn closed over config/ctx)
+# ---------------------------------------------------------------------------
+
+def _make_train_step(loss_fn):
+    def train_step(state, batch):
+        def lf(p):
+            return loss_fn(p, batch)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        new_p, new_opt, om = adamw_update(grads, state["opt"],
+                                          state["params"], OPT)
+        return {"params": new_p, "opt": new_opt}, {**metrics, **om}
+    return train_step
+
+
+def _state_structs(init_fn, specs, mesh):
+    params = jax.eval_shape(init_fn)
+    state = {"params": params, "opt": jax.eval_shape(
+        lambda: adamw_init(params))}
+    sh = None
+    if mesh is not None:
+        spec_tree = {"params": specs, "opt": opt_state_specs(specs)}
+        sh = _shardings(mesh, spec_tree)
+    return state, sh
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: str, cfg: LMConfig, cell: ShapeCell,
+             mesh: Optional[Mesh], dims: Dict[str, int]) -> Cell:
+    rules = rules_for_mesh(mesh) if mesh is not None else Rules()
+    B, S = dims["global_batch"], dims["seq_len"]
+    V = cfg.vocab_size
+    specs = tfm.lm_param_specs(cfg, rules)
+    init_k = lambda key: tfm.init_lm(key, cfg)
+
+    if cell.step == "train_step":
+        ctx = _ctx(mesh, rules)
+        loss = functools.partial(tfm.lm_loss, cfg=cfg, ctx=ctx)
+        fn = _make_train_step(lambda p, b: loss(p, b))
+        state, state_sh = _state_structs(
+            lambda: tfm.init_lm(jax.random.key(0), cfg), specs, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_sh = _shardings(mesh, {
+            "tokens": P(rules.batch, rules.tensor),
+            "labels": P(rules.batch, rules.tensor)})
+        return Cell(arch, cell.shape_id, "train_step", fn,
+                    (state, batch), (state_sh, batch_sh) if mesh else None,
+                    donate_argnums=(0,), init_fn=init_k)
+
+    if cell.step == "prefill":
+        ctx = _ctx(mesh, rules)
+        fn = functools.partial(tfm.lm_prefill, cfg=cfg, ctx=ctx)
+        params = jax.eval_shape(lambda: tfm.init_lm(jax.random.key(0), cfg))
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        sh = (_shardings(mesh, specs),
+              _shardings(mesh, P(rules.batch, rules.tensor))) \
+            if mesh else None
+        return Cell(arch, cell.shape_id, "prefill", fn, (params, tokens),
+                    sh, init_fn=init_k)
+
+    # serve_step (decode): KV cache sequence-sharded.  long_500k (B=1)
+    # shards T over every mesh axis; decode_32k shards B over batch axes and
+    # T over the model axis.
+    # §Perf iteration E1: serving params are bf16 and sharded over the
+    # tensor/expert axes ONLY (fsdp=None) — FSDP weight all-gathers per
+    # decode step are the dominant collective otherwise (3.9 GB/step on
+    # deepseek).  REPRO_OPT_SERVE_PARAMS=0 restores the training layout.
+    import os as _os
+    opt_serve = _os.environ.get("REPRO_OPT_SERVE_PARAMS", "1") == "1"
+    if dims["global_batch"] == 1 and mesh is not None:
+        rules = dataclasses.replace(
+            rules, batch=None,
+            tensor=tuple(mesh.axis_names))       # T gets all axes
+        seq_axes = rules.tensor
+    else:
+        seq_axes = rules.tensor
+    ctx = _ctx(mesh, dataclasses.replace(rules, tensor=None) if
+               dims["global_batch"] == 1 and mesh is not None else rules)
+
+    def serve_step(params, cache, tokens, pos):
+        return tfm.lm_decode_step(params, cache, tokens, pos, cfg, ctx)
+
+    params = jax.eval_shape(lambda: tfm.init_lm(jax.random.key(0), cfg))
+    if opt_serve:
+        params = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    cache = jax.eval_shape(
+        lambda: tfm.init_kv_cache(cfg, B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    sh = None
+    if mesh is not None:
+        # params always tensor-shard over "model" only (16-way keeps every
+        # weight dim divisible; the all-axes tensor rule of long_500k is
+        # for the KV cache, not weights)
+        serve_rules = (dataclasses.replace(rules, fsdp=None, tensor="model")
+                       if opt_serve else rules)
+        serve_specs = tfm.lm_param_specs(cfg, serve_rules) if opt_serve \
+            else specs
+        cache_specs = tfm.kv_cache_specs(cfg, rules, seq_axes=seq_axes)
+        sh = (_shardings(mesh, serve_specs), _shardings(mesh, cache_specs),
+              _shardings(mesh, P(rules.batch, None)),
+              NamedSharding(mesh, P()))
+    return Cell(arch, cell.shape_id, "serve_step", serve_step,
+                (params, cache, tokens, pos), sh, donate_argnums=(1,),
+                init_fn=init_k)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _gnn_cell(arch: str, cfg: GNNConfig, cell: ShapeCell,
+              mesh: Optional[Mesh], dims: Dict[str, int]) -> Cell:
+    rules = rules_for_mesh(mesh) if mesh is not None else Rules()
+    ctx = _ctx(mesh, rules)
+    n_dev = 1 if mesh is None else mesh.size
+    d_feat = dims.get("d_feat", cfg.d_feat)
+    n_classes = dims.get("n_classes", cfg.n_classes)
+    init_k = lambda key: gnn.init_sage(key, cfg, d_feat, n_classes)
+    init_fn = lambda: init_k(jax.random.key(0))
+    specs = gnn.sage_param_specs(cfg, rules)
+
+    if cell.shape_id == "minibatch_lg":
+        B = dims["batch_nodes"]
+        f0, f1 = dims["fanout0"], dims["fanout1"]
+
+        def loss_fn(p, b):
+            logits = gnn.sage_forward_minibatch(
+                p, b["feats0"], b["feats1"], b["feats2"], cfg)
+            return gnn.sage_loss(logits, b["labels"])
+        fn = _make_train_step(loss_fn)
+        state, state_sh = _state_structs(init_fn, specs, mesh)
+        batch = {
+            "feats0": jax.ShapeDtypeStruct((B, d_feat), jnp.float32),
+            "feats1": jax.ShapeDtypeStruct((B, f0, d_feat), jnp.float32),
+            "feats2": jax.ShapeDtypeStruct((B, f0, f1, d_feat), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+        bspec = {"feats0": P(rules.batch, None),
+                 "feats1": P(rules.batch, None, None),
+                 "feats2": P(rules.batch, None, None, None),
+                 "labels": P(rules.batch)}
+        return Cell(arch, cell.shape_id, "train_step", fn,
+                    (state, batch),
+                    (state_sh, _shardings(mesh, bspec)) if mesh else None,
+                    donate_argnums=(0,), init_fn=init_k)
+
+    # full-graph (sm / ogb_products) and molecule: edge-sharded aggregation.
+    # +1 dummy node absorbs padding edges; labels mask excludes it.
+    # REPRO_OPT_GNN=1 (default): dst-partitioned aggregation (§Perf
+    # hillclimb B) — nodes padded to the mesh size, edges carry weights.
+    import os
+    use_dstpart = (mesh is not None and cell.shape_id != "molecule"
+                   and os.environ.get("REPRO_OPT_GNN", "1") == "1")
+    n_nodes = dims["n_nodes"] * dims.get("batch", 1) + 1
+    if use_dstpart:
+        n_nodes = _pad_to(n_nodes, n_dev)
+    n_edges = _pad_to(dims["n_edges"] * dims.get("batch", 1),
+                      max(n_dev, 1))
+    is_mol = cell.shape_id == "molecule"
+    n_graphs = dims.get("batch", 1)
+
+    def loss_fn(p, b):
+        if is_mol:
+            logits = gnn.sage_forward_batched(
+                p, b["features"], b["edges"], b["graph_ids"], n_graphs, cfg,
+                ctx)
+            return gnn.sage_loss(logits, b["labels"])
+        if use_dstpart:
+            logits = gnn.sage_forward_full_dstpart(
+                p, b["features"], b["edges"], b["edge_weight"], cfg, ctx)
+        else:
+            logits = gnn.sage_forward_full(p, b["features"], b["edges"],
+                                           cfg, ctx)
+        return gnn.sage_loss(logits, b["labels"], b["mask"])
+
+    fn = _make_train_step(loss_fn)
+    state, state_sh = _state_structs(init_fn, specs, mesh)
+    corpus = rules.corpus
+    batch = {
+        "features": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+        "edges": jax.ShapeDtypeStruct((n_edges, 2), jnp.int32),
+    }
+    bspec = {"features": P(None, None), "edges": P(corpus, None)}
+    if is_mol:
+        batch["graph_ids"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((n_graphs,), jnp.int32)
+        bspec["graph_ids"] = P(None)
+        bspec["labels"] = P(None)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch["mask"] = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+        bspec["labels"] = P(None)
+        bspec["mask"] = P(None)
+        if use_dstpart:
+            batch["edge_weight"] = jax.ShapeDtypeStruct((n_edges,),
+                                                        jnp.float32)
+            bspec["edge_weight"] = P(corpus)
+    return Cell(arch, cell.shape_id, "train_step", fn, (state, batch),
+                (state_sh, _shardings(mesh, bspec)) if mesh else None,
+                donate_argnums=(0,), init_fn=init_k)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch: str, cfg: RecsysConfig, cell: ShapeCell,
+                 mesh: Optional[Mesh], dims: Dict[str, int]) -> Cell:
+    rules = rules_for_mesh(mesh) if mesh is not None else Rules()
+    B = dims.get("batch", 1)
+    if B == 1 and mesh is not None:          # retrieval_cand: replicate batch
+        rules = dataclasses.replace(rules, batch=None)
+    ctx = _ctx(mesh, rules)
+    kind = cfg.kind
+
+    # iteration C2b: only large serving batches use the tensor-axis table
+    # resharding (see recsys.dlrm_param_specs docstring)
+    bulk = cell.step == "serve_step" and B >= 16384
+    if kind == "dlrm":
+        init_k = lambda key: recsys.init_dlrm(key, cfg)
+        specs = recsys.dlrm_param_specs(cfg, rules, bulk_serving=bulk)
+    elif kind == "wide_deep":
+        init_k = lambda key: recsys.init_wide_deep(key, cfg)
+        specs = recsys.wide_deep_param_specs(cfg, rules, bulk_serving=bulk)
+    elif kind == "bert4rec":
+        init_k = lambda key: recsys.init_bert4rec(key, cfg)
+        specs = recsys.bert4rec_param_specs(cfg, rules)
+    elif kind == "mind":
+        init_k = lambda key: recsys.init_mind(key, cfg)
+        specs = recsys.mind_param_specs(cfg, rules)
+    else:
+        raise ValueError(kind)
+    init_fn = lambda: init_k(jax.random.key(0))
+
+    n_neg = 127
+
+    def batch_struct():
+        if kind == "dlrm":
+            return ({"dense": jax.ShapeDtypeStruct((B, cfg.n_dense),
+                                                   jnp.float32),
+                     "sparse_ids": jax.ShapeDtypeStruct(
+                         (B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B,), jnp.float32)},
+                    {"dense": P(rules.batch, None),
+                     "sparse_ids": P(rules.batch, None, None),
+                     "labels": P(rules.batch)})
+        if kind == "wide_deep":
+            return ({"sparse_ids": jax.ShapeDtypeStruct(
+                        (B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B,), jnp.float32)},
+                    {"sparse_ids": P(rules.batch, None, None),
+                     "labels": P(rules.batch)})
+        if kind == "bert4rec":
+            return ({"item_ids": jax.ShapeDtypeStruct((B, cfg.seq_len),
+                                                      jnp.int32),
+                     "mask_pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+                     "pos_items": jax.ShapeDtypeStruct((B,), jnp.int32),
+                     "neg_items": jax.ShapeDtypeStruct((B, n_neg),
+                                                       jnp.int32)},
+                    {"item_ids": P(rules.batch, None),
+                     "mask_pos": P(rules.batch),
+                     "pos_items": P(rules.batch),
+                     "neg_items": P(rules.batch, None)})
+        return ({"hist_ids": jax.ShapeDtypeStruct((B, cfg.hist_len),
+                                                  jnp.int32),
+                 "pos_items": jax.ShapeDtypeStruct((B,), jnp.int32),
+                 "neg_items": jax.ShapeDtypeStruct((B, n_neg), jnp.int32)},
+                {"hist_ids": P(rules.batch, None),
+                 "pos_items": P(rules.batch),
+                 "neg_items": P(rules.batch, None)})
+
+    def loss_fn(p, b):
+        if kind == "dlrm":
+            logit = recsys.dlrm_forward(p, b["dense"], b["sparse_ids"], cfg,
+                                        ctx)
+            return recsys.bce_loss(logit, b["labels"])
+        if kind == "wide_deep":
+            logit = recsys.wide_deep_forward(p, b["sparse_ids"], cfg, ctx)
+            return recsys.bce_loss(logit, b["labels"])
+        if kind == "bert4rec":
+            return recsys.bert4rec_sampled_loss(
+                p, b["item_ids"], b["mask_pos"], b["pos_items"],
+                b["neg_items"], cfg, ctx)
+        return recsys.mind_sampled_loss(
+            p, b["hist_ids"], b["pos_items"], b["neg_items"], cfg, ctx)
+
+    if cell.step == "train_step":
+        fn = _make_train_step(loss_fn)
+        state, state_sh = _state_structs(init_fn, specs, mesh)
+        batch, bspec = batch_struct()
+        return Cell(arch, cell.shape_id, "train_step", fn, (state, batch),
+                    (state_sh, _shardings(mesh, bspec)) if mesh else None,
+                    donate_argnums=(0,), init_fn=init_k)
+
+    params = jax.eval_shape(init_fn)
+    psh = _shardings(mesh, specs) if mesh else None
+
+    if cell.step == "serve_step":
+        k = 100
+
+        def serve_step(p, b):
+            if kind == "dlrm":
+                return jax.nn.sigmoid(
+                    recsys.dlrm_forward(p, b["dense"], b["sparse_ids"], cfg,
+                                        ctx))
+            if kind == "wide_deep":
+                return jax.nn.sigmoid(
+                    recsys.wide_deep_forward(p, b["sparse_ids"], cfg, ctx))
+            if kind == "bert4rec":
+                u = recsys.bert4rec_user_embedding(p, b["item_ids"], cfg, ctx)
+                return recsys.score_all_items(u, p["item_embed"], k, ctx)
+            # MIND: max over interests; score interest-by-interest inside a
+            # fori_loop so only ONE (B, V_shard) score buffer is ever live
+            # (an unrolled python loop co-allocates all K of them: +12 GiB
+            # at serve_bulk scale).
+            interests = recsys.mind_interests(p, b["hist_ids"], cfg, ctx)
+
+            def one(i, best):
+                v, _ = recsys.score_all_items(
+                    jax.lax.dynamic_index_in_dim(interests, i, 1, False),
+                    p["item_embed"], k, ctx)
+                return jnp.maximum(best, v.astype(jnp.float32))
+            best = jnp.full((B, k), -1e30, jnp.float32)
+            return jax.lax.fori_loop(0, cfg.n_interests, one, best)
+
+        batch, bspec = batch_struct()
+        # serving batches don't need labels
+        batch = {kk: v for kk, v in batch.items()
+                 if kk not in ("labels", "pos_items", "neg_items",
+                               "mask_pos")}
+        bspec = {kk: v for kk, v in bspec.items() if kk in batch}
+        return Cell(arch, cell.shape_id, "serve_step", serve_step,
+                    (params, batch),
+                    (psh, _shardings(mesh, bspec)) if mesh else None,
+                    init_fn=init_k)
+
+    # retrieval_cand: 1 query vs n_candidates rows of the item/first table.
+    # The table has 2^20 rows (mesh-divisible); candidates beyond
+    # n_candidates (exactly 10^6) are masked out of the top-k.
+    n_cand = dims["n_candidates"]
+    k = 100
+
+    # scores follow the table's own row sharding (corpus for retrieval
+    # deployments — iteration C2b keeps the tensor reshard for bulk only)
+    row_axes = rules.corpus
+
+    def retrieval(p, query):
+        table = p["item_embed"] if "item_embed" in p else p["tables"][0]
+        cand = table.astype(query.dtype)
+        scores = jnp.einsum("bd,vd->bv", query, cand)
+        V = cand.shape[0]
+        if V > n_cand:
+            scores = jnp.where(jnp.arange(V)[None] < n_cand, scores, -1e30)
+        if ctx.mesh is not None:
+            scores = jax.lax.with_sharding_constraint(
+                scores, NamedSharding(ctx.mesh, P(None, row_axes)))
+            return sharded_topk(scores, k, ctx, shard_axes=row_axes,
+                                batch_axes=None)
+        return jax.lax.top_k(scores, k)
+
+    query = jax.ShapeDtypeStruct((B, cfg.embed_dim), jnp.float32)
+    sh = (psh, NamedSharding(mesh, P(None, None))) if mesh else None
+    return Cell(arch, cell.shape_id, "retrieval", retrieval, (params, query),
+                sh, init_fn=init_k)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def get_shape_cell(cfg, shape_id: str) -> ShapeCell:
+    for c in cfgs.shapes_for(cfg):
+        if c.shape_id == shape_id:
+            return c
+    raise KeyError(shape_id)
+
+
+REDUCED_DIMS = {
+    "seq_len": 64, "global_batch": 4, "batch": 4, "n_candidates": 512,
+    "n_nodes": 64, "n_edges": 128, "batch_nodes": 8, "fanout0": 3,
+    "fanout1": 2, "d_feat": 16, "n_classes": 4,
+}
+
+
+def build_cell(arch_id: str, shape_id: str, mesh: Optional[Mesh] = None,
+               reduced: bool = False,
+               dim_overrides: Optional[Dict[str, int]] = None) -> Cell:
+    cfg = get_config(arch_id, reduced=reduced)
+    cell = get_shape_cell(cfg, shape_id)
+    dims = dict(cell.dims)
+    if reduced:
+        dims = {k: min(v, REDUCED_DIMS.get(k, v)) for k, v in dims.items()}
+        if "batch" in dims and shape_id == "molecule":
+            dims["batch"] = 4
+    if dim_overrides:
+        dims.update(dim_overrides)
+    if isinstance(cfg, LMConfig):
+        return _lm_cell(arch_id, cfg, cell, mesh, dims)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(arch_id, cfg, cell, mesh, dims)
+    if isinstance(cfg, RecsysConfig):
+        return _recsys_cell(arch_id, cfg, cell, mesh, dims)
+    raise TypeError(type(cfg))

@@ -1,0 +1,381 @@
+"""RecSys architectures: DLRM, Wide&Deep, BERT4Rec, MIND.
+
+The embedding LOOKUP is the hot path; JAX has no nn.EmbeddingBag, so we
+implement it with ``jnp.take`` + ``jax.ops.segment_sum`` (ragged form) and a
+dense fast path for fixed multi-hot (see kernel taxonomy §RecSys).  Tables
+are row-sharded; huge-vocab scoring uses the two-level sharded top-k from
+``repro.core.topk`` (the same collective the FusionANNS scan uses).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.core.topk import sharded_topk
+from repro.models.layers import ShardCtx, LOCAL_CTX, rms_norm, \
+    blockwise_attention
+from repro.sharding.spec import Rules
+
+# §Perf hillclimb C: row-shard the ranking tables over the 16-way tensor
+# axis only (all-reduce group 16 instead of 256) and gather in bf16.
+# REPRO_OPT_RECSYS=0 restores the corpus-sharded f32 baseline (ablation).
+import os
+OPT_LOOKUP = os.environ.get("REPRO_OPT_RECSYS", "1") == "1"
+_GATHER_DT = jnp.bfloat16 if OPT_LOOKUP else None
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, n_bags: int,
+                         mode: str = "mean") -> jax.Array:
+    """EmbeddingBag over ragged bags: gather rows then segment-reduce.
+
+    table (V, d); flat_ids (L,); segment_ids (L,) bag of each id."""
+    rows = jnp.take(table, flat_ids, axis=0)                   # (L, d)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(flat_ids, rows.dtype),
+                                segment_ids, num_segments=n_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def embedding_bag_dense(tables: jax.Array, ids: jax.Array,
+                        mode: str = "mean",
+                        gather_dtype=None) -> jax.Array:
+    """Fixed multi-hot fast path.  tables (T, V, d), ids (B, T, M) ->
+    (B, T, d).
+
+    ``gather_dtype=bf16`` halves the bytes the partitioned gather's
+    mask+all-reduce moves across the mesh (§Perf hillclimb C: the lookup
+    collective is the serve_bulk bottleneck)."""
+    if gather_dtype is not None:
+        tables = tables.astype(gather_dtype)
+    gathered = jax.vmap(lambda tab, idx: jnp.take(tab, idx, axis=0),
+                        in_axes=(0, 1), out_axes=1)(tables, ids)  # (B,T,M,d)
+    if mode == "sum":
+        return gathered.sum(axis=2)
+    if mode == "mean":
+        return gathered.mean(axis=2)
+    raise ValueError(mode)
+
+
+def _mlp_init(rng, dims, name_prefix=""):
+    out = []
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i, k in enumerate(keys):
+        std = 1.0 / math.sqrt(dims[i])
+        out.append({"w": std * jax.random.normal(
+            k, (dims[i], dims[i + 1]), jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32)})
+    return out
+
+
+def _mlp_apply(layers, x, final_act=None):
+    for i, p in enumerate(layers):
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if i < len(layers) - 1:
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def _mlp_specs(dims, r: Rules):
+    # Ranking MLPs are small (<=1024 wide) with awkward dims (13, 415...):
+    # replicated; the embedding tables carry all the memory and get sharded.
+    return [{"w": P(None, None), "b": P(None)} for _ in range(len(dims) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# DLRM [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+
+def _dlrm_top_dims(cfg: RecsysConfig):
+    """Top-MLP input = pairwise dots among (bot_out + n_sparse) features
+    concat bot_out (MLPerf DLRM); cfg.top_mlp lists the layer widths."""
+    n_f = cfg.n_sparse + 1
+    d_in = n_f * (n_f - 1) // 2 + cfg.embed_dim
+    return [d_in] + list(cfg.top_mlp)
+
+
+def init_dlrm(rng, cfg: RecsysConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "tables": 0.05 * jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab_size, d), jnp.float32),
+        "bot": _mlp_init(k2, list(cfg.bot_mlp)),
+        "top": _mlp_init(k3, _dlrm_top_dims(cfg)),
+    }
+
+
+def dlrm_param_specs(cfg: RecsysConfig, r: Rules,
+                     bulk_serving: bool = False):
+    """Iteration C2b: bulk-serving deployments reshard the tables to the
+    16-way tensor axis (small all-reduce groups for the lookup); training
+    keeps 256-way corpus sharding (16x less optimizer/table bytes per
+    device).  Resharding happens at deployment load via
+    train.checkpoint.restore(shardings=...)."""
+    rows = r.tensor if (OPT_LOOKUP and bulk_serving) else r.corpus
+    return {
+        "tables": P(None, rows, None),
+        "bot": _mlp_specs(list(cfg.bot_mlp), r),
+        "top": _mlp_specs(_dlrm_top_dims(cfg), r),
+    }
+
+
+def dlrm_forward(params, dense, sparse_ids, cfg: RecsysConfig,
+                 ctx: ShardCtx = LOCAL_CTX):
+    """dense (B, 13) f32; sparse_ids (B, 26, M) int32 -> logit (B,)."""
+    x = _mlp_apply(params["bot"], dense)                       # (B, d)
+    # iteration C2: bf16 lookups only when the batch amortises the one-off
+    # table downcast (serve_bulk yes; serve_p99/train no)
+    gdt = _GATHER_DT if sparse_ids.shape[0] >= 16384 else None
+    emb = embedding_bag_dense(params["tables"], sparse_ids,
+                              gather_dtype=gdt)                # (B, T, d)
+    emb = emb.astype(x.dtype)
+    emb = ctx.constrain(emb, "batch", None, None)
+    feats = jnp.concatenate([x[:, None], emb], axis=1)         # (B, T+1, d)
+    inter = jnp.einsum("bid,bjd->bij", feats, feats)           # (B, F, F)
+    n_f = feats.shape[1]
+    iu, ju = jnp.triu_indices(n_f, k=1)
+    flat = inter[:, iu, ju]                                    # (B, F(F-1)/2)
+    top_in = jnp.concatenate([x, flat], axis=-1)
+    return _mlp_apply(params["top"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep [arXiv:1606.07792]
+# ---------------------------------------------------------------------------
+
+def init_wide_deep(rng, cfg: RecsysConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    deep_dims = [cfg.n_sparse * d] + list(cfg.mlp) + [1]
+    return {
+        "tables": 0.05 * jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab_size, d), jnp.float32),
+        "wide": 0.01 * jax.random.normal(
+            k2, (cfg.n_sparse, cfg.vocab_size, 1), jnp.float32),
+        "deep": _mlp_init(k3, deep_dims),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def wide_deep_param_specs(cfg: RecsysConfig, r: Rules,
+                          bulk_serving: bool = False):
+    d = cfg.embed_dim
+    deep_dims = [cfg.n_sparse * d] + list(cfg.mlp) + [1]
+    rows = r.tensor if (OPT_LOOKUP and bulk_serving) else r.corpus
+    return {
+        "tables": P(None, rows, None),
+        "wide": P(None, rows, None),
+        "deep": _mlp_specs(deep_dims, r),
+        "bias": P(),
+    }
+
+
+def wide_deep_forward(params, sparse_ids, cfg: RecsysConfig,
+                      ctx: ShardCtx = LOCAL_CTX):
+    """sparse_ids (B, T, M) -> logit (B,)."""
+    B = sparse_ids.shape[0]
+    gdt = _GATHER_DT if B >= 16384 else None                   # iteration C2
+    emb = embedding_bag_dense(params["tables"], sparse_ids,
+                              gather_dtype=gdt)                # (B, T, d)
+    emb = ctx.constrain(emb, "batch", None, None).astype(jnp.float32)
+    deep = _mlp_apply(params["deep"], emb.reshape(B, -1))[:, 0]
+    wide = embedding_bag_dense(params["wide"], sparse_ids,
+                               mode="sum").astype(jnp.float32).sum(
+        axis=(1, 2))
+    return deep + wide + params["bias"].astype(deep.dtype)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec [arXiv:1904.06690]
+# ---------------------------------------------------------------------------
+
+def init_bert4rec(rng, cfg: RecsysConfig):
+    d, V = cfg.embed_dim, cfg.vocab_size
+    keys = jax.random.split(rng, 3 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        ks = jax.random.split(keys[3 + i], 4)
+        std = 0.02
+        blocks.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "wqkv": std * jax.random.normal(ks[0], (d, 3 * d), jnp.float32),
+            "wo": std * jax.random.normal(ks[1], (d, d), jnp.float32),
+            "wi": std * jax.random.normal(ks[2], (d, 4 * d), jnp.float32),
+            "wof": std * jax.random.normal(ks[3], (4 * d, d), jnp.float32),
+        })
+    return {
+        "item_embed": 0.02 * jax.random.normal(keys[0], (V, d), jnp.float32),
+        "pos_embed": 0.02 * jax.random.normal(
+            keys[1], (cfg.seq_len, d), jnp.float32),
+        "final_ln": jnp.ones((d,), jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def bert4rec_param_specs(cfg: RecsysConfig, r: Rules):
+    blk = {"ln1": P(None), "ln2": P(None), "wqkv": P(None, None),
+           "wo": P(None, None), "wi": P(None, None), "wof": P(None, None)}
+    return {"item_embed": P(r.corpus, None), "pos_embed": P(None, None),
+            "final_ln": P(None),
+            "blocks": [dict(blk) for _ in range(cfg.n_blocks)]}
+
+
+def bert4rec_encode(params, item_ids, cfg: RecsysConfig,
+                    ctx: ShardCtx = LOCAL_CTX, dtype=jnp.float32):
+    """item_ids (B, S) -> sequence repr (B, S, d).  Bidirectional blocks."""
+    B, S = item_ids.shape
+    d, H = cfg.embed_dim, cfg.n_heads
+    x = (jnp.take(params["item_embed"], item_ids, axis=0)
+         + params["pos_embed"][None, :S]).astype(dtype)
+    x = ctx.constrain(x, "batch", None, None)
+    for p in params["blocks"]:
+        h = rms_norm(x, p["ln1"])
+        qkv = h @ p["wqkv"].astype(dtype)
+        q, k, v = jnp.split(qkv.reshape(B, S, 3 * H, d // H), 3, axis=2)
+        a = blockwise_attention(q, k, v, causal=False,
+                                block_size=min(512, S))
+        x = x + a.reshape(B, S, d) @ p["wo"].astype(dtype)
+        h = rms_norm(x, p["ln2"])
+        x = x + jax.nn.gelu(h @ p["wi"].astype(dtype)) @ p["wof"].astype(dtype)
+    return rms_norm(x, params["final_ln"])
+
+
+def bert4rec_sampled_loss(params, item_ids, mask_pos, pos_items, neg_items,
+                          cfg: RecsysConfig, ctx: ShardCtx = LOCAL_CTX):
+    """Sampled-softmax masked-item loss.
+
+    mask_pos (B,) masked position; pos_items (B,); neg_items (B, n_neg)."""
+    h = bert4rec_encode(params, item_ids, cfg, ctx)            # (B, S, d)
+    hm = jnp.take_along_axis(
+        h, mask_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]  # (B, d)
+    cand = jnp.concatenate([pos_items[:, None], neg_items], axis=1)
+    ce = jnp.take(params["item_embed"], cand, axis=0).astype(h.dtype)
+    logits = jnp.einsum("bd,bnd->bn", hm, ce).astype(jnp.float32)
+    loss = jnp.mean(jax.scipy.special.logsumexp(logits, -1) - logits[:, 0])
+    acc = jnp.mean(jnp.argmax(logits, -1) == 0)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def bert4rec_user_embedding(params, item_ids, cfg: RecsysConfig,
+                            ctx: ShardCtx = LOCAL_CTX):
+    h = bert4rec_encode(params, item_ids, cfg, ctx)
+    return h[:, -1]                                            # (B, d)
+
+
+# ---------------------------------------------------------------------------
+# MIND [arXiv:1904.08030] — multi-interest capsule routing
+# ---------------------------------------------------------------------------
+
+def init_mind(rng, cfg: RecsysConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "item_embed": 0.02 * jax.random.normal(
+            k1, (cfg.vocab_size, d), jnp.float32),
+        "bilinear": (1.0 / math.sqrt(d)) * jax.random.normal(
+            k2, (d, d), jnp.float32),
+        "proj": _mlp_init(k3, [d, 2 * d, d]),
+    }
+
+
+def mind_param_specs(cfg: RecsysConfig, r: Rules):
+    return {"item_embed": P(r.corpus, None), "bilinear": P(None, None),
+            "proj": _mlp_specs([cfg.embed_dim, 2 * cfg.embed_dim,
+                                cfg.embed_dim], r)}
+
+
+def _squash(z):
+    n2 = jnp.sum(jnp.square(z), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * z / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist_ids, cfg: RecsysConfig,
+                   ctx: ShardCtx = LOCAL_CTX):
+    """hist_ids (B, L) -> interest capsules (B, K, d) via dynamic routing."""
+    B, Lh = hist_ids.shape
+    K = cfg.n_interests
+    e = jnp.take(params["item_embed"], hist_ids, axis=0)       # (B, L, d)
+    e = ctx.constrain(e, "batch", None, None)
+    eS = e @ params["bilinear"].astype(e.dtype)                # (B, L, d)
+
+    def routing_iter(b, _):
+        c = jax.nn.softmax(b, axis=1)                          # over K
+        z = jnp.einsum("bkl,bld->bkd", c, eS)
+        u = _squash(z)
+        b_new = b + jnp.einsum("bkd,bld->bkl", u, eS)
+        return b_new, u
+
+    b0 = jnp.zeros((B, K, Lh), e.dtype)
+    b_fin, us = jax.lax.scan(routing_iter, b0,
+                             jnp.arange(cfg.capsule_iters))
+    u = us[-1]                                                 # (B, K, d)
+    return _mlp_apply(params["proj"], u)
+
+
+def mind_sampled_loss(params, hist_ids, pos_items, neg_items,
+                      cfg: RecsysConfig, ctx: ShardCtx = LOCAL_CTX,
+                      pow_p: float = 2.0):
+    interests = mind_interests(params, hist_ids, cfg, ctx)     # (B, K, d)
+    cand = jnp.concatenate([pos_items[:, None], neg_items], axis=1)
+    ce = jnp.take(params["item_embed"], cand, axis=0)          # (B, N, d)
+    # label-aware attention: target attends over interests (train time)
+    att = jnp.einsum("bkd,bnd->bkn", interests, ce)
+    w = jax.nn.softmax(jnp.power(jnp.maximum(att, 0.0) + 1e-6, pow_p), axis=1)
+    user = jnp.einsum("bkn,bkd->bnd", w, interests)            # (B, N, d)
+    logits = jnp.sum(user * ce, axis=-1).astype(jnp.float32)
+    loss = jnp.mean(jax.scipy.special.logsumexp(logits, -1) - logits[:, 0])
+    acc = jnp.mean(jnp.argmax(logits, -1) == 0)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Shared serving / retrieval heads
+# ---------------------------------------------------------------------------
+
+def score_all_items(user_emb, item_table, k, ctx: ShardCtx,
+                    shard_axes=None):
+    """user_emb (B, d) x item_table (V, d) -> top-k (vals, ids).
+
+    The (B, V) score matrix is sharded over ``shard_axes`` on V (default:
+    the ``tensor`` axis, since batch already occupies the data axes) and
+    reduced with the two-level top-k — only k pairs/shard cross the network.
+    """
+    # score matmul in bf16 (the (B,V) matrix is the footprint driver at
+    # serve_bulk scale: 262144 x 2^20); top-k on bf16 values is exact
+    # enough for retrieval, values reported back in f32 by callers.
+    scores = jnp.einsum("bd,vd->bv", user_emb.astype(jnp.bfloat16),
+                        item_table.astype(jnp.bfloat16))
+    if ctx.mesh is not None:
+        axes = shard_axes if shard_axes is not None else ctx.rules.tensor
+        scores = ctx.constrain(scores, "batch", "tensor")
+        return sharded_topk(scores, k, ctx, shard_axes=axes)
+    return jax.lax.top_k(scores, k)
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((logits > 0) == (labels > 0.5))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,438 @@
+"""Decoder-only LM covering the five assigned LM architectures.
+
+One code path parameterised by :class:`LMConfig`:
+  * MHA / GQA (+ optional QKV bias, per-head qk RMSNorm, partial RoPE)
+  * MLA (DeepSeek-V2) with compressed-KV absorbed decode
+  * dense SwiGLU FFN or expert-parallel MoE (+ shared experts, first-k-dense)
+
+Layers are a ``lax.scan`` over stacked weights (HLO size independent of
+depth); every block is wrapped in ``jax.checkpoint`` (full remat) so the
+blockwise attention never saves score matrices.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.models.layers import ShardCtx, LOCAL_CTX
+from repro.sharding.spec import Rules
+
+
+# ---------------------------------------------------------------------------
+# Init + partition specs
+# ---------------------------------------------------------------------------
+
+def _block_shapes(cfg: LMConfig, moe: bool, d_ff: int) -> Dict[str, Any]:
+    D, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s: Dict[str, Any] = {"ln1": (D,), "ln2": (D,)}
+    if cfg.mla:
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        s.update(
+            wq=(D, H * qk),
+            wdkv=(D, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+            kv_norm=(cfg.kv_lora_rank,),
+            wuk=(cfg.kv_lora_rank, H * cfg.qk_nope_head_dim),
+            wuv=(cfg.kv_lora_rank, H * cfg.v_head_dim),
+            wo=(H * cfg.v_head_dim, D),
+        )
+    else:
+        s.update(wq=(D, H * dh), wk=(D, Hk * dh), wv=(D, Hk * dh),
+                 wo=(H * dh, D))
+        if cfg.qkv_bias:
+            s.update(bq=(H * dh,), bk=(Hk * dh,), bv=(Hk * dh,))
+        if cfg.qk_norm:
+            s.update(q_norm=(dh,), k_norm=(dh,))
+    if moe:
+        F = cfg.moe_d_ff
+        s.update(router=(D, cfg.n_experts),
+                 w1=(cfg.n_experts, D, 2 * F),
+                 w2=(cfg.n_experts, F, D))
+        if cfg.n_shared_experts:
+            Fs = F * cfg.n_shared_experts
+            s.update(ws1=(D, 2 * Fs), ws2=(Fs, D))
+    else:
+        s.update(wi=(D, 2 * d_ff), wof=(d_ff, D))
+    return s
+
+
+def _block_specs(cfg: LMConfig, r: Rules, moe: bool) -> Dict[str, P]:
+    fs, tp, ep = r.fsdp, r.tensor, r.expert
+    s: Dict[str, P] = {"ln1": P(None, None), "ln2": P(None, None)}
+    if cfg.mla:
+        s.update(wq=P(None, fs, tp), wdkv=P(None, fs, None),
+                 kv_norm=P(None, None),
+                 wuk=P(None, fs, tp), wuv=P(None, fs, tp),
+                 wo=P(None, tp, fs))
+    else:
+        s.update(wq=P(None, fs, tp), wk=P(None, fs, tp), wv=P(None, fs, tp),
+                 wo=P(None, tp, fs))
+        if cfg.qkv_bias:
+            s.update(bq=P(None, tp), bk=P(None, tp), bv=P(None, tp))
+        if cfg.qk_norm:
+            s.update(q_norm=P(None, None), k_norm=P(None, None))
+    if moe:
+        s.update(router=P(None, fs, None),
+                 w1=P(None, ep, fs, None), w2=P(None, ep, None, fs))
+        if cfg.n_shared_experts:
+            s.update(ws1=P(None, fs, tp), ws2=P(None, tp, fs))
+    else:
+        s.update(wi=P(None, fs, tp), wof=P(None, tp, fs))
+    return s
+
+
+def _init_stack(rng, shapes: Dict[str, Any], n: int, d_model: int):
+    out = {}
+    keys = jax.random.split(rng, len(shapes))
+    for key, (name, shape) in zip(keys, sorted(shapes.items())):
+        full = (n,) + tuple(shape)
+        if name.startswith(("ln", "q_norm", "k_norm", "kv_norm")):
+            out[name] = jnp.ones(full, jnp.float32)
+        elif name.startswith("b"):
+            out[name] = jnp.zeros(full, jnp.float32)
+        else:
+            std = 0.02 if name != "wo" and name != "wof" and name != "w2" \
+                else 0.02 / math.sqrt(2 * max(n, 1))
+            out[name] = (std * jax.random.normal(key, full, jnp.float32))
+    return out
+
+
+def init_lm(rng: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    k_e, k_b, k_d, k_h = jax.random.split(rng, 4)
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    n_main = n_moe if cfg.moe else cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": 0.02 * jax.random.normal(
+            k_e, (cfg.vocab_size, cfg.d_model), jnp.float32),
+        "blocks": _init_stack(
+            k_b, _block_shapes(cfg, cfg.moe, cfg.d_ff), n_main, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe and cfg.first_k_dense:
+        params["dense_blocks"] = _init_stack(
+            k_d, _block_shapes(cfg, False, cfg.dense_d_ff or cfg.d_ff),
+            cfg.first_k_dense, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = 0.02 * jax.random.normal(
+            k_h, (cfg.d_model, cfg.vocab_size), jnp.float32)
+    return params
+
+
+def lm_param_specs(cfg: LMConfig, r: Rules) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": P(r.tensor, r.fsdp),
+        "blocks": _block_specs(cfg, r, cfg.moe),
+        "final_norm": P(None),
+    }
+    if cfg.moe and cfg.first_k_dense:
+        specs["dense_blocks"] = _block_specs(cfg, r, False)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(r.fsdp, r.tensor)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn(x, p, cfg: LMConfig, rope, ctx: ShardCtx, *, causal=True,
+          q_offset=0):
+    B, S, D = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hk, dh)
+    v = v.reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope
+    q = L.apply_rope(q, cos, sin, cfg.rope_fraction)
+    k = L.apply_rope(k, cos, sin, cfg.rope_fraction)
+    o = L.blockwise_attention(q, k, v, causal=causal, q_offset=q_offset)
+    o = ctx.constrain(o, "batch", "tensor", None, None)
+    return jnp.einsum("bsq,qd->bsd", o.reshape(B, S, H * dh),
+                      p["wo"].astype(dt))
+
+
+def _mla_attn(x, p, cfg: LMConfig, positions, ctx: ShardCtx):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    pr = {k: (v.reshape(v.shape[0], H, -1)
+              if k in ("wq", "wuk", "wuv") else v) for k, v in p.items()}
+    pr["wq"] = p["wq"].reshape(D, H, -1)
+    pr["wuk"] = p["wuk"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_head_dim)
+    pr["wuv"] = p["wuv"].reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
+    q, k, v, _ = L.mla_qkv(x, pr, cfg, positions)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    o = L.blockwise_attention(q, k, v, causal=True, scale=scale)
+    o = ctx.constrain(o, "batch", "tensor", None, None)
+    return jnp.einsum("bsq,qd->bsd", o.reshape(B, S, H * cfg.v_head_dim),
+                      p["wo"].astype(x.dtype))
+
+
+def _ffn_or_moe(x, p, cfg: LMConfig, ctx: ShardCtx, moe: bool,
+                seq_sharded: bool = True):
+    if not moe:
+        return L.swiglu_ffn(x, p["wi"].astype(x.dtype),
+                            p["wof"].astype(x.dtype))
+    shared = (p.get("ws1"), p.get("ws2"))
+    return L.moe_block(x, p["router"], p["w1"], p["w2"], shared[0], shared[1],
+                       cfg=cfg, ctx=ctx, seq_sharded=seq_sharded)
+
+
+def _block(x, p, cfg: LMConfig, rope, positions, ctx: ShardCtx, moe: bool,
+           seq_sharded: bool = True):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a = _mla_attn(h, p, cfg, positions, ctx)
+    else:
+        a = _attn(h, p, cfg, rope, ctx)
+    # §Perf iteration 0c: name the attention output so the remat policy can
+    # keep it (skips the whole attention recompute in backward) while
+    # everything else stays rematerialised.
+    x = x + _checkpoint_name(a, "attn_out")
+    x = ctx.constrain(x, "batch", "tensor", None)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _ffn_or_moe(h, p, cfg, ctx, moe, seq_sharded)
+    return ctx.constrain(x, "batch", "tensor", None)
+
+
+# full  = recompute everything (default — measured best, §Perf 0c)
+# save_attn = keep per-layer attention outputs.  Measured NO gain: the
+#   flash custom_vjp's own residuals (q,k,v,out,lse) are not covered by a
+#   named-output policy, so its forward recomputes regardless; saving the
+#   output only adds +1.5 GiB.  Kept as an ablation switch.
+_REMAT_POLICY = os.environ.get("REPRO_REMAT_POLICY", "full")
+
+
+def _scan_blocks(x, stack, fn):
+    policy = (jax.checkpoint_policies.save_only_these_names("attn_out")
+              if _REMAT_POLICY == "save_attn" else None)
+
+    def body(carry, p_l):
+        return jax.checkpoint(fn, policy=policy)(carry, p_l), None
+    out, _ = jax.lax.scan(body, x, stack)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, tokens, cfg: LMConfig, ctx: ShardCtx = LOCAL_CTX,
+               dtype=jnp.bfloat16):
+    """tokens (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = ctx.constrain(x, "batch", "tensor", None)
+    positions = jnp.arange(S)
+    rope = L.rope_tables(positions, int(cfg.d_head * cfg.rope_fraction) // 2 * 2,
+                         cfg.rope_theta)
+    if cfg.mla:
+        rope = None  # MLA computes its own tables over the rope sub-dims
+    if cfg.moe and cfg.first_k_dense:
+        fn = functools.partial(_block, cfg=cfg, rope=rope,
+                               positions=positions, ctx=ctx, moe=False)
+        x = _scan_blocks(x, params["dense_blocks"],
+                         lambda c, p: fn(c, p))
+    fn = functools.partial(_block, cfg=cfg, rope=rope, positions=positions,
+                           ctx=ctx, moe=cfg.moe)
+    x = _scan_blocks(x, params["blocks"], lambda c, p: fn(c, p))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
+    return ctx.constrain(logits, "batch", "tensor", None)
+
+
+def lm_loss(params, batch, cfg: LMConfig, ctx: ShardCtx = LOCAL_CTX,
+            dtype=jnp.bfloat16):
+    logits = lm_forward(params, batch["tokens"], cfg, ctx, dtype)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum((lse - ll) * mask) / n
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / n
+    return loss, {"loss": loss, "accuracy": acc, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    n_main = n_moe if cfg.moe else cfg.n_layers
+    if cfg.mla:
+        cache = {
+            "ckv": jnp.zeros((n_main, batch, max_len, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((n_main, batch, max_len, cfg.qk_rope_head_dim),
+                             dtype),
+        }
+        if cfg.first_k_dense:
+            cache["ckv_dense"] = jnp.zeros(
+                (cfg.first_k_dense, batch, max_len, cfg.kv_lora_rank), dtype)
+            cache["kpe_dense"] = jnp.zeros(
+                (cfg.first_k_dense, batch, max_len, cfg.qk_rope_head_dim),
+                dtype)
+        return cache
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: LMConfig, r: Rules, *, seq_axes) -> Dict[str, P]:
+    """Cache is sequence-sharded over ``seq_axes`` (see DESIGN.md: decode
+    attention reductions partition over the sharded T dim)."""
+    if cfg.mla:
+        specs = {"ckv": P(None, r.batch, seq_axes, None),
+                 "kpe": P(None, r.batch, seq_axes, None)}
+        if cfg.first_k_dense:
+            specs["ckv_dense"] = P(None, r.batch, seq_axes, None)
+            specs["kpe_dense"] = P(None, r.batch, seq_axes, None)
+        return specs
+    return {"k": P(None, r.batch, seq_axes, None, None),
+            "v": P(None, r.batch, seq_axes, None, None)}
+
+
+def _decode_attn_gqa(x, p, cfg: LMConfig, kc, vc, pos, ctx: ShardCtx):
+    B, S, D = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), \
+            v + p["bv"].astype(dt)
+    q = q.reshape(B, 1, H, dh)
+    k = k.reshape(B, 1, Hk, dh)
+    v = v.reshape(B, 1, Hk, dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    rd = int(cfg.d_head * cfg.rope_fraction) // 2 * 2
+    cos, sin = L.rope_tables(jnp.full((B, 1), pos), rd, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin, cfg.rope_fraction)
+    k = L.apply_rope(k, cos, sin, cfg.rope_fraction)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+    cache_len = jnp.full((B,), pos + 1, jnp.int32)
+    o = L.decode_attention(q, kc, vc, cache_len)
+    out = jnp.einsum("bsq,qd->bsd", o.reshape(B, 1, H * dh),
+                     p["wo"].astype(dt))
+    return out, kc, vc
+
+
+def _decode_attn_mla(x, p, cfg: LMConfig, ckv_c, kpe_c, pos, ctx: ShardCtx):
+    B = x.shape[0]
+    dt = x.dtype
+    lr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckr = jnp.einsum("bsd,dc->bsc", x, p["wdkv"].astype(dt))
+    c_kv, k_pe = ckr[..., :lr], ckr[..., lr:]
+    c_kv = L.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    cos, sin = L.rope_tables(jnp.full((B, 1), pos), rd, cfg.rope_theta)
+    k_pe = L.apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0]
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(
+        ckv_c, c_kv.astype(ckv_c.dtype), pos, 1)
+    kpe_c = jax.lax.dynamic_update_slice_in_dim(
+        kpe_c, k_pe.astype(kpe_c.dtype), pos, 1)
+    pr = dict(p)
+    pr["wq"] = p["wq"].reshape(cfg.d_model, cfg.n_heads, -1)
+    pr["wuk"] = p["wuk"].reshape(lr, cfg.n_heads, cfg.qk_nope_head_dim)
+    pr["wuv"] = p["wuv"].reshape(lr, cfg.n_heads, cfg.v_head_dim)
+    cache_len = jnp.full((B,), pos + 1, jnp.int32)
+    o = L.mla_decode_absorbed(x, pr, cfg, ckv_c, kpe_c, cache_len,
+                              jnp.full((B, 1), pos))
+    out = jnp.einsum("bsq,qd->bsd",
+                     o.reshape(B, 1, cfg.n_heads * cfg.v_head_dim),
+                     p["wo"].astype(dt))
+    return out, ckv_c, kpe_c
+
+
+def lm_decode_step(params, cache, tokens, pos, cfg: LMConfig,
+                   ctx: ShardCtx = LOCAL_CTX, dtype=jnp.bfloat16):
+    """One decode step: tokens (B, 1) at position ``pos`` (scalar int32).
+
+    Returns (logits (B, 1, V), updated cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = ctx.constrain(x, "batch", None, None)
+
+    def body_factory(moe):
+        def body(x, sliced):
+            p_l, caches = sliced
+            h = L.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            if cfg.mla:
+                a, c0, c1 = _decode_attn_mla(h, p_l, cfg, caches[0], caches[1],
+                                             pos, ctx)
+            else:
+                a, c0, c1 = _decode_attn_gqa(h, p_l, cfg, caches[0], caches[1],
+                                             pos, ctx)
+            x = x + a
+            h = L.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            x = x + _ffn_or_moe(h, p_l, cfg, ctx, moe, seq_sharded=False)
+            return ctx.constrain(x, "batch", None, None), (c0, c1)
+        return body
+
+    def scan_stack(x, stack, caches, moe):
+        def step(carry, xs):
+            p_l = xs[0]
+            cs = (xs[1], xs[2])
+            new_x, new_cs = body_factory(moe)(carry, (p_l, cs))
+            return new_x, new_cs
+        x, new_caches = jax.lax.scan(step, x, (stack, caches[0], caches[1]))
+        return x, new_caches
+
+    if cfg.mla:
+        c_names = ("ckv", "kpe")
+    else:
+        c_names = ("k", "v")
+
+    new_cache = dict(cache)
+    if cfg.moe and cfg.first_k_dense:
+        x, (cd0, cd1) = scan_stack(
+            x, params["dense_blocks"],
+            (cache[c_names[0] + "_dense"], cache[c_names[1] + "_dense"]),
+            moe=False)
+        new_cache[c_names[0] + "_dense"] = cd0
+        new_cache[c_names[1] + "_dense"] = cd1
+    x, (c0, c1) = scan_stack(x, params["blocks"],
+                             (cache[c_names[0]], cache[c_names[1]]),
+                             moe=cfg.moe)
+    new_cache[c_names[0]] = c0
+    new_cache[c_names[1]] = c1
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
+    return logits, new_cache
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, ctx: ShardCtx = LOCAL_CTX,
+               dtype=jnp.bfloat16):
+    """Prefill pass: returns last-position logits (B, V).  (The dry-run cell
+    lowers the attention/FFN pipeline at (32, 32768); cache write-back is the
+    decode path's job and is exercised by serve_step.)"""
+    logits = lm_forward(params, tokens, cfg, ctx, dtype)
+    return logits[:, -1]

@@ -1,0 +1,14 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    cosine_lr,
+    global_norm,
+    opt_state_specs,
+)
+from repro.optim.compress import (  # noqa: F401
+    compress_decompress,
+    ef_compress_grads,
+    ef_init,
+)

@@ -1,0 +1,86 @@
+"""AdamW + cosine schedule + global-norm clipping (from scratch, no optax)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(step, cfg: OptimizerConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_specs) -> Dict[str, Any]:
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(step, cfg)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    new = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([n[0] for n in new])
+    new_m = tdef.unflatten([n[1] for n in new])
+    new_v = tdef.unflatten([n[2] for n in new])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

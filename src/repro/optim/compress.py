@@ -1,0 +1,41 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+On a real cluster this halves/quarters the gradient all-reduce bytes (the
+dominant collective for pure-DP scaling); error feedback keeps convergence
+(1-bit Adam / EF-SGD lineage).  The quantise->dequantise pair is inserted
+*before* the psum so XLA reduces int8-scaled tensors; here we model it as
+q(dq(g)) + residual carry, which is numerically identical on 1 device and
+unit-tested for the EF invariant (residual + transmitted == original).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_decompress(g: jax.Array, bits: int = 8):
+    """Symmetric per-tensor int quantisation; returns (dequantised, residual)."""
+    gf = g.astype(jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(gf / scale), -qmax, qmax)
+    dq = q * scale
+    return dq.astype(g.dtype), (gf - dq).astype(jnp.float32)
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def ef_compress_grads(grads, residuals, bits: int = 8):
+    """Error-feedback: compress (grad + residual), carry the new residual."""
+    def one(g, r):
+        dq, new_r = compress_decompress(g.astype(jnp.float32) + r, bits)
+        return dq, new_r
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([p[0] for p in pairs]), \
+        tdef.unflatten([p[1] for p in pairs])

@@ -1,0 +1,91 @@
+"""ANNS serving front-end: request queue + dynamic batching.
+
+The paper's prototype binds one CPU thread per query (§5); the TPU
+adaptation's natural unit is a *batch* per scan (kernels/pq_adc_batch).
+This front-end bridges the two: requests accumulate until ``max_batch`` or
+``max_wait_s`` elapses, then one fused scan serves the whole window
+(inter-query candidate dedup included — engine.query_batch_fused).
+
+Synchronous harness (no asyncio dependency): callers enqueue requests and
+``pump()`` drains windows; on a real deployment the pump loop runs in a
+dedicated thread per replica."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import FusionANNSIndex, QueryResult
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    query: np.ndarray
+    t_enqueue: float
+    k: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    result: QueryResult
+    t_queue_s: float          # time spent waiting for the batch window
+    t_serve_s: float          # batch execution time (shared)
+    batch_size: int
+
+
+class BatchingANNSService:
+    def __init__(self, index: FusionANNSIndex, *, max_batch: int = 32,
+                 max_wait_s: float = 0.002):
+        self.index = index
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queue: Deque[Request] = deque()
+        self._next_rid = 0
+        self.stats: Dict[str, float] = {
+            "batches": 0, "requests": 0, "mean_batch": 0.0}
+
+    def submit(self, query: np.ndarray, k: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(query, np.float32),
+                                   time.perf_counter(), k))
+        return rid
+
+    def _window_ready(self, now: float) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        return (now - self._queue[0].t_enqueue) >= self.max_wait_s
+
+    def pump(self, force: bool = False) -> List[Response]:
+        """Serve at most one batch window; returns its responses."""
+        now = time.perf_counter()
+        if not (force and self._queue) and not self._window_ready(now):
+            return []
+        batch = [self._queue.popleft()
+                 for _ in range(min(self.max_batch, len(self._queue)))]
+        queries = np.stack([r.query for r in batch])
+        t0 = time.perf_counter()
+        results = self.index.query_batch_fused(queries)
+        t_serve = time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        self.stats["mean_batch"] = (self.stats["requests"]
+                                    / self.stats["batches"])
+        return [Response(rid=r.rid, result=res,
+                         t_queue_s=t0 - r.t_enqueue, t_serve_s=t_serve,
+                         batch_size=len(batch))
+                for r, res in zip(batch, results)]
+
+    def drain(self) -> List[Response]:
+        out: List[Response] = []
+        while self._queue:
+            out.extend(self.pump(force=True))
+        return out

@@ -1,0 +1,99 @@
+"""LM serving engine: prefill + greedy/temperature decode with the KV cache,
+plus the RAG front-end that wires FusionANNS retrieval into generation
+(paper Fig. 1)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as tfm
+from repro.models.layers import LOCAL_CTX, ShardCtx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0          # 0 = greedy
+    cache_dtype: Any = jnp.float32
+
+
+class LMServer:
+    """Static-batched decode server (one shared position counter, the
+    production pattern exercised by the decode_32k / long_500k cells)."""
+
+    def __init__(self, params, cfg: LMConfig, scfg: ServeConfig = ServeConfig(),
+                 ctx: ShardCtx = LOCAL_CTX):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.ctx = ctx
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,),
+                               static_argnums=())
+
+    def _decode_impl(self, params, cache, tokens, pos, key):
+        logits, cache = tfm.lm_decode_step(params, cache, tokens, pos,
+                                           self.cfg, self.ctx,
+                                           dtype=jnp.float32)
+        if self.scfg.temperature > 0:
+            nxt = jax.random.categorical(
+                key, logits[:, -1] / self.scfg.temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 seed: int = 0) -> Dict[str, Any]:
+        """prompts (B, P) int32 -> generated (B, n_tokens)."""
+        B, P = prompts.shape
+        cache = tfm.init_kv_cache(self.cfg, B, self.scfg.max_len,
+                                  dtype=self.scfg.cache_dtype)
+        key = jax.random.key(seed)
+        # prefill token-by-token through the decode path (correct though
+        # not the fast path; the prefill cell lowers the batched version)
+        toks = jnp.asarray(prompts[:, :1], jnp.int32)
+        t0 = time.perf_counter()
+        for p in range(P):
+            toks = jnp.asarray(prompts[:, p:p + 1], jnp.int32)
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode(self.params, cache, toks, p, sub)
+        out = [nxt]
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode(self.params, cache, out[-1], P + i, sub)
+            out.append(nxt)
+        dt = time.perf_counter() - t0
+        gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+        return {"tokens": gen,
+                "tokens_per_s": B * (P + n_tokens) / dt,
+                "wall_s": dt}
+
+
+class RAGPipeline:
+    """Retrieval-augmented generation: FusionANNS retrieves the top-k
+    context vectors for the query embedding; their ids become context
+    tokens prepended to the prompt (paper Fig. 1 flow)."""
+
+    def __init__(self, anns_index, lm_server: LMServer,
+                 embed_fn: Optional[Callable] = None):
+        self.index = anns_index
+        self.server = lm_server
+        self.embed = embed_fn or (lambda toks: None)
+
+    def answer(self, query_vec: np.ndarray, prompt: np.ndarray,
+               n_tokens: int = 16, k: int = 4) -> Dict[str, Any]:
+        res = self.index.query(query_vec, k=k)
+        vocab = self.server.cfg.vocab_size
+        ctx_tokens = (res.ids.astype(np.int64) % vocab).astype(np.int32)
+        full = np.concatenate([ctx_tokens[None, :], prompt], axis=1)
+        out = self.server.generate(full, n_tokens)
+        out["retrieved_ids"] = res.ids
+        out["retrieval_stats"] = res.stats
+        return out

@@ -1,0 +1,9 @@
+from repro.sharding.spec import (  # noqa: F401
+    Rules,
+    SINGLE_POD_RULES,
+    MULTI_POD_RULES,
+    LOCAL_RULES,
+    constrain,
+    local_rules_for_mesh,
+    rules_for_mesh,
+)

@@ -1,0 +1,10 @@
+from repro.train.loop import TrainConfig, init_state, make_train_step, run  # noqa: F401
+from repro.train import checkpoint  # noqa: F401
+from repro.train.fault import (  # noqa: F401
+    FaultInjector,
+    StepDeadline,
+    StragglerTimeout,
+    WorkerFailure,
+    reshard_state,
+    supervise,
+)

@@ -1,0 +1,102 @@
+"""Training loop: jit'd train_step factory (grad-accum microbatching,
+optional gradient compression), metrics, periodic checkpointing."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptimizerConfig, adamw_init, adamw_update
+from repro.optim.compress import ef_compress_grads, ef_init
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1               # gradient accumulation steps
+    grad_compress_bits: int = 0         # 0 = off; 8 = int8 EF compression
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    keep_ckpts: int = 3
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns jit-able
+    train_step(state, batch) -> (state, metrics); state = (params,
+    opt_state[, ef_residuals])."""
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        # grad accumulation over the leading batch dim via lax.scan
+        def split(x):
+            b = x.shape[0]
+            mb = tcfg.microbatches
+            return x.reshape(mb, b // mb, *x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, mb):
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            return acc, metrics
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(body, zeros, micro)
+        grads = jax.tree_util.tree_map(
+            lambda g: g / tcfg.microbatches, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        grads, metrics = compute_grads(params, batch)
+        if tcfg.grad_compress_bits:
+            grads, residuals = ef_compress_grads(
+                grads, state["ef"], tcfg.grad_compress_bits)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, tcfg.opt)
+        metrics = {**metrics, **opt_metrics}
+        new_state = {"params": new_params, "opt": new_opt}
+        if tcfg.grad_compress_bits:
+            new_state["ef"] = residuals
+        return new_state, metrics
+
+    return train_step
+
+
+def init_state(params, tcfg: TrainConfig):
+    state = {"params": params, "opt": adamw_init(params)}
+    if tcfg.grad_compress_bits:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def run(train_step, state, batches, tcfg: TrainConfig, *,
+        start_step: int = 0, log_every: int = 10,
+        on_step: Optional[Callable[[int], None]] = None):
+    """Drive the loop over an iterable of batches.  ``on_step`` is the fault
+    injection / monitoring hook used by the supervisor tests."""
+    history = []
+    step = start_step
+    t0 = time.time()
+    for batch in batches:
+        if on_step is not None:
+            on_step(step)
+        state, metrics = train_step(state, batch)
+        step += 1
+        if step % log_every == 0 or step == start_step + 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.time() - t0
+            history.append(m)
+        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
+            ckpt_lib.save(tcfg.ckpt_dir, step, state, keep=tcfg.keep_ckpts)
+    return state, step, history

@@ -1,0 +1,123 @@
+"""SSD-tier invariants: packing, dedup, buffer (paper §4.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.io_sim import (IOStats, PageBuffer, SSDSim, StorageLayout,
+                               pack_buckets_maxmin)
+
+
+@settings(max_examples=50, deadline=None)
+@given(sizes=st.lists(st.integers(0, 100), min_size=1, max_size=40),
+       per_page=st.integers(1, 32))
+def test_maxmin_packing_valid(sizes, per_page):
+    groups, n_pages = pack_buckets_maxmin(sizes, per_page)
+    # every remainder bucket appears exactly once
+    flat = [b for g in groups for b in g]
+    expect = [i for i, s in enumerate(sizes) if s % per_page]
+    assert sorted(flat) == sorted(expect)
+    # no shared page overflows
+    for g in groups:
+        assert sum(sizes[b] % per_page for b in g) <= per_page
+    # page count >= lower bound (total vectors / per_page)
+    assert n_pages >= -(-sum(sizes) // per_page)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 400), n_clusters=st.integers(1, 20),
+       vec_bytes=st.sampled_from([128, 256, 384]), seed=st.integers(0, 99))
+def test_layout_maps_every_vector(n, n_clusters, vec_bytes, seed):
+    rng = np.random.default_rng(seed)
+    primary = rng.integers(0, n_clusters, n).astype(np.int64)
+    lay = StorageLayout.build(primary, n_clusters, vec_bytes)
+    assert lay.page_of.shape == (n,)
+    assert (lay.page_of >= 0).all() and (lay.page_of < lay.n_pages).all()
+    # page occupancy never exceeds per_page
+    occ = np.bincount(lay.page_of)
+    assert occ.max() <= lay.per_page
+
+
+def test_optimized_layout_uses_fewer_or_equal_pages(rng):
+    primary = rng.integers(0, 16, 500).astype(np.int64)
+    opt = StorageLayout.build(primary, 16, 384, optimized=True)
+    raw = StorageLayout.build(primary, 16, 384, optimized=False)
+    assert opt.n_pages <= raw.n_pages + 16  # within remainder slack
+
+
+def test_same_cluster_vectors_share_pages(rng):
+    """Spatial locality: vectors of one bucket occupy contiguous pages."""
+    primary = np.repeat(np.arange(4), 100).astype(np.int64)
+    lay = StorageLayout.build(primary, 4, 384)
+    for c in range(4):
+        pages = np.unique(lay.page_of[primary == c])
+        # 100 vectors * 384B / 4096 ~ 10 pages
+        assert len(pages) <= 11
+
+
+def _mk_ssd(rng, n=300, intra=True, buf=True, buffer_pages=64):
+    data = rng.standard_normal((n, 32)).astype(np.float32)
+    primary = rng.integers(0, 10, n).astype(np.int64)
+    lay = StorageLayout.build(primary, 10, 128)
+    return data, SSDSim(data, lay, buffer_pages=buffer_pages,
+                        intra_merge=intra, use_buffer=buf)
+
+
+def test_fetch_returns_correct_vectors(rng):
+    data, ssd = _mk_ssd(rng)
+    stats = ssd.begin_query()
+    ids = np.array([5, 17, 42, 5, 99])
+    out = ssd.fetch(ids, stats)
+    np.testing.assert_array_equal(out, data[ids])
+
+
+def test_intra_batch_merge_reduces_ios(rng):
+    data, ssd_on = _mk_ssd(rng, intra=True, buf=False)
+    _, ssd_off = _mk_ssd(rng, intra=False, buf=False)
+    ids = np.arange(60)          # dense range -> many same-page hits
+    s_on, s_off = ssd_on.begin_query(), ssd_off.begin_query()
+    ssd_on.fetch(ids, s_on)
+    ssd_off.fetch(ids, s_off)
+    assert s_on.ios < s_off.ios
+    assert s_on.pages_requested == s_off.pages_requested == 60
+
+
+def test_buffer_dedups_across_batches(rng):
+    data, ssd = _mk_ssd(rng, buf=True)
+    stats = ssd.begin_query()
+    ids = np.arange(40)
+    ssd.fetch(ids, stats)
+    first = stats.ios
+    ssd.fetch(ids, stats)        # second mini-batch, same pages
+    assert stats.ios == first    # all buffer hits
+    assert stats.buffer_hits > 0
+
+
+def test_buffer_scope_is_per_query(rng):
+    data, ssd = _mk_ssd(rng, buf=True)
+    s1 = ssd.begin_query()
+    ssd.fetch(np.arange(20), s1)
+    s2 = ssd.begin_query()       # new query clears the buffer
+    ssd.fetch(np.arange(20), s2)
+    assert s2.ios == s1.ios and s2.buffer_hits == 0
+
+
+def test_lru_eviction(rng):
+    buf = PageBuffer(capacity_pages=2)
+    buf.insert(1), buf.insert(2), buf.insert(3)
+    assert not buf.hit(1) and buf.hit(2) and buf.hit(3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), n_ids=st.integers(1, 80))
+def test_dedup_never_increases_ios(seed, n_ids):
+    rng = np.random.default_rng(seed)
+    data, ssd_opt = _mk_ssd(rng, intra=True, buf=True)
+    rng = np.random.default_rng(seed)
+    data, ssd_raw = _mk_ssd(rng, intra=False, buf=False)
+    ids = np.random.default_rng(seed).integers(0, 300, n_ids)
+    s_o, s_r = ssd_opt.begin_query(), ssd_raw.begin_query()
+    o = ssd_opt.fetch(ids, s_o)
+    r = ssd_raw.fetch(ids, s_r)
+    np.testing.assert_array_equal(o, r)      # dedup never changes results
+    assert s_o.ios <= s_r.ios

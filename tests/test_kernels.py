@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pq_adc import pq_adc, pq_adc_topk, pq_adc_ref
+from repro.kernels.pq_adc.pq_adc import pq_adc_scan, pq_adc_scan_topk
+from repro.kernels.l2dist import l2_distances, l2dist_ref
+from repro.kernels.l2dist.l2dist import l2dist
+
+
+@pytest.mark.parametrize("n,m,block", [
+    (64, 8, 64), (256, 16, 64), (1000, 32, 128), (4096, 25, 1024),
+    (100, 8, 1024),   # n < block
+])
+def test_pq_adc_matches_ref(rng, n, m, block):
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.random((m, 256)), jnp.float32)
+    out = pq_adc(codes, lut, block_n=block)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(pq_adc_ref(codes, lut)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("k_entries", [16, 64, 256])
+def test_pq_adc_lut_widths(rng, k_entries):
+    # nbits < 8 style LUTs (fewer centroids) must still index correctly
+    n, m = 128, 8
+    codes = jnp.asarray(rng.integers(0, k_entries, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.random((m, k_entries)), jnp.float32)
+    out = pq_adc_scan(codes, lut, block_n=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(pq_adc_ref(codes, lut)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,m,topk,block", [
+    (256, 8, 10, 64), (1024, 16, 50, 256), (555, 8, 10, 128),
+])
+def test_pq_adc_topk_fused(rng, n, m, topk, block):
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.random((m, 256)), jnp.float32)
+    vals, ids = pq_adc_topk(codes, lut, topk, block_n=block)
+    ref = np.asarray(pq_adc_ref(codes, lut))
+    ref_sorted = np.sort(ref)[:topk]
+    np.testing.assert_allclose(np.sort(np.asarray(vals)), ref_sorted,
+                               rtol=1e-5)
+    # ids must actually achieve those distances
+    np.testing.assert_allclose(np.sort(ref[np.asarray(ids)]), ref_sorted,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,d,dtype", [
+    (1, 64, 32, jnp.float32), (8, 256, 96, jnp.float32),
+    (16, 100, 128, jnp.bfloat16), (128, 1000, 100, jnp.float32),
+])
+def test_l2dist_matches_ref(rng, b, n, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    out = l2_distances(q, v, block_q=32, block_n=128)
+    ref = l2dist_ref(q, v)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_l2dist_self_distance_zero(rng):
+    v = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    d = np.asarray(l2_distances(v, v, block_q=32, block_n=32))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,b,m", [(512, 4, 8), (1000, 8, 16), (2048, 16, 32)])
+def test_pq_adc_batch_matches_ref(rng, n, b, m):
+    from repro.kernels.pq_adc import pq_adc_batch, pq_adc_batch_ref
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    luts = jnp.asarray(rng.random((b, m, 256)), jnp.float32)
+    out = pq_adc_batch(codes, luts, block_n=256)
+    ref = pq_adc_batch_ref(codes, luts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,Hk,dh,causal,bq,bk", [
+    (2, 16, 4, 2, 8, True, 8, 8),
+    (1, 32, 2, 2, 16, False, 16, 8),
+    (2, 64, 6, 3, 8, True, 16, 16),
+    (1, 24, 4, 1, 8, True, 8, 8),       # MQA
+    (1, 16, 2, 2, 8, True, 16, 16),     # single block
+])
+def test_flash_attention_kernel_matches_ref(rng, B, S, H, Hk, dh, causal,
+                                            bq, bk):
+    from repro.kernels.flash_attn import flash_attention, flash_attn_ref
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hk, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hk, dh)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = flash_attn_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_kernel_bf16(rng):
+    from repro.kernels.flash_attn import flash_attention, flash_attn_ref
+    q = jnp.asarray(rng.standard_normal((1, 32, 4, 8)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = flash_attn_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,51 @@
+"""Required per-arch smoke tests: every assigned architecture x shape runs a
+REDUCED forward/train step on CPU, asserting output shapes + no NaNs."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import shapes_for
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.api import build_cell, realize
+
+CASES = [(a, s.shape_id) for a in ARCH_IDS
+         for s in shapes_for(get_config(a, reduced=True))]
+
+
+@pytest.mark.parametrize("arch,shape", CASES,
+                         ids=[f"{a}-{s}" for a, s in CASES])
+def test_smoke_cell(arch, shape):
+    cell = build_cell(arch, shape, mesh=None, reduced=True)
+    args = realize(cell)
+    out = jax.jit(cell.fn)(*args)
+    leaves = jax.tree_util.tree_leaves(out)
+    assert leaves, "step returned nothing"
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.isfinite(arr).all(), f"NaN/Inf in {arch}/{shape}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_instantiates(arch):
+    """The FULL published configs must at least build their abstract cell
+    (shapes/specs consistent) without allocation."""
+    cfg = get_config(arch)
+    shape = shapes_for(cfg)[0].shape_id
+    cell = build_cell(arch, shape, mesh=None, reduced=False)
+    assert cell.args
+
+
+def test_lm_train_loss_is_sane():
+    """Reduced LM: initial loss ~ ln(vocab)."""
+    import jax.numpy as jnp
+    from repro.data.synthetic import lm_batch
+    from repro.models import transformer as tfm
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = tfm.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    b = lm_batch(rng, 2, 32, cfg.vocab_size)
+    loss, _ = tfm.lm_loss(params, {k: jnp.asarray(v) for k, v in b.items()},
+                          cfg, dtype=jnp.float32)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 0.5

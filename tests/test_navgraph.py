@@ -1,0 +1,60 @@
+"""Navigation graph build + search quality."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import navgraph as ng
+from repro.data.synthetic import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(0)
+    pts = clustered_vectors(rng, 400, 16, n_clusters=12)
+    return pts, ng.build_navgraph(pts, degree=16)
+
+
+def test_graph_structure(graph):
+    pts, g = graph
+    assert g.neighbors.shape[0] == 400
+    assert (g.neighbors < 400).all()
+    # every non-entry vertex has at least one neighbour
+    assert ((g.neighbors >= 0).sum(1)[1:] >= 1).all()
+
+
+def test_search_recall_vs_bruteforce(graph):
+    pts, g = graph
+    rng = np.random.default_rng(1)
+    hits, total = 0, 0
+    for _ in range(20):
+        q = pts[rng.integers(0, 400)] + 0.05 * rng.standard_normal(16) \
+            .astype(np.float32)
+        found = ng.search(g, q, top_m=10)
+        exact = np.argsort(np.sum((pts - q) ** 2, -1))[:10]
+        hits += len(set(found.tolist()) & set(exact.tolist()))
+        total += 10
+    assert hits / total >= 0.85
+
+
+def test_search_returns_sorted_by_distance(graph):
+    pts, g = graph
+    q = pts[7]
+    found = ng.search(g, q, top_m=8)
+    d = np.sum((pts[found] - q) ** 2, -1)
+    assert (np.diff(d) >= -1e-5).all()
+
+
+def test_jax_search_matches_host_quality(graph):
+    pts, g = graph
+    rng = np.random.default_rng(2)
+    q = pts[rng.integers(0, 400)] + 0.05 * rng.standard_normal(16) \
+        .astype(np.float32)
+    ids_host = ng.search(g, q, top_m=10)
+    seeds = jnp.arange(0, len(pts), 8)      # stratified device-side seeds
+    ids_dev, _ = ng.search_jax(jnp.asarray(pts), jnp.asarray(g.neighbors),
+                               g.entry, jnp.asarray(q), 10, seeds=seeds)
+    exact = set(np.argsort(np.sum((pts - q) ** 2, -1))[:10].tolist())
+    dev_hits = len(set(np.asarray(ids_dev).tolist()) & exact)
+    host_hits = len(set(ids_host.tolist()) & exact)
+    assert dev_hits >= host_hits - 3      # same ballpark quality

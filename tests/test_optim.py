@@ -1,0 +1,83 @@
+"""Optimizer + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import (OptimizerConfig, adamw_init, adamw_update,
+                               cosine_lr, global_norm)
+from repro.optim.compress import compress_decompress, ef_compress_grads, \
+    ef_init
+
+
+def test_adamw_optimizes_quadratic():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2.0 * params["w"]}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0,
+                          total_steps=10)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    big = {"w": jnp.full(4, 1e6)}
+    new, state, m = adamw_update(big, state, params, cfg)
+    assert np.isfinite(np.asarray(new["w"])).all()
+    assert float(m["grad_norm"]) > 1.0    # recorded pre-clip
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    lrs = [float(cosine_lr(jnp.asarray(s), cfg)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, rel=1e-3)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 999), bits=st.sampled_from([4, 8]))
+def test_ef_invariant(seed, bits):
+    """Error feedback: transmitted + residual == grad + old residual."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    r = jnp.asarray(0.1 * rng.standard_normal(64), jnp.float32)
+    dq, new_r = compress_decompress(g + r, bits)
+    np.testing.assert_allclose(np.asarray(dq + new_r), np.asarray(g + r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compression_reduces_information_but_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    dq, res = compress_decompress(g, 8)
+    scale = float(jnp.max(jnp.abs(g))) / 127
+    assert float(jnp.max(jnp.abs(res))) <= scale  # quantisation bound
+
+
+def test_ef_training_converges():
+    """int8-EF AdamW still optimizes (convergence sanity)."""
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=300,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([4.0, -2.0, 1.0])}
+    state = adamw_init(params)
+    residual = ef_init(params)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        grads, residual = ef_compress_grads(grads, residual, 8)
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

@@ -1,0 +1,89 @@
+"""Heuristic re-ranking (Algorithm 1) invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.io_sim import SSDSim, StorageLayout
+from repro.core.rerank import heuristic_rerank, heuristic_rerank_jax
+
+
+def _setup(rng, n=200, d=16):
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    primary = rng.integers(0, 8, n).astype(np.int64)
+    lay = StorageLayout.build(primary, 8, 4 * d)
+    return data, SSDSim(data, lay)
+
+
+def test_full_rerank_equals_bruteforce(rng):
+    data, ssd = _setup(rng)
+    q = rng.standard_normal(16).astype(np.float32)
+    cand = np.arange(200)
+    rr = heuristic_rerank(q, cand, ssd, k=10, batch_size=32,
+                          disable_early_stop=True)
+    exact = np.argsort(np.sum((data - q) ** 2, -1))[:10]
+    np.testing.assert_array_equal(np.sort(rr.ids), np.sort(exact))
+    assert rr.batches_run == 200 // 32 + 1
+
+
+def test_dists_ascending(rng):
+    data, ssd = _setup(rng)
+    q = rng.standard_normal(16).astype(np.float32)
+    rr = heuristic_rerank(q, np.arange(100), ssd, k=10)
+    assert (np.diff(rr.dists) >= -1e-6).all()
+
+
+def test_early_stop_reduces_work(rng):
+    data, ssd = _setup(rng)
+    q = data[0] + 0.01 * rng.standard_normal(16).astype(np.float32)
+    # candidates sorted by true distance => heap stabilises fast
+    order = np.argsort(np.sum((data - q) ** 2, -1))
+    rr_es = heuristic_rerank(q, order, ssd, k=10, batch_size=16,
+                             eps=0.05, beta=2)
+    rr_full = heuristic_rerank(q, order, ssd, k=10, batch_size=16,
+                               disable_early_stop=True)
+    assert rr_es.batches_run < rr_full.batches_run
+    assert rr_es.early_stopped
+    # early stop on sorted candidates must not hurt the result here
+    np.testing.assert_array_equal(rr_es.ids, rr_full.ids)
+
+
+def test_beta_delays_termination(rng):
+    data, ssd = _setup(rng)
+    q = rng.standard_normal(16).astype(np.float32)
+    order = np.argsort(np.sum((data - q) ** 2, -1))
+    b1 = heuristic_rerank(q, order, ssd, k=10, batch_size=16, beta=1)
+    b3 = heuristic_rerank(q, order, ssd, k=10, batch_size=16, beta=3)
+    assert b1.batches_run <= b3.batches_run
+
+
+def test_jax_version_matches_host(rng):
+    data, ssd = _setup(rng, n=128)
+    q = rng.standard_normal(16).astype(np.float32)
+    order = np.argsort(np.sum((data - q) ** 2, -1)).astype(np.int32)
+    host = heuristic_rerank(q, order, ssd, k=8, batch_size=16, eps=0.05,
+                            beta=2)
+    ids, dists, batches = heuristic_rerank_jax(
+        jnp.asarray(q), jnp.asarray(data[order]), jnp.asarray(order), 8,
+        batch_size=16, eps=0.05, beta=2)
+    assert int(batches) == host.batches_run
+    np.testing.assert_array_equal(np.sort(np.asarray(ids)),
+                                  np.sort(host.ids))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), k=st.integers(1, 20),
+       batch=st.sampled_from([8, 16, 32]))
+def test_topk_is_prefix_optimal(seed, k, batch):
+    """Whatever prefix Alg. 1 scans, its output is the exact top-k of that
+    prefix (the heap never loses a better candidate)."""
+    rng = np.random.default_rng(seed)
+    data, ssd = _setup(rng, n=160)
+    q = rng.standard_normal(16).astype(np.float32)
+    cand = rng.permutation(160)
+    rr = heuristic_rerank(q, cand, ssd, k=k, batch_size=batch)
+    scanned = cand[:rr.batches_run * batch]
+    d = np.sum((data[scanned] - q) ** 2, -1)
+    expect = scanned[np.argsort(d)[:k]]
+    np.testing.assert_array_equal(np.sort(rr.ids), np.sort(expect))

@@ -1,0 +1,66 @@
+"""Incremental index maintenance (SPFresh-style insert/delete)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.anns_datasets import SIFT_SMALL
+from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
+from repro.data.synthetic import clustered_vectors
+
+
+@pytest.fixture()
+def index_and_data(rng):
+    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=3000, dim=32,
+                              n_posting_fraction=0.02)
+    data = clustered_vectors(rng, cfg.n_vectors + 40, cfg.dim, n_clusters=24)
+    return cfg, data[:3000], data[3000:3020], data[3020:], \
+        FusionANNSIndex.build(data[:3000], cfg)
+
+
+def test_inserted_vectors_are_findable(index_and_data, rng):
+    cfg, data, new_vecs, queries, index = index_and_data
+    new_ids = index.insert(new_vecs)
+    assert len(new_ids) == 20
+    # querying AT an inserted vector must return it as the nearest
+    hits = 0
+    for i, v in enumerate(new_vecs):
+        res = index.query(v, k=1)
+        hits += int(res.ids[0] == new_ids[i])
+    assert hits >= 18     # tight clusters; PQ may swap exact ties
+
+
+def test_insert_preserves_existing_recall(index_and_data):
+    cfg, data, new_vecs, queries, index = index_and_data
+    gt = ground_truth(data, queries, 10)
+    before = recall_at_k(np.stack(
+        [index.query(q).ids for q in queries]), gt, 10)
+    index.insert(new_vecs)
+    full = np.concatenate([data, new_vecs.astype(data.dtype)])
+    gt2 = ground_truth(full, queries, 10)
+    after = recall_at_k(np.stack(
+        [index.query(q).ids for q in queries]), gt2, 10)
+    assert after >= before - 0.1
+
+
+def test_delete_tombstones(index_and_data):
+    cfg, data, new_vecs, queries, index = index_and_data
+    q = data[5]
+    res = index.query(q, k=5)
+    victim = res.ids[0]
+    index.delete(np.array([victim]))
+    res2 = index.query(q, k=5)
+    assert victim not in set(res2.ids.tolist())
+
+
+def test_insert_extends_all_tiers(index_and_data):
+    cfg, data, new_vecs, queries, index = index_and_data
+    n0 = len(index.ssd.vectors)
+    p0 = index.ssd.layout.n_pages
+    index.insert(new_vecs)
+    assert len(index.ssd.vectors) == n0 + 20          # SSD tier
+    assert index.codes.shape[0] == n0 + 20            # HBM tier
+    assert index.ssd.layout.n_pages > p0              # fresh pages
+    total_members = sum(len(m) for m in index.posting.members)
+    assert total_members >= n0 + 20                   # DRAM metadata
