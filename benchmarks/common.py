@@ -66,9 +66,17 @@ def bundle(dataset: str = "sift", n: int = BENCH_N) -> Bundle:
     return Bundle(cfg=cfg, data=data, queries=queries, gt=gt, index=index)
 
 
-def fusion_demand(index: FusionANNSIndex, queries, **kw) -> Dict:
-    """Measured per-query demands + recall for the FusionANNS engine."""
-    results = [index.query(q, **kw) for q in queries]
+def fusion_demand(index: FusionANNSIndex, queries, *, fused: bool = False,
+                  **kw) -> Dict:
+    """Measured per-query demands + recall for the FusionANNS engine.
+
+    ``fused=True`` routes the whole query set through one executor window
+    (inter-query candidate dedup + one union scan), so the per-query
+    h2d/scan demands reflect the batched operating point."""
+    if fused:
+        results = index.query_batch_fused(queries, **kw)
+    else:
+        results = [index.query(q, **kw) for q in queries]
     stats = [r.stats for r in results]
     m = index.cfg.pq_m
     demand = QueryDemand(

@@ -33,6 +33,10 @@ def run():
         fus = fusion_demand(b.index, b.queries)
         systems["FusionANNS"] = (fus["demand"],
                                  np.stack([r.ids for r in fus["results"]]))
+        # executor window mode: union scan + inter-query dedup (§4.3 on HBM)
+        fusb = fusion_demand(b.index, b.queries, fused=True)
+        systems["FusionANNS-batched"] = (
+            fusb["demand"], np.stack([r.ids for r in fusb["results"]]))
         sp = [SpannLike(b.index, b.data).query(q, 10, b.cfg.top_m)
               for q in b.queries]
         systems["SPANN"] = (_mean_demand(sp), np.stack([r.ids for r in sp]))

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.l2dist import l2_distances
-from repro.kernels.pq_adc import pq_adc, pq_adc_topk
+from repro.kernels.pq_adc import pq_adc, pq_adc_topk, pq_adc_topk_batch
 
 
 def _time(fn, *args, iters=20):
@@ -35,6 +35,19 @@ def run():
                    codes, lut)
         rows.append({"name": f"kern.pq_adc_topk.n{n}", "us_per_call": us,
                      "derived": "fused scan+topk (jnp path)"})
+    # the executor's windowed scan: B queries amortise one pass over the
+    # codes; the mask is the per-query candidate membership (stage ⑤)
+    n, m, b = 65536, 32, 8
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    luts = jnp.asarray(rng.random((b, m, 256)), jnp.float32)
+    mask = jnp.asarray(rng.random((b, n)) < 0.1)
+    us = _time(lambda c, l, mk: pq_adc_topk_batch(c, l, 256, mask=mk,
+                                                  use_kernel=False),
+               codes, luts, mask)
+    rows.append({"name": f"kern.pq_adc_topk_batch.b{b}.n{n}",
+                 "us_per_call": us,
+                 "derived": f"lookups_per_s={b * n * m / (us / 1e6):.2e} "
+                            "(executor window scan; masked)"})
     q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
     us = _time(lambda a, b: l2_distances(a, b, use_kernel=False), q, v)

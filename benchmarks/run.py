@@ -2,9 +2,18 @@
 ``name,us_per_call,derived`` CSV (harness contract)."""
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+# allow `python -m benchmarks.run` / `python benchmarks/run.py` without a
+# PYTHONPATH=src export
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 from benchmarks import (beyond_fused_batch, fig3_spann_scaling, fig4_combos,
                         fig5_rerank, fig9_throughput_latency,
@@ -29,7 +38,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=sorted(ALL),
                     help="run a subset of figures")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the fast correctness smoke (scripts/check.sh "
+                         "smoke); add --only to continue to those figures "
+                         "afterwards, else only a selftest row is emitted")
     args = ap.parse_args()
+    if args.selftest:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        rc = subprocess.run(
+            ["bash", os.path.join(root, "scripts", "check.sh"), "smoke"],
+            cwd=root).returncode
+        if rc != 0:
+            print(f"# selftest FAILED (rc={rc})", file=sys.stderr)
+            sys.exit(rc)
+        print("# selftest passed", file=sys.stderr)
+        if not args.only:                 # keep the CSV contract
+            print("name,us_per_call,derived")
+            print("selftest,0.0,scripts/check.sh smoke passed")
+            return
     names = args.only or list(ALL)
     print("name,us_per_call,derived")
     ok = True

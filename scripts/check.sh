@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 gate + smoke targets.
+#
+#   scripts/check.sh            tier-1: full default suite (slow deselected
+#                               via pytest.ini), no pytest cache, hard
+#                               wall-clock guard
+#   scripts/check.sh smoke      fast executor/engine subset (used by
+#                               benchmarks/run.py --selftest)
+#   scripts/check.sh full       everything, including @slow system tests
+#
+# CHECK_TIMEOUT overrides the guard (seconds).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MODE="${1:-tier1}"
+case "$MODE" in
+  smoke)
+    exec timeout "${CHECK_TIMEOUT:-300}" \
+      python -m pytest -x -q -p no:cacheprovider \
+        tests/test_executor.py tests/test_engine.py tests/test_updates.py
+    ;;
+  tier1)
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider
+    ;;
+  full)
+    exec timeout "${CHECK_TIMEOUT:-1800}" \
+      python -m pytest -x -q -p no:cacheprovider -m ""
+    ;;
+  *)
+    echo "usage: scripts/check.sh [tier1|smoke|full]" >&2
+    exit 2
+    ;;
+esac

@@ -5,4 +5,5 @@ from repro.core.engine import (  # noqa: F401
     ground_truth,
     recall_at_k,
 )
+from repro.core.executor import QueryExecutor, QueryPlan  # noqa: F401
 from repro.core.topk import sharded_topk  # noqa: F401

@@ -17,6 +17,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.models.layers import ShardCtx
+from repro.sharding.spec import shard_map_compat as _shard_map
+
+
+def _gather_merge_batched(vals, gids, axes, n_shards: int, tk_out: int):
+    """Shared tail of the batched shard bodies: all_gather the per-shard
+    (dist, global-id) pairs along the query-local axis and merge."""
+    if n_shards > 1:
+        vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
+        gids = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
+    neg, pos = jax.lax.top_k(-vals, tk_out)
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
 
 
 def _local_scan_topn(codes, lut, top_n: int, axes, n_shards: int):
@@ -49,11 +60,10 @@ def sharded_adc_topn(codes: jax.Array, lut: jax.Array, top_n: int,
         n_shards *= ctx.mesh.shape[a]
     body = functools.partial(_local_scan_topn, top_n=top_n, axes=axes_t,
                              n_shards=n_shards)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(axes, None), P(None, None)),
         out_specs=(P(), P()),
-        check_vma=False,
     )(codes, lut)
 
 
@@ -90,11 +100,7 @@ def _local_scan_topn_blocked(codes, luts, top_n: int, axes, n_shards: int,
     (vals, ids), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
     me = jax.lax.axis_index(axes) if n_shards > 1 else 0
     gids = ids + me * n_loc
-    if n_shards > 1:
-        vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
-        gids = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
-    neg, pos = jax.lax.top_k(-vals, tk)
-    return -neg, jnp.take_along_axis(gids, pos, axis=1)
+    return _gather_merge_batched(vals, gids, axes, n_shards, tk)
 
 
 def sharded_adc_topn_batch(codes: jax.Array, luts: jax.Array, top_n: int,
@@ -129,9 +135,57 @@ def sharded_adc_topn_batch(codes: jax.Array, luts: jax.Array, top_n: int,
                                         n_shards)
             return jax.lax.map(one, luts_l)
 
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(axes, None), P(None, None, None)),
         out_specs=(P(None, None), P(None, None)),
-        check_vma=False,
     )(codes, luts)
+
+
+def _local_scan_topn_window(codes, luts, mask, top_n: int, axes,
+                            n_shards: int, use_kernel: bool):
+    """Per-shard body of the executor's windowed scan: score this shard's
+    candidate rows for all B queries, mask non-members / padding to +inf,
+    take a per-shard per-query top-n, and all_gather only the (distance,
+    global-position) pairs before the global merge."""
+    from repro.kernels.pq_adc.ops import pq_adc_batch
+    n_loc = codes.shape[0]
+    dist = pq_adc_batch(codes, luts, use_kernel=use_kernel)   # (B, n_loc)
+    dist = jnp.where(mask, dist, jnp.inf)
+    tk = min(top_n, n_loc)
+    neg, idx = jax.lax.top_k(-dist, tk)
+    me = jax.lax.axis_index(axes) if n_shards > 1 else 0
+    gids = idx + me * n_loc
+    return _gather_merge_batched(-neg, gids, axes, n_shards,
+                                 min(top_n, n_loc * n_shards))
+
+
+def sharded_adc_topn_window(codes: jax.Array, luts: jax.Array,
+                            mask: jax.Array, top_n: int, ctx: ShardCtx, *,
+                            use_kernel: bool = False
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Executor stage ⑤: candidate-bucket scan with per-query membership.
+
+    codes (N, M) uint8 row-sharded over the ``corpus`` axes; luts (B, M, K)
+    and mask (B, N) bool (True where row N is one of query B's candidates;
+    padding rows all-False) -> (dists (B, tk), bucket positions (B, tk))
+    replicated, tk = min(top_n, N).  Masked-out slots surface as +inf.
+    Single-device (``ctx.mesh is None``) falls back to the fused kernel
+    wrapper — identical results, so sharded == unsharded is testable."""
+    if ctx.mesh is None:
+        from repro.kernels.pq_adc.ops import pq_adc_topk_batch
+        return pq_adc_topk_batch(codes, luts, top_n, mask=mask,
+                                 use_kernel=use_kernel)
+    axes = ctx.rules.corpus
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in axes_t:
+        n_shards *= ctx.mesh.shape[a]
+    body = functools.partial(_local_scan_topn_window, top_n=top_n,
+                             axes=axes_t, n_shards=n_shards,
+                             use_kernel=use_kernel)
+    return _shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(axes, None), P(None, None, None), P(None, axes)),
+        out_specs=(P(None, None), P(None, None)),
+    )(codes, luts, mask)

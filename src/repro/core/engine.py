@@ -11,8 +11,6 @@ Tier placement in this build (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -21,41 +19,11 @@ import numpy as np
 
 from repro.configs.base import ANNSConfig
 from repro.core import clustering, navgraph as ng, pq
+# QueryStats / QueryResult live in executor.py now; re-exported here so
+# ``from repro.core.engine import QueryResult`` keeps working.
+from repro.core.executor import (QueryExecutor, QueryPlan,  # noqa: F401
+                                 QueryResult, QueryStats)
 from repro.core.io_sim import IOStats, SSDSim, StorageLayout
-from repro.core.rerank import RerankResult, heuristic_rerank
-from repro.kernels.pq_adc.ops import pq_adc, pq_adc_topk
-
-
-@functools.partial(jax.jit, static_argnames=("top_n", "use_kernel"))
-def _scan_topn(cand_codes, lut, n_valid, top_n: int, use_kernel: bool):
-    """Bucketed ADC scan + top-n with padded-slot masking."""
-    d = pq_adc(cand_codes, lut, use_kernel=use_kernel)
-    d = jnp.where(jnp.arange(d.shape[0]) < n_valid, d, jnp.inf)
-    neg, idx = jax.lax.top_k(-d, top_n)
-    return -neg, idx
-
-
-@dataclasses.dataclass
-class QueryStats:
-    ios: int
-    pages_requested: int
-    buffer_hits: int
-    ssd_bytes: int
-    h2d_bytes: int               # vector-IDs sent CPU -> accelerator
-    candidates_scanned: int      # PQ distance calculations
-    rerank_batches: int
-    rerank_scored: int
-    early_stopped: bool
-    t_graph: float = 0.0
-    t_scan: float = 0.0
-    t_rerank: float = 0.0
-
-
-@dataclasses.dataclass
-class QueryResult:
-    ids: np.ndarray
-    dists: np.ndarray
-    stats: QueryStats
 
 
 @dataclasses.dataclass
@@ -179,54 +147,37 @@ class FusionANNSIndex:
             ids = ids[~self.tombstones[ids]]
         return ids
 
+    @property
+    def executor(self) -> QueryExecutor:
+        """The unified QueryPlan -> QueryExecutor pipeline (core.executor).
+        Shared by all three public query paths; call
+        ``.executor.attach_mesh(mesh)`` to row-shard the HBM tier."""
+        ex = getattr(self, "_executor", None)
+        if ex is None:
+            ex = QueryExecutor(self)
+            self._executor = ex
+        return ex
+
+    def plan(self, *, k: Optional[int] = None, top_m: Optional[int] = None,
+             top_n: Optional[int] = None, **kw) -> QueryPlan:
+        return QueryPlan.from_config(self.cfg, k=k, top_m=top_m,
+                                     top_n=top_n, **kw)
+
     def query(self, query: np.ndarray, *, k: Optional[int] = None,
               top_m: Optional[int] = None, top_n: Optional[int] = None,
               disable_early_stop: bool = False) -> QueryResult:
-        cfg = self.cfg
-        k = k or cfg.top_k
-        top_m = top_m or cfg.top_m
-        top_n = top_n or cfg.top_n
+        """Single query == a window of one through the unified executor."""
+        return self.executor.run_one(query, self.plan(
+            k=k, top_m=top_m, top_n=top_n,
+            disable_early_stop=disable_early_stop))
 
-        t0 = time.perf_counter()
-        ids = self.candidate_ids(query, top_m)        # ②③⑤ (host)
-        t1 = time.perf_counter()
-
-        # ①④⑥⑦: LUT + ADC scan + top-n on the accelerator.  Only the
-        # vector-IDs cross the host->device boundary (4 B each).  IDs are
-        # padded to a power-of-two bucket so the jit cache stays warm across
-        # queries with different candidate counts.
-        lut = pq.adc_lut(self.codebook, jnp.asarray(self._lut_query(query)))
-        n_ids = len(ids)
-        bucket = max(64, 1 << int(np.ceil(np.log2(max(n_ids, 1)))))
-        padded = np.full(bucket, -1, np.int64)
-        padded[:n_ids] = ids
-        cand_codes = jnp.take(self.codes, jnp.asarray(np.maximum(padded, 0)),
-                              axis=0)
-        n_eff = min(top_n, n_ids)
-        dists, local = _scan_topn(cand_codes, lut, n_ids, min(top_n, bucket),
-                                  self.use_kernel)
-        local = np.asarray(local)[:n_eff]
-        order_ids = ids[local[local < n_ids]]
-        t2 = time.perf_counter()
-
-        # ⑧: heuristic re-ranking against the SSD tier (host).
-        rr = heuristic_rerank(
-            query, order_ids, self.ssd, k,
-            batch_size=cfg.rerank_batch, eps=cfg.rerank_eps,
-            beta=cfg.rerank_beta, disable_early_stop=disable_early_stop)
-        t3 = time.perf_counter()
-
-        stats = QueryStats(
-            ios=rr.io.ios, pages_requested=rr.io.pages_requested,
-            buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
-            h2d_bytes=4 * len(ids), candidates_scanned=len(ids),
-            rerank_batches=rr.batches_run, rerank_scored=rr.candidates_scored,
-            early_stopped=rr.early_stopped,
-            t_graph=t1 - t0, t_scan=t2 - t1, t_rerank=t3 - t2)
-        return QueryResult(ids=rr.ids, dists=rr.dists, stats=stats)
-
-    def batch_query(self, queries: np.ndarray, **kw) -> List[QueryResult]:
-        return [self.query(q, **kw) for q in queries]
+    def batch_query(self, queries: np.ndarray, *, k: Optional[int] = None,
+                    top_m: Optional[int] = None, top_n: Optional[int] = None,
+                    disable_early_stop: bool = False) -> List[QueryResult]:
+        """Per-query windows (window=1): no inter-query candidate sharing."""
+        return self.executor.run(queries, self.plan(
+            k=k, top_m=top_m, top_n=top_n,
+            disable_early_stop=disable_early_stop, window=1))
 
     def query_batch_fused(self, queries: np.ndarray, *,
                           k: Optional[int] = None,
@@ -234,59 +185,11 @@ class FusionANNSIndex:
                           top_n: Optional[int] = None) -> List[QueryResult]:
         """Beyond-paper batched mode (the TPU adaptation's natural shape):
         one ADC scan over the UNION of the batch's candidate ids with all B
-        LUTs resident (kernels.pq_adc_batch), per-query masking + top-n.
-
-        Inter-query dedup: concurrent queries share posting lists, so the
-        union is much smaller than B x |cand| — the same redundancy insight
-        the paper exploits on the SSD tier (§4.3), applied to the HBM scan.
-        Re-ranking stays per-query on the host (unchanged semantics)."""
-        cfg = self.cfg
-        k = k or cfg.top_k
-        top_m = top_m or cfg.top_m
-        top_n = top_n or cfg.top_n
-        B = len(queries)
-
-        t0 = time.perf_counter()
-        per_q = [self.candidate_ids(q, top_m) for q in queries]
-        union = np.unique(np.concatenate(per_q)) if per_q else \
-            np.zeros((0,), np.int64)
-        t1 = time.perf_counter()
-
-        u = len(union)
-        bucket = max(64, 1 << int(np.ceil(np.log2(max(u, 1)))))
-        padded = np.zeros(bucket, np.int64)
-        padded[:u] = union
-        cand_codes = jnp.take(self.codes, jnp.asarray(padded), axis=0)
-        luts = pq.adc_lut_batch(self.codebook, jnp.asarray(
-            np.stack([self._lut_query(q) for q in queries])))
-        from repro.kernels.pq_adc.ops import pq_adc_batch
-        dists = np.asarray(pq_adc_batch(cand_codes, luts,
-                                        use_kernel=self.use_kernel))  # (B,bk)
-        # per-query mask: only the query's own candidates compete
-        pos_of = {int(v): i for i, v in enumerate(union)}
-        results: List[QueryResult] = []
-        t2 = time.perf_counter()
-        for qi, q in enumerate(queries):
-            ids_q = per_q[qi]
-            cols = np.fromiter((pos_of[int(v)] for v in ids_q), np.int64,
-                               len(ids_q))
-            d_q = dists[qi, cols]
-            order_ids = ids_q[np.argsort(d_q)[:min(top_n, len(ids_q))]]
-            rr = heuristic_rerank(q, order_ids, self.ssd, k,
-                                  batch_size=cfg.rerank_batch,
-                                  eps=cfg.rerank_eps, beta=cfg.rerank_beta)
-            stats = QueryStats(
-                ios=rr.io.ios, pages_requested=rr.io.pages_requested,
-                buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
-                h2d_bytes=4 * u // B,            # amortised union transfer
-                candidates_scanned=u,            # union, ONCE per batch
-                rerank_batches=rr.batches_run,
-                rerank_scored=rr.candidates_scored,
-                early_stopped=rr.early_stopped,
-                t_graph=(t1 - t0) / B, t_scan=(t2 - t1) / B)
-            results.append(QueryResult(ids=rr.ids, dists=rr.dists,
-                                       stats=stats))
-        return results
+        LUTs resident, per-query masking + top-n — inter-query dedup is the
+        paper's §4.3 redundancy insight applied to the HBM scan.  One window
+        through the unified executor; identical per-query semantics."""
+        return self.executor.run(queries, self.plan(
+            k=k, top_m=top_m, top_n=top_n))
 
 
 # ---------------------------------------------------------------------------

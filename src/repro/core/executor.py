@@ -1,0 +1,272 @@
+"""Unified query execution: ``QueryPlan`` -> ``QueryExecutor``.
+
+DESIGN
+======
+Every public query entry point on :class:`~repro.core.engine.FusionANNSIndex`
+(``query``, ``batch_query``, ``query_batch_fused``) and the serving
+front-end (``serve.anns_service.BatchingANNSService``) runs the SAME stage
+list, parameterized only by the batch window:
+
+  ① graph-traverse   navigation graph over centroids (DRAM tier, host)
+  ② collect + dedup  posting-list vector-IDs, tombstone filter (host)
+  ③ union dedup      inter-query candidate dedup across the window — the
+                     paper's §4.3 redundancy insight applied to the HBM scan
+  ④ LUT build        per-query ADC tables on the accelerator
+  ⑤ sharded ADC scan PQ codes row-sharded across the device mesh
+                     (``core.distributed``); each shard scans its rows,
+                     takes a per-shard top-n, and only (distance, id) pairs
+                     cross the interconnect — §4.2's "IDs only" discipline
+                     across devices
+  ⑥ top-n merge      global merge of shard-local top-ns + host-side
+                     (distance, id) lexicographic ordering, so sharded and
+                     single-device scans return bit-identical rankings
+  ⑦ heuristic rerank Algorithm 1 against the SSD tier (host)
+
+Tier placement (unchanged from engine.py): navigation graph + posting-list
+IDs in host numpy ("DRAM"); PQ codes + codebooks in jax arrays ("HBM",
+row-sharded over the ``corpus`` mesh axes when a mesh is attached); raw
+vectors behind the 4 KB-page SSD simulator.
+
+Windows + overlap: ``QueryPlan.window`` splits a batch into fixed-size scan
+windows; ``overlap_rerank=True`` dispatches window t+1's (async) device
+scan before re-ranking window t on the host, overlapping rerank I/O with
+the next scan — the executor-level analogue of the paper's CPU/GPU
+pipelining.
+
+Per-query accounting is shared: a window of size B attributes ``u = |union|``
+scanned candidates and ``4u/B`` host->device bytes to each member, so
+``query`` (B=1) and the fused paths report through one ``QueryStats``
+schema.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq
+from repro.core.rerank import heuristic_rerank
+from repro.models.layers import ShardCtx
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.engine import FusionANNSIndex
+
+
+@dataclasses.dataclass
+class QueryStats:
+    ios: int
+    pages_requested: int
+    buffer_hits: int
+    ssd_bytes: int
+    h2d_bytes: int               # vector-IDs sent CPU -> accelerator
+    candidates_scanned: int      # PQ distance calculations (union, per window)
+    rerank_batches: int
+    rerank_scored: int
+    early_stopped: bool
+    t_graph: float = 0.0
+    t_scan: float = 0.0
+    t_rerank: float = 0.0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    ids: np.ndarray
+    dists: np.ndarray
+    stats: QueryStats
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Per-run knobs for one pass through the unified stage list."""
+
+    k: int
+    top_m: int
+    top_n: int
+    rerank_batch: int = 32
+    rerank_eps: float = 0.05
+    rerank_beta: int = 2
+    disable_early_stop: bool = False
+    window: int = 0              # scan-window size; 0 = whole batch at once
+    overlap_rerank: bool = False  # overlap window t rerank with t+1 scan
+
+    @staticmethod
+    def from_config(cfg, *, k: Optional[int] = None,
+                    top_m: Optional[int] = None, top_n: Optional[int] = None,
+                    **kw) -> "QueryPlan":
+        return QueryPlan(k=k or cfg.top_k, top_m=top_m or cfg.top_m,
+                         top_n=top_n or cfg.top_n,
+                         rerank_batch=cfg.rerank_batch,
+                         rerank_eps=cfg.rerank_eps, rerank_beta=cfg.rerank_beta,
+                         **kw)
+
+
+@dataclasses.dataclass
+class _Window:
+    """One dispatched scan window (device work possibly still in flight)."""
+
+    queries: np.ndarray
+    per_q: List[np.ndarray]      # stage ② ids per query
+    union: np.ndarray            # stage ③ deduped candidate union
+    vals: jax.Array              # (B, tk) masked top-n distances
+    pos: jax.Array               # (B, tk) positions into the padded bucket
+    t_graph: float
+    t_scan_host: float           # host-side LUT/gather/dispatch time
+
+
+class QueryExecutor:
+    """Runs the stage list against one index, optionally mesh-sharded."""
+
+    def __init__(self, index: "FusionANNSIndex",
+                 ctx: Optional[ShardCtx] = None):
+        self.index = index
+        self.ctx = ctx if ctx is not None else ShardCtx()
+        self._placed: Optional[jax.Array] = None
+        self._placed_src = None
+
+    # ------------------------------------------------------------- sharding
+    def attach_mesh(self, mesh) -> "QueryExecutor":
+        """Row-shard the HBM tier (PQ codes) over ``mesh``'s corpus axes."""
+        from repro.sharding.spec import rules_for_mesh
+        self.ctx = ShardCtx(mesh=mesh, rules=rules_for_mesh(mesh))
+        self._placed = None          # free the previous mesh's placement
+        self._placed_src = None
+        return self
+
+    def _n_shards(self) -> int:
+        if self.ctx.mesh is None:
+            return 1
+        axes = self.ctx.rules.corpus
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        n = 1
+        for a in axes_t:
+            n *= self.ctx.mesh.shape[a]
+        return n
+
+    def _device_codes(self) -> jax.Array:
+        """HBM-tier codes; placed row-sharded once per codes version (insert
+        invalidates the placement by rebinding ``index.codes``)."""
+        codes = self.index.codes
+        if self.ctx.mesh is None:
+            return codes
+        if self._placed_src is not codes:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            shards = self._n_shards()
+            pad = (-codes.shape[0]) % shards
+            placed = codes if not pad else jnp.concatenate(
+                [codes, jnp.zeros((pad, codes.shape[1]), codes.dtype)],
+                axis=0)
+            self._placed = jax.device_put(placed, NamedSharding(
+                self.ctx.mesh, P(self.ctx.rules.corpus, None)))
+            self._placed_src = codes
+        return self._placed
+
+    # --------------------------------------------------------------- stages
+    def _dispatch(self, queries: np.ndarray, plan: QueryPlan) -> _Window:
+        """Stages ①-⑥: host traversal + async device scan for one window."""
+        from repro.core.distributed import sharded_adc_topn_window
+        idx = self.index
+        t0 = time.perf_counter()
+        per_q = [idx.candidate_ids(q, plan.top_m) for q in queries]
+        union = (np.unique(np.concatenate(per_q)).astype(np.int64)
+                 if sum(len(p) for p in per_q) else np.zeros((0,), np.int64))
+        t1 = time.perf_counter()
+
+        u = len(union)
+        shards = self._n_shards()
+        bucket = max(64, shards, 1 << int(np.ceil(np.log2(max(u, 1)))))
+        bucket += (-bucket) % shards
+        padded = np.zeros(bucket, np.int64)
+        padded[:u] = union
+        # per-query membership: only a query's own candidates compete in its
+        # top-n (identical semantics at every window size)
+        mask = np.zeros((len(queries), bucket), bool)
+        for qi, ids_q in enumerate(per_q):
+            mask[qi, np.searchsorted(union, ids_q)] = True
+
+        luts = pq.adc_lut_batch(idx.codebook, jnp.asarray(
+            np.stack([idx._lut_query(np.asarray(q, np.float32))
+                      for q in queries])))
+        cand = jnp.take(self._device_codes(), jnp.asarray(padded), axis=0)
+        mask_dev = jnp.asarray(mask)
+        if self.ctx.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            corpus = self.ctx.rules.corpus
+            cand = jax.device_put(cand, NamedSharding(
+                self.ctx.mesh, P(corpus, None)))
+            mask_dev = jax.device_put(mask_dev, NamedSharding(
+                self.ctx.mesh, P(None, corpus)))
+        vals, pos = sharded_adc_topn_window(
+            cand, luts, mask_dev, min(plan.top_n, bucket), self.ctx,
+            use_kernel=idx.use_kernel)
+        return _Window(queries=queries, per_q=per_q, union=union,
+                       vals=vals, pos=pos, t_graph=t1 - t0,
+                       t_scan_host=time.perf_counter() - t1)
+
+    def _finish(self, w: _Window, plan: QueryPlan) -> List[QueryResult]:
+        """Stages ⑥-⑦: block on the scan, merge, re-rank against the SSD."""
+        idx = self.index
+        B = len(w.queries)
+        u = len(w.union)
+        t0 = time.perf_counter()
+        vals = np.asarray(w.vals)          # blocks until the scan lands
+        pos = np.asarray(w.pos)
+        # host dispatch time + blocking wait: under overlap_rerank the gap
+        # between dispatch and finish belongs to the PREVIOUS window's
+        # rerank, so wall-clock-since-dispatch would double-count it
+        t_scan = w.t_scan_host + (time.perf_counter() - t0)
+        out: List[QueryResult] = []
+        for qi, q in enumerate(w.queries):
+            good = np.isfinite(vals[qi])
+            ids_sel = w.union[pos[qi][good]]
+            d_sel = vals[qi][good]
+            # ascending (distance, id): makes sharded == unsharded exactly
+            order = np.lexsort((ids_sel, d_sel))
+            n_eff = min(plan.top_n, len(w.per_q[qi]))
+            order_ids = ids_sel[order][:n_eff]
+            t2 = time.perf_counter()
+            rr = heuristic_rerank(
+                np.asarray(q, np.float32), order_ids, idx.ssd, plan.k,
+                batch_size=plan.rerank_batch, eps=plan.rerank_eps,
+                beta=plan.rerank_beta,
+                disable_early_stop=plan.disable_early_stop)
+            stats = QueryStats(
+                ios=rr.io.ios, pages_requested=rr.io.pages_requested,
+                buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
+                h2d_bytes=4 * u // max(B, 1),    # amortised union transfer
+                candidates_scanned=u,            # union, ONCE per window
+                rerank_batches=rr.batches_run,
+                rerank_scored=rr.candidates_scored,
+                early_stopped=rr.early_stopped,
+                t_graph=w.t_graph / max(B, 1), t_scan=t_scan / max(B, 1),
+                t_rerank=time.perf_counter() - t2)
+            out.append(QueryResult(ids=rr.ids, dists=rr.dists, stats=stats))
+        return out
+
+    # ------------------------------------------------------------------ run
+    def run(self, queries: np.ndarray, plan: QueryPlan) -> List[QueryResult]:
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        if not len(queries):
+            return []
+        W = plan.window or len(queries)
+        results: List[QueryResult] = []
+        pending: Optional[_Window] = None
+        for s in range(0, len(queries), W):
+            dispatched = self._dispatch(queries[s:s + W], plan)
+            if pending is not None:          # overlap: t+1 scan in flight
+                results.extend(self._finish(pending, plan))
+                pending = None
+            if plan.overlap_rerank:
+                pending = dispatched
+            else:
+                results.extend(self._finish(dispatched, plan))
+        if pending is not None:
+            results.extend(self._finish(pending, plan))
+        return results
+
+    def run_one(self, query: np.ndarray, plan: QueryPlan) -> QueryResult:
+        return self.run(np.asarray(query, np.float32)[None], plan)[0]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.layers import ShardCtx
+from repro.sharding.spec import shard_map_compat
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -61,9 +62,8 @@ def sharded_topk(scores: jax.Array, k: int, ctx: ShardCtx, *,
         vv, gg = local_topk_merge(v, gi, k)
         return sign * vv, gg
 
-    return jax.shard_map(
+    return shard_map_compat(
         body, mesh=ctx.mesh,
         in_specs=P(b_spec, axes),
         out_specs=(P(b_spec, None), P(b_spec, None)),
-        check_vma=False,
     )(scores)

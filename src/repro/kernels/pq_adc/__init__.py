@@ -1,2 +1,2 @@
-from repro.kernels.pq_adc.ops import pq_adc, pq_adc_batch, pq_adc_topk  # noqa: F401
+from repro.kernels.pq_adc.ops import pq_adc, pq_adc_batch, pq_adc_topk, pq_adc_topk_batch  # noqa: F401
 from repro.kernels.pq_adc.ref import pq_adc_ref, pq_adc_batch_ref  # noqa: F401

@@ -51,6 +51,26 @@ def pq_adc_batch(codes: jax.Array, luts: jax.Array, *, block_n: int = 2048,
 
 @functools.partial(jax.jit, static_argnames=("topk", "block_n", "use_kernel",
                                              "interpret"))
+def pq_adc_topk_batch(codes: jax.Array, luts: jax.Array, topk: int, *,
+                      mask: jax.Array = None, block_n: int = 2048,
+                      use_kernel: bool = True, interpret: bool = True):
+    """Batched fused scan + per-query (optionally masked) top-k.
+
+    codes (N, M) x luts (B, M, K) [x mask (B, N) bool] ->
+    (dists (B, tk), row indices (B, tk)) ascending, tk = min(topk, N).
+    ``mask`` is the executor's per-query candidate membership: False rows
+    (other queries' candidates, padding) score +inf and sort last — this is
+    the single-device form of the per-shard scan in core.distributed."""
+    d = pq_adc_batch(codes, luts, block_n=block_n, use_kernel=use_kernel,
+                     interpret=interpret)
+    if mask is not None:
+        d = jnp.where(mask, d, jnp.inf)
+    neg, ids = jax.lax.top_k(-d, min(topk, d.shape[1]))
+    return -neg, ids
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "block_n", "use_kernel",
+                                             "interpret"))
 def pq_adc_topk(codes: jax.Array, lut: jax.Array, topk: int, *,
                 block_n: int = 2048, use_kernel: bool = True,
                 interpret: bool = True):

@@ -1,10 +1,16 @@
 """ANNS serving front-end: request queue + dynamic batching.
 
 The paper's prototype binds one CPU thread per query (§5); the TPU
-adaptation's natural unit is a *batch* per scan (kernels/pq_adc_batch).
-This front-end bridges the two: requests accumulate until ``max_batch`` or
-``max_wait_s`` elapses, then one fused scan serves the whole window
-(inter-query candidate dedup included — engine.query_batch_fused).
+adaptation's natural unit is a *batch* per scan.  This front-end bridges
+the two: requests accumulate until ``max_batch`` or ``max_wait_s`` elapses,
+then one pass through the unified ``core.executor`` pipeline serves the
+whole window — inter-query candidate dedup (§4.3 applied to the HBM scan),
+the mesh-sharded ADC scan, and per-request latency attribution all come
+from the executor, not from per-path code.
+
+``scan_window``/``overlap_rerank`` expose the executor's pipelining knob:
+a pump batch larger than ``scan_window`` is split into scan windows and the
+rerank I/O of window t overlaps the device scan of window t+1.
 
 Synchronous harness (no asyncio dependency): callers enqueue requests and
 ``pump()`` drains windows; on a real deployment the pump loop runs in a
@@ -41,10 +47,14 @@ class Response:
 
 class BatchingANNSService:
     def __init__(self, index: FusionANNSIndex, *, max_batch: int = 32,
-                 max_wait_s: float = 0.002):
+                 max_wait_s: float = 0.002, scan_window: int = 0,
+                 overlap_rerank: bool = False):
         self.index = index
+        self.executor = index.executor
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.scan_window = scan_window
+        self.overlap_rerank = overlap_rerank
         self._queue: Deque[Request] = deque()
         self._next_rid = 0
         self.stats: Dict[str, float] = {
@@ -72,13 +82,17 @@ class BatchingANNSService:
         batch = [self._queue.popleft()
                  for _ in range(min(self.max_batch, len(self._queue)))]
         queries = np.stack([r.query for r in batch])
+        plan = self.index.plan(window=self.scan_window,
+                               overlap_rerank=self.overlap_rerank)
         t0 = time.perf_counter()
-        results = self.index.query_batch_fused(queries)
+        results = self.executor.run(queries, plan)
         t_serve = time.perf_counter() - t0
         self.stats["batches"] += 1
         self.stats["requests"] += len(batch)
         self.stats["mean_batch"] = (self.stats["requests"]
                                     / self.stats["batches"])
+        # per-request attribution: shared wall-clock + the executor's
+        # per-query stage timings (res.stats.t_graph/t_scan/t_rerank)
         return [Response(rid=r.rid, result=res,
                          t_queue_s=t0 - r.t_enqueue, t_serve_s=t_serve,
                          batch_size=len(batch))

@@ -1,0 +1,81 @@
+"""Property-testing shim: use ``hypothesis`` when installed, else a tiny
+deterministic fallback with the same surface (tier-1 must collect and pass
+without the package — see conftest.py for the policy).
+
+The fallback implements exactly the strategy subset this suite uses —
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``, ``st.lists(elem,
+min_size=, max_size=)`` — and draws a fixed number of examples from a
+seeded generator keyed on the test's qualified name, so failures
+reproduce run-to-run.  ``@settings(max_examples=N)`` is honored (capped
+by ``PROPSHIM_MAX_EXAMPLES``, default 10, to keep tier-1 fast).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import os
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _MAX = int(os.environ.get("PROPSHIM_MAX_EXAMPLES", "8"))
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._propshim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings sits above @given, so read the cap at call time
+                n = min(getattr(wrapper, "_propshim_max_examples", 10), _MAX)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest must not mistake drawn params for fixtures: expose a
+            # signature without them (and without __wrapped__, which
+            # inspect.signature would otherwise follow).
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strats])
+            return wrapper
+        return deco

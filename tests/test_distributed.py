@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# full 8-device subprocess (LM train step, MoE, GNN, elastic ckpt): minutes
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,31 +1,19 @@
 """End-to-end FusionANNS engine: recall, the paper's I/O claims at reduced
 scale, and technique ablations (Fig. 12 shape)."""
 
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.configs.anns_datasets import SIFT_SMALL
 from repro.core.baselines import HIPq, RummyLike, SpannLike
-from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
-from repro.data.synthetic import clustered_vectors
+from repro.core.engine import FusionANNSIndex, recall_at_k
 
-N = 4000
 DIM = 32
 
 
 @pytest.fixture(scope="module")
-def setup():
-    rng = np.random.default_rng(0)
-    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=N, dim=DIM,
-                              n_posting_fraction=0.02)
-    data = clustered_vectors(rng, N, DIM, n_clusters=40)
-    index = FusionANNSIndex.build(data, cfg)
-    queries = clustered_vectors(np.random.default_rng(7), 16, DIM,
-                                n_clusters=40)
-    gt = ground_truth(data, queries, 10)
-    return cfg, data, index, queries, gt
+def setup(anns_bundle):
+    b = anns_bundle        # session-scoped shared index (conftest.py)
+    return b.cfg, b.data, b.index, b.queries, b.gt
 
 
 def test_recall_meets_paper_bar(setup):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.configs.graphsage_reddit import REDUCED as SAGE_CFG
 from repro.data.graphs import (block_diagonal_batch, build_csr,

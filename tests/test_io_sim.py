@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.core.io_sim import (IOStats, PageBuffer, SSDSim, StorageLayout,
                                pack_buckets_maxmin)

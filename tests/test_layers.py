@@ -27,8 +27,9 @@ def _ref_attention(q, k, v, causal, scale=None):
 @pytest.mark.parametrize("B,S,H,Hk,dh,causal,bs", [
     (2, 16, 4, 2, 8, True, 8),
     (1, 8, 2, 2, 16, False, 4),
-    (2, 32, 6, 3, 8, True, 16),
-    (1, 24, 4, 1, 8, True, 8),     # MQA
+    pytest.param(2, 32, 6, 3, 8, True, 16, marks=pytest.mark.slow),
+    pytest.param(1, 24, 4, 1, 8, True, 8,  # MQA
+                 marks=pytest.mark.slow),
 ])
 def test_flash_attention_fwd_bwd(rng, B, S, H, Hk, dh, causal, bs):
     q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)

@@ -13,6 +13,7 @@ CASES = [(a, s.shape_id) for a in ARCH_IDS
          for s in shapes_for(get_config(a, reduced=True))]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", CASES,
                          ids=[f"{a}-{s}" for a, s in CASES])
 def test_smoke_cell(arch, shape):
@@ -37,6 +38,7 @@ def test_full_config_instantiates(arch):
     assert cell.args
 
 
+@pytest.mark.slow
 def test_lm_train_loss_is_sane():
     """Reduced LM: initial loss ~ ln(vocab)."""
     import jax.numpy as jnp

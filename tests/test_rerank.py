@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.core.io_sim import SSDSim, StorageLayout
 from repro.core.rerank import heuristic_rerank, heuristic_rerank_jax

@@ -14,13 +14,9 @@ from repro.serve.anns_service import BatchingANNSService
 
 
 @pytest.fixture(scope="module")
-def small_index():
-    rng = np.random.default_rng(0)
-    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=3000, dim=32,
-                              n_posting_fraction=0.02)
-    data = clustered_vectors(rng, 3020, cfg.dim, n_clusters=24)
-    return cfg, data[:3000], data[3000:], \
-        FusionANNSIndex.build(data[:3000], cfg)
+def small_index(anns_bundle):
+    b = anns_bundle        # session-scoped shared index (conftest.py)
+    return b.cfg, b.data, b.queries, b.index
 
 
 def test_service_batches_and_answers(small_index):

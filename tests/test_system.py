@@ -2,29 +2,18 @@
 into the claimed profile (high recall, ID-only PCIe traffic, few small I/Os,
 adaptive re-rank) — the system-level contract of FusionANNS."""
 
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.configs.anns_datasets import SIFT_SMALL
-from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
+from repro.core.engine import recall_at_k
 from repro.core.perf_model import DeviceModel, QueryDemand, sweep_threads
-from repro.data.synthetic import clustered_vectors
 
 
 @pytest.fixture(scope="module")
-def system():
-    rng = np.random.default_rng(0)
-    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=6000, dim=32,
-                              n_posting_fraction=0.02)
-    data = clustered_vectors(rng, cfg.n_vectors, cfg.dim, n_clusters=48)
-    index = FusionANNSIndex.build(data, cfg)
-    queries = clustered_vectors(np.random.default_rng(3), 24, cfg.dim,
-                                n_clusters=48)
-    gt = ground_truth(data, queries, 10)
-    results = index.batch_query(queries)
-    return cfg, data, index, queries, gt, results
+def system(anns_bundle):
+    b = anns_bundle        # session-scoped shared index (conftest.py)
+    results = b.index.batch_query(b.queries)
+    return b.cfg, b.data, b.index, b.queries, b.gt, results
 
 
 def test_recall_at_operating_point(system):

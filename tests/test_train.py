@@ -78,6 +78,7 @@ def test_loss_decreases(lm_setup):
     assert losses[-1] < losses[0] - 0.5
 
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch(lm_setup):
     cfg, loss_fn = lm_setup
     base = TrainConfig(opt=OptimizerConfig(lr=1e-3, warmup_steps=0,
@@ -96,6 +97,7 @@ def test_microbatching_matches_full_batch(lm_setup):
                                    rtol=2e-3, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_supervisor_survives_injected_failures(tmp_path, lm_setup):
     cfg, loss_fn = lm_setup
     tcfg = TrainConfig(
@@ -119,6 +121,7 @@ def test_supervisor_survives_injected_failures(tmp_path, lm_setup):
     assert int(state["opt"]["step"]) >= 20
 
 
+@pytest.mark.slow
 def test_supervisor_resumes_from_checkpoint_not_zero(tmp_path, lm_setup):
     """After a crash at step 7 with ckpt_every=5, training resumes from 5."""
     cfg, loss_fn = lm_setup

@@ -1,22 +1,17 @@
-"""Incremental index maintenance (SPFresh-style insert/delete)."""
-
-import dataclasses
+"""Incremental index maintenance (SPFresh-style insert/delete), including
+the fused batched path (updates x batching: tombstones and fresh appends
+must be honored by every executor window size, not just window=1)."""
 
 import numpy as np
 import pytest
 
-from repro.configs.anns_datasets import SIFT_SMALL
-from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
-from repro.data.synthetic import clustered_vectors
+from repro.core.engine import ground_truth, recall_at_k
 
 
 @pytest.fixture()
-def index_and_data(rng):
-    cfg = dataclasses.replace(SIFT_SMALL, n_vectors=3000, dim=32,
-                              n_posting_fraction=0.02)
-    data = clustered_vectors(rng, cfg.n_vectors + 40, cfg.dim, n_clusters=24)
-    return cfg, data[:3000], data[3000:3020], data[3020:], \
-        FusionANNSIndex.build(data[:3000], cfg)
+def index_and_data(anns_bundle, fresh_index):
+    b = anns_bundle
+    return b.cfg, b.data, b.new_vecs, b.queries, fresh_index
 
 
 def test_inserted_vectors_are_findable(index_and_data, rng):
@@ -52,6 +47,56 @@ def test_delete_tombstones(index_and_data):
     index.delete(np.array([victim]))
     res2 = index.query(q, k=5)
     assert victim not in set(res2.ids.tolist())
+
+
+def test_inserted_vectors_findable_by_fused_batch(index_and_data):
+    """Fresh appends must be visible to the fused batched path: the HBM
+    code placement is invalidated by insert, and the union scan covers the
+    new ids."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    new_ids = index.insert(new_vecs)
+    res = index.query_batch_fused(new_vecs, k=1)
+    hits = sum(int(r.ids[0] == nid) for r, nid in zip(res, new_ids))
+    assert hits >= 18     # tight clusters; PQ may swap exact ties
+
+
+def test_delete_tombstones_honored_by_fused_batch(index_and_data):
+    """Tombstoned ids must be filtered from the fused batched path too
+    (candidate collection runs before the union scan)."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    base = index.query_batch_fused(queries[:4], k=5)
+    victims = np.array([r.ids[0] for r in base])
+    index.delete(victims)
+    res = index.query_batch_fused(queries[:4], k=5)
+    gone = set(victims.tolist())
+    for r in res:
+        assert not (set(r.ids.tolist()) & gone)
+    # single-query and batched paths agree after the delete
+    singles = [index.query(q, k=5) for q in queries[:4]]
+    for s, f in zip(singles, res):
+        np.testing.assert_array_equal(s.ids, f.ids)
+
+
+def test_updates_respected_by_batching_service(index_and_data):
+    """End-to-end: the dynamic-batching service (executor-backed) sees
+    inserts and deletes immediately."""
+    from repro.serve.anns_service import BatchingANNSService
+    cfg, data, new_vecs, queries, index = index_and_data
+    new_ids = index.insert(new_vecs)
+    victim = new_ids[0]
+    index.delete(np.array([victim]))
+    svc = BatchingANNSService(index, max_batch=8, max_wait_s=0.0)
+    for v in new_vecs[:8]:
+        svc.submit(v)
+    responses = svc.drain()
+    assert len(responses) == 8
+    for r in responses:
+        assert victim not in set(r.result.ids.tolist())
+    # the other inserted ids are findable through the service
+    by_rid = sorted(responses, key=lambda r: r.rid)
+    hits = sum(int(r.result.ids[0] == nid)
+               for r, nid in zip(by_rid[1:8], new_ids[1:8]))
+    assert hits >= 5
 
 
 def test_insert_extends_all_tiers(index_and_data):
