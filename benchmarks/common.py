@@ -91,6 +91,32 @@ def fusion_demand(index: FusionANNSIndex, queries, *, fused: bool = False,
     return {"results": results, "demand": demand, "stats": stats}
 
 
+def service_latency(index: FusionANNSIndex, queries, **svc_kw) -> Dict:
+    """Drive the futures-path serving front-end over ``queries`` and
+    report per-request p50/p99 enqueue->resolve latency (seconds).
+
+    Backpressured submissions pump a batch through and retry, so the
+    measured tail includes admission-control stalls — the operating point
+    a deployment actually sees."""
+    from repro.serve.anns_service import BackpressureError, \
+        BatchingANNSService
+    svc = BatchingANNSService(index, **svc_kw)
+    futs = []
+    for q in queries:
+        while True:
+            try:
+                futs.append(svc.submit(q))
+                break
+            except BackpressureError:
+                svc.pump(force=True)
+    svc.drain()
+    responses = [f.result() for f in futs]
+    pct = svc.latency_percentiles()
+    pct["responses"] = responses
+    pct["stats"] = svc.stats
+    return pct
+
+
 def tune_for_recall(index, queries, gt, target: float,
                     top_ms=(8, 16, 24, 48, 96), top_ns=(128, 256, 512)):
     """Find the cheapest (top_m, top_n) reaching the recall target —

@@ -1,9 +1,13 @@
 """Fig. 9: QPS + latency of SPANN / DiskANN / RUMMY / FusionANNS across the
-three dataset profiles at Recall@10>=0.9 (peak-thread operating point)."""
+three dataset profiles at Recall@10>=0.9 (peak-thread operating point),
+plus two futures-path rows (PR 2): the pipelined inflight-depth sweep and
+the serving front-end's p50/p99 through submit()/QueryFuture."""
+
+import time
 
 import numpy as np
 
-from benchmarks.common import HW, bundle, fusion_demand
+from benchmarks.common import HW, bundle, fusion_demand, service_latency
 from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
 from repro.core.engine import recall_at_k
 from repro.core.perf_model import (QueryDemand, qps_at_threads,
@@ -22,6 +26,54 @@ def best_qps(demand, threads=(1, 2, 4, 8, 16, 32, 64)):
     best = max(threads, key=lambda t: qps_at_threads(demand, HW, t))
     return (qps_at_threads(demand, HW, best),
             latency_at_threads(demand, HW, best), best)
+
+
+def _pipeline_depth_row(b) -> dict:
+    """Queue depth 1 vs 2+ through the executor's _InflightQueue: same ids
+    (tested elsewhere), different host/device interleave.  Reports wall
+    clock per depth plus the dispatch-ahead count from the event probe."""
+    nq = min(32, len(b.queries))
+    # warm the scan's jit cache so depth 1 doesn't absorb compile time
+    b.index.executor.submit(b.queries[:nq],
+                            b.index.plan(window=8)).wait()
+    walls = {}
+    ahead = 0
+    n_w = 0
+    for depth in (1, 2, 3):
+        plan = b.index.plan(window=8, inflight_depth=depth)
+        t0 = time.perf_counter()
+        ticket = b.index.executor.submit(b.queries[:nq], plan)
+        ticket.wait()
+        walls[depth] = time.perf_counter() - t0
+        if depth == 2:
+            disp = {wi: i for i, (k, wi) in enumerate(ticket.events)
+                    if k == "dispatch"}
+            fin = {wi: i for i, (k, wi) in enumerate(ticket.events)
+                   if k == "finish"}
+            n_w = len(disp)
+            ahead = sum(int(disp[t + 1] < fin[t]) for t in range(n_w - 1))
+    return {
+        "name": "fig9.sift.pipeline_depth",
+        "us_per_call": walls[2] / nq * 1e6,
+        "derived": (f"wall_ms d1={walls[1]*1e3:.1f} d2={walls[2]*1e3:.1f} "
+                    f"d3={walls[3]*1e3:.1f}; "
+                    f"d2 dispatched-ahead {ahead}/{max(n_w-1, 1)} windows "
+                    f"(scan t+1 in flight during rerank t)"),
+    }
+
+
+def _service_latency_row(b) -> dict:
+    """Serving front-end p50/p99 through the futures path (submit ->
+    QueryFuture.result), batch 16, pipelined scan windows."""
+    lat = service_latency(b.index, b.queries, max_batch=16, max_wait_s=0.0,
+                          scan_window=8, inflight_depth=2)
+    return {
+        "name": "fig9.sift.service_futures",
+        "us_per_call": lat["p50"] * 1e6,
+        "derived": (f"p50={lat['p50']*1e3:.2f}ms p99={lat['p99']*1e3:.2f}ms "
+                    f"n={lat['n']} mean_batch="
+                    f"{lat['stats']['mean_batch']:.1f}"),
+    }
 
 
 def run():
@@ -64,6 +116,9 @@ def run():
                         f"vs_rummy={qps_map['FusionANNS']/qps_map['RUMMY']:.1f}x "
                         f"(paper: 9.4-13.1x / 3.2-4.3x / 2-4.9x)"),
         })
+        if ds == "sift":
+            rows.append(_pipeline_depth_row(b))
+            rows.append(_service_latency_row(b))
     return rows
 
 

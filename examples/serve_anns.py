@@ -38,10 +38,23 @@ def main() -> None:
     print(f"# build {time.time()-t0:.1f}s")
     gt = ground_truth(data, queries, 10)
 
+    # futures-first path: host traversal + async dispatch of the first
+    # inflight_depth windows happens inside submit(); results() pipelines
+    # each window's rerank against the next windows' in-flight scans
     t0 = time.time()
-    results = index.batch_query(queries)
+    ticket = index.submit(queries, window=1, inflight_depth=2)
+    results = ticket.results()
     wall = time.time() - t0
     rec = recall_at_k(np.stack([r.ids for r in results]), gt, 10)
+
+    # serving front-end on the same API: per-request futures + p50/p99
+    from repro.serve.anns_service import BatchingANNSService
+    svc = BatchingANNSService(index, max_batch=16, max_wait_s=0.0,
+                              scan_window=8, inflight_depth=2)
+    futs = [svc.submit(q) for q in queries]
+    svc.drain()
+    assert all(f.done() for f in futs)
+    pct = svc.latency_percentiles()
 
     stats = [r.stats for r in results]
     demand = QueryDemand(
@@ -62,6 +75,8 @@ def main() -> None:
         "mean_h2d_bytes": int(demand.h2d_bytes),
         "early_stop_rate": round(float(np.mean(
             [s.early_stopped for s in stats])), 3),
+        "service_p50_ms": round(pct["p50"] * 1e3, 2),
+        "service_p99_ms": round(pct["p99"] * 1e3, 2),
         "modelled_qps": {f"t{t}": round(v["qps"]) for t, v in sweep.items()},
         "modelled_latency_ms": {f"t{t}": round(v["latency_ms"], 2)
                                 for t, v in sweep.items()},

@@ -18,7 +18,8 @@ case "$MODE" in
   smoke)
     exec timeout "${CHECK_TIMEOUT:-300}" \
       python -m pytest -x -q -p no:cacheprovider \
-        tests/test_executor.py tests/test_engine.py tests/test_updates.py
+        tests/test_executor.py tests/test_futures.py tests/test_engine.py \
+        tests/test_updates.py
     ;;
   tier1)
     exec timeout "${CHECK_TIMEOUT:-600}" \

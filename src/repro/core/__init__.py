@@ -5,5 +5,16 @@ from repro.core.engine import (  # noqa: F401
     ground_truth,
     recall_at_k,
 )
-from repro.core.executor import QueryExecutor, QueryPlan  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    PlanOverrides,
+    QueryExecutor,
+    QueryPlan,
+)
+from repro.core.futures import (  # noqa: F401
+    BackpressureError,
+    BatchTicket,
+    CancelledError,
+    DeadlineExceeded,
+    QueryFuture,
+)
 from repro.core.topk import sharded_topk  # noqa: F401

@@ -20,6 +20,25 @@ from repro.models.layers import ShardCtx
 from repro.sharding.spec import shard_map_compat as _shard_map
 
 
+def window_scan_ready(*arrays) -> bool:
+    """True when every device buffer backing a window's scan outputs has
+    landed (jax async dispatch done).  Used by the futures layer for
+    non-blocking progress (``BatchTicket.poll``): a window whose scan is
+    ready can be retired without stalling the host.  Conservatively falls
+    back to True (retire-and-block, still correct) on runtimes without
+    ``jax.Array.is_ready``."""
+    for a in arrays:
+        is_ready = getattr(a, "is_ready", None)
+        if is_ready is None:
+            continue
+        try:
+            if not is_ready():
+                return False
+        except Exception:       # noqa: BLE001 — deleted/donated buffers
+            continue
+    return True
+
+
 def _gather_merge_batched(vals, gids, axes, n_shards: int, tk_out: int):
     """Shared tail of the batched shard bodies: all_gather the per-shard
     (dist, global-id) pairs along the query-local axis and merge."""

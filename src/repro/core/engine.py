@@ -21,8 +21,9 @@ from repro.configs.base import ANNSConfig
 from repro.core import clustering, navgraph as ng, pq
 # QueryStats / QueryResult live in executor.py now; re-exported here so
 # ``from repro.core.engine import QueryResult`` keeps working.
-from repro.core.executor import (QueryExecutor, QueryPlan,  # noqa: F401
-                                 QueryResult, QueryStats)
+from repro.core.executor import (PlanOverrides, QueryExecutor,  # noqa: F401
+                                 QueryPlan, QueryResult, QueryStats)
+from repro.core.futures import BatchTicket, QueryFuture  # noqa: F401
 from repro.core.io_sim import IOStats, SSDSim, StorageLayout
 
 
@@ -162,6 +163,19 @@ class FusionANNSIndex:
              top_n: Optional[int] = None, **kw) -> QueryPlan:
         return QueryPlan.from_config(self.cfg, k=k, top_m=top_m,
                                      top_n=top_n, **kw)
+
+    def submit(self, queries: np.ndarray, *, k: Optional[int] = None,
+               top_m: Optional[int] = None, top_n: Optional[int] = None,
+               overrides: Optional[List[Optional[PlanOverrides]]] = None,
+               **kw) -> BatchTicket:
+        """Futures-first entry point (DESIGN.md §3): host traversal + async
+        device dispatch, then return immediately.  ``kw`` passes plan knobs
+        through (``window=``, ``inflight_depth=``, ``deadline_s=``, ...);
+        ``overrides`` carries per-query ``PlanOverrides`` for mixed-``k``
+        windows."""
+        return self.executor.submit(
+            queries, self.plan(k=k, top_m=top_m, top_n=top_n, **kw),
+            overrides=overrides)
 
     def query(self, query: np.ndarray, *, k: Optional[int] = None,
               top_m: Optional[int] = None, top_n: Optional[int] = None,

@@ -27,11 +27,23 @@ IDs in host numpy ("DRAM"); PQ codes + codebooks in jax arrays ("HBM",
 row-sharded over the ``corpus`` mesh axes when a mesh is attached); raw
 vectors behind the 4 KB-page SSD simulator.
 
-Windows + overlap: ``QueryPlan.window`` splits a batch into fixed-size scan
-windows; ``overlap_rerank=True`` dispatches window t+1's (async) device
-scan before re-ranking window t on the host, overlapping rerank I/O with
-the next scan — the executor-level analogue of the paper's CPU/GPU
-pipelining.
+Windows + pipelining: ``QueryPlan.window`` splits a batch into fixed-size
+scan windows.  The in-flight machinery is an explicit ``_InflightQueue``
+of dispatched-but-unretired windows with a configurable depth: depth d
+keeps the scans of windows t+1..t+d in flight (jax async dispatch) while
+the host re-ranks window t — the executor-level analogue of the paper's
+CPU/GPU pipelining.  ``overlap_rerank=True`` is the legacy spelling of
+depth 2; ``inflight_depth`` sets it directly.
+
+Submission is the primary API (DESIGN.md §3): ``submit(queries, plan)``
+returns a :class:`~repro.core.futures.BatchTicket` immediately after host
+traversal + device dispatch of the first ``depth`` windows; per-query
+:class:`~repro.core.futures.QueryFuture`\\ s expose ``done()/result()/
+cancel()``.  ``run()`` is submit-then-wait, so every legacy path returns
+bit-identical ids.  Per-request knobs ride along as ``PlanOverrides``:
+a batched window honors heterogeneous ``k``/``top_n``/deadlines without
+splitting the scan (the scan uses the window-max ``top_n``; each query's
+merge + re-rank applies its own effective plan).
 
 Per-query accounting is shared: a window of size B attributes ``u = |union|``
 scanned candidates and ``4u/B`` host->device bytes to each member, so
@@ -43,13 +55,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, List, Optional, Sequence
+from collections import deque
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pq
+from repro.core.futures import BatchTicket, DeadlineExceeded, QueryFuture
 from repro.core.rerank import heuristic_rerank
 from repro.models.layers import ShardCtx
 
@@ -92,17 +106,61 @@ class QueryPlan:
     rerank_beta: int = 2
     disable_early_stop: bool = False
     window: int = 0              # scan-window size; 0 = whole batch at once
-    overlap_rerank: bool = False  # overlap window t rerank with t+1 scan
+    overlap_rerank: bool = False  # legacy spelling of inflight_depth=2
+    inflight_depth: int = 0      # dispatched windows in flight; 0 = auto
+    deadline_s: Optional[float] = None  # relative to submit(); None = never
 
     @staticmethod
     def from_config(cfg, *, k: Optional[int] = None,
                     top_m: Optional[int] = None, top_n: Optional[int] = None,
                     **kw) -> "QueryPlan":
-        return QueryPlan(k=k or cfg.top_k, top_m=top_m or cfg.top_m,
-                         top_n=top_n or cfg.top_n,
+        # explicit ``is None`` so k=0 / top_n=0 are honored, not conflated
+        # with "use the config default"
+        return QueryPlan(k=cfg.top_k if k is None else k,
+                         top_m=cfg.top_m if top_m is None else top_m,
+                         top_n=cfg.top_n if top_n is None else top_n,
                          rerank_batch=cfg.rerank_batch,
                          rerank_eps=cfg.rerank_eps, rerank_beta=cfg.rerank_beta,
                          **kw)
+
+    def override(self, ov: Optional["PlanOverrides"] = None,
+                 **kw) -> "QueryPlan":
+        """Layered plan merge: non-None fields of ``ov`` (then ``kw``) win.
+        Explicit zeros are honored; only ``None`` means "keep the base"."""
+        merged = {}
+        if ov is not None:
+            merged.update({f.name: getattr(ov, f.name)
+                           for f in dataclasses.fields(ov)})
+        merged.update(kw)
+        return dataclasses.replace(
+            self, **{name: v for name, v in merged.items() if v is not None})
+
+    def effective_depth(self) -> int:
+        """In-flight window depth: explicit ``inflight_depth`` wins; else
+        the legacy ``overlap_rerank`` flag maps to depth 2 (one window
+        re-ranking while one scan is in flight)."""
+        if self.inflight_depth:
+            return max(1, self.inflight_depth)
+        return 2 if self.overlap_rerank else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanOverrides:
+    """Per-request layer merged onto a window's base :class:`QueryPlan`.
+
+    Only the knobs that make sense per-query inside a shared scan window:
+    the scan itself runs once at the window-max ``top_n``; ``k``/``top_n``
+    shape each query's merge + re-rank, ``top_m`` its graph traversal, and
+    ``deadline_s`` (relative to ``submit()``) bounds when its re-rank may
+    still start."""
+
+    k: Optional[int] = None
+    top_m: Optional[int] = None
+    top_n: Optional[int] = None
+    deadline_s: Optional[float] = None
+
+    def merge_into(self, plan: QueryPlan) -> QueryPlan:
+        return plan.override(self)
 
 
 @dataclasses.dataclass
@@ -110,12 +168,42 @@ class _Window:
     """One dispatched scan window (device work possibly still in flight)."""
 
     queries: np.ndarray
+    plans: List[QueryPlan]       # effective (override-merged) plan per query
     per_q: List[np.ndarray]      # stage ② ids per query
     union: np.ndarray            # stage ③ deduped candidate union
     vals: jax.Array              # (B, tk) masked top-n distances
     pos: jax.Array               # (B, tk) positions into the padded bucket
     t_graph: float
     t_scan_host: float           # host-side LUT/gather/dispatch time
+    start: int = 0               # global index of this window's first query
+    wi: int = 0                  # window index within the ticket
+
+
+class _InflightQueue:
+    """FIFO of dispatched-but-unretired windows, bounded by depth.
+
+    Depth 1 is the fully synchronous executor; depth d keeps up to d device
+    scans in flight while the host re-ranks the oldest window — the
+    explicit home of the pipelining that PR 1 buried inside ``run()``."""
+
+    def __init__(self, depth: int):
+        self.depth = max(1, depth)
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def full(self) -> bool:
+        return len(self._q) >= self.depth
+
+    def push(self, w: _Window) -> None:
+        self._q.append(w)
+
+    def head(self) -> _Window:
+        return self._q[0]
+
+    def pop(self) -> _Window:
+        return self._q.popleft()
 
 
 class QueryExecutor:
@@ -166,12 +254,18 @@ class QueryExecutor:
         return self._placed
 
     # --------------------------------------------------------------- stages
-    def _dispatch(self, queries: np.ndarray, plan: QueryPlan) -> _Window:
-        """Stages ①-⑥: host traversal + async device scan for one window."""
+    def _dispatch(self, queries: np.ndarray,
+                  plans: Sequence[QueryPlan]) -> _Window:
+        """Stages ①-⑥: host traversal + async device scan for one window.
+
+        Heterogeneous per-query plans share the window's scan: traversal
+        uses each query's ``top_m``; the scan runs once at the window-max
+        ``top_n`` and each query truncates to its own at merge time."""
         from repro.core.distributed import sharded_adc_topn_window
         idx = self.index
         t0 = time.perf_counter()
-        per_q = [idx.candidate_ids(q, plan.top_m) for q in queries]
+        per_q = [idx.candidate_ids(q, p.top_m)
+                 for q, p in zip(queries, plans)]
         union = (np.unique(np.concatenate(per_q)).astype(np.int64)
                  if sum(len(p) for p in per_q) else np.zeros((0,), np.int64))
         t1 = time.perf_counter()
@@ -200,40 +294,55 @@ class QueryExecutor:
                 self.ctx.mesh, P(corpus, None)))
             mask_dev = jax.device_put(mask_dev, NamedSharding(
                 self.ctx.mesh, P(None, corpus)))
+        scan_top_n = max(p.top_n for p in plans)
         vals, pos = sharded_adc_topn_window(
-            cand, luts, mask_dev, min(plan.top_n, bucket), self.ctx,
+            cand, luts, mask_dev, min(scan_top_n, bucket), self.ctx,
             use_kernel=idx.use_kernel)
-        return _Window(queries=queries, per_q=per_q, union=union,
-                       vals=vals, pos=pos, t_graph=t1 - t0,
+        return _Window(queries=queries, plans=list(plans), per_q=per_q,
+                       union=union, vals=vals, pos=pos, t_graph=t1 - t0,
                        t_scan_host=time.perf_counter() - t1)
 
-    def _finish(self, w: _Window, plan: QueryPlan) -> List[QueryResult]:
-        """Stages ⑥-⑦: block on the scan, merge, re-rank against the SSD."""
+    def _finish_into(self, w: _Window, futures: Sequence[QueryFuture],
+                     deadlines: Sequence[Optional[float]]) -> None:
+        """Stages ⑥-⑦: block on the scan, merge, re-rank against the SSD,
+        and resolve ``futures[w.start + qi]`` per query.  Cancelled futures
+        skip their re-rank; expired deadlines resolve to
+        :class:`~repro.core.futures.DeadlineExceeded` instead of starting
+        one."""
         idx = self.index
         B = len(w.queries)
         u = len(w.union)
         t0 = time.perf_counter()
         vals = np.asarray(w.vals)          # blocks until the scan lands
         pos = np.asarray(w.pos)
-        # host dispatch time + blocking wait: under overlap_rerank the gap
-        # between dispatch and finish belongs to the PREVIOUS window's
+        # host dispatch time + blocking wait: with depth > 1 the gap
+        # between dispatch and finish belongs to the PREVIOUS windows'
         # rerank, so wall-clock-since-dispatch would double-count it
         t_scan = w.t_scan_host + (time.perf_counter() - t0)
-        out: List[QueryResult] = []
         for qi, q in enumerate(w.queries):
+            fut = futures[w.start + qi]
+            if fut.done():                 # cancelled while queued/in flight
+                continue
+            dl = deadlines[w.start + qi]
+            if dl is not None and time.perf_counter() > dl:
+                fut._set_exception(DeadlineExceeded(
+                    f"deadline passed before re-rank of query "
+                    f"{w.start + qi}"))
+                continue
+            p = w.plans[qi]
             good = np.isfinite(vals[qi])
             ids_sel = w.union[pos[qi][good]]
             d_sel = vals[qi][good]
             # ascending (distance, id): makes sharded == unsharded exactly
             order = np.lexsort((ids_sel, d_sel))
-            n_eff = min(plan.top_n, len(w.per_q[qi]))
+            n_eff = min(p.top_n, len(w.per_q[qi]))
             order_ids = ids_sel[order][:n_eff]
             t2 = time.perf_counter()
             rr = heuristic_rerank(
-                np.asarray(q, np.float32), order_ids, idx.ssd, plan.k,
-                batch_size=plan.rerank_batch, eps=plan.rerank_eps,
-                beta=plan.rerank_beta,
-                disable_early_stop=plan.disable_early_stop)
+                np.asarray(q, np.float32), order_ids, idx.ssd, p.k,
+                batch_size=p.rerank_batch, eps=p.rerank_eps,
+                beta=p.rerank_beta,
+                disable_early_stop=p.disable_early_stop)
             stats = QueryStats(
                 ios=rr.io.ios, pages_requested=rr.io.pages_requested,
                 buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
@@ -244,29 +353,88 @@ class QueryExecutor:
                 early_stopped=rr.early_stopped,
                 t_graph=w.t_graph / max(B, 1), t_scan=t_scan / max(B, 1),
                 t_rerank=time.perf_counter() - t2)
-            out.append(QueryResult(ids=rr.ids, dists=rr.dists, stats=stats))
-        return out
+            fut._set_result(QueryResult(ids=rr.ids, dists=rr.dists,
+                                        stats=stats))
+
+    # --------------------------------------------------------------- submit
+    def submit(self, queries: np.ndarray, plan: QueryPlan,
+               overrides: Optional[Sequence[Optional[PlanOverrides]]] = None
+               ) -> BatchTicket:
+        """Asynchronous entry point: host-traverse + device-dispatch up to
+        ``plan.effective_depth()`` windows, then return a
+        :class:`~repro.core.futures.BatchTicket` whose per-query futures
+        resolve on demand.
+
+        Remaining windows stay host-side and are dispatched as depth slots
+        free up — the pump prefers dispatching window t+1 over blocking on
+        window t's scan, which is exactly the paper's CPU/GPU overlap."""
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        n = len(queries)
+        if overrides is not None and len(overrides) != n:
+            raise ValueError(f"{len(overrides)} overrides for {n} queries")
+        plans = [plan if overrides is None or overrides[i] is None
+                 else overrides[i].merge_into(plan) for i in range(n)]
+        futures = [QueryFuture(tag=i) for i in range(n)]
+        ticket = BatchTicket(futures)
+        if n == 0:
+            return ticket
+        t_submit = time.perf_counter()
+        deadlines = [None if p.deadline_s is None else t_submit + p.deadline_s
+                     for p in plans]
+        W = plan.window or n
+        starts = list(range(0, n, W))
+        inflight = _InflightQueue(plan.effective_depth())
+        cursor = [0]                       # next undispatched window index
+
+        def _dispatch_next() -> None:
+            wi = cursor[0]
+            s = starts[wi]
+            w = self._dispatch(queries[s:s + W], plans[s:s + W])
+            w.start, w.wi = s, wi
+            inflight.push(w)
+            ticket.events.append(("dispatch", wi))
+            cursor[0] += 1
+
+        def _retire_oldest() -> None:
+            w = inflight.pop()
+            ticket.events.append(("finish", w.wi))
+            self._finish_into(w, futures, deadlines)
+
+        def _pump() -> bool:
+            if cursor[0] < len(starts) and not inflight.full():
+                _dispatch_next()
+                return True
+            if len(inflight):
+                _retire_oldest()
+                return True
+            return False
+
+        def _poll() -> bool:
+            from repro.core.distributed import window_scan_ready
+            progressed = False
+            while len(inflight) and window_scan_ready(inflight.head().vals,
+                                                      inflight.head().pos):
+                _retire_oldest()
+                progressed = True
+            while cursor[0] < len(starts) and not inflight.full():
+                _dispatch_next()
+                progressed = True
+            return progressed
+
+        ticket._pump = _pump
+        ticket._poll = _poll
+        for f in futures:
+            f._driver = _pump
+        # eager phase: fill the in-flight depth before handing back
+        while cursor[0] < len(starts) and not inflight.full():
+            _dispatch_next()
+        return ticket
 
     # ------------------------------------------------------------------ run
     def run(self, queries: np.ndarray, plan: QueryPlan) -> List[QueryResult]:
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        if not len(queries):
-            return []
-        W = plan.window or len(queries)
-        results: List[QueryResult] = []
-        pending: Optional[_Window] = None
-        for s in range(0, len(queries), W):
-            dispatched = self._dispatch(queries[s:s + W], plan)
-            if pending is not None:          # overlap: t+1 scan in flight
-                results.extend(self._finish(pending, plan))
-                pending = None
-            if plan.overlap_rerank:
-                pending = dispatched
-            else:
-                results.extend(self._finish(dispatched, plan))
-        if pending is not None:
-            results.extend(self._finish(pending, plan))
-        return results
+        """Submit-then-wait: bit-identical ids to ``submit()``/``result()``
+        for the same plan, by construction."""
+        return self.submit(queries, plan).results()
 
     def run_one(self, query: np.ndarray, plan: QueryPlan) -> QueryResult:
         return self.run(np.asarray(query, np.float32)[None], plan)[0]

@@ -1,0 +1,180 @@
+"""Futures for asynchronous query submission (the PR-2 API redesign).
+
+The paper's throughput rests on keeping the CPU re-rank of batch *t*
+overlapped with the GPU scan of batch *t+1* (§3, §4.2).  On the jax port
+the "stream" is jax's async dispatch: device work is in flight the moment
+the scan is traced, and the host only blocks when it *reads* the result.
+This module gives that overlap a public shape:
+
+* :class:`QueryFuture` — one per submitted query.  ``done()/result()/
+  cancel()/exception()`` mirror ``concurrent.futures`` semantics, but the
+  harness is synchronous: a pending future *drives* its producer (the
+  executor's in-flight queue, or the serving pump loop) from ``result()``
+  instead of parking a thread.
+* :class:`BatchTicket` — the handle ``QueryExecutor.submit`` returns
+  immediately after host traversal + device dispatch.  It owns the pump
+  that retires in-flight scan windows in FIFO order and the
+  ``events`` ordering probe (``("dispatch", t)`` / ``("finish", t)``)
+  that tests use to assert the host dispatched window t+1 before blocking
+  on window t.
+
+Cancellation is per-query and takes effect at the per-query stage: the
+shared window scan is already in flight on the device, so ``cancel()``
+skips the query's SSD re-rank (the expensive host stage) and leaves the
+scan untouched.  Deadlines behave the same way: they are checked when the
+query's re-rank would start, never mid-kernel.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+__all__ = [
+    "QueryFuture", "BatchTicket",
+    "FutureError", "CancelledError", "DeadlineExceeded", "BackpressureError",
+]
+
+
+class FutureError(RuntimeError):
+    """Base class for query-future failures."""
+
+
+class CancelledError(FutureError):
+    """Raised by ``result()``/``exception()`` on a cancelled future."""
+
+
+class DeadlineExceeded(FutureError):
+    """The request's deadline passed before its re-rank stage started."""
+
+
+class BackpressureError(FutureError):
+    """Admission control: the serving queue is full; retry later."""
+
+
+_PENDING, _CANCELLED, _DONE, _ERROR = range(4)
+
+
+class QueryFuture:
+    """Result handle for one submitted query.
+
+    ``result()`` drives the producer (``_driver`` — set by whoever created
+    the future) until this future resolves; there is no thread to wait on.
+    """
+
+    __slots__ = ("_state", "_result", "_exc", "_driver", "tag")
+
+    def __init__(self, tag: Any = None,
+                 driver: Optional[Callable[[], bool]] = None):
+        self._state = _PENDING
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+        self._driver = driver
+        self.tag = tag
+
+    # -------------------------------------------------------------- queries
+    def done(self) -> bool:
+        """True once resolved — with a result, an exception, or cancelled."""
+        return self._state != _PENDING
+
+    def cancelled(self) -> bool:
+        return self._state == _CANCELLED
+
+    # ------------------------------------------------------------- commands
+    def cancel(self) -> bool:
+        """Cancel if still pending.  The shared scan is not recalled (it is
+        already on the device); the query's re-rank is skipped.  Returns
+        True if this call (or a previous one) cancelled the future."""
+        if self._state == _CANCELLED:
+            return True
+        if self._state != _PENDING:
+            return False
+        self._state = _CANCELLED
+        return True
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
+        while self._state == _PENDING:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError("QueryFuture.result timed out")
+            if self._driver is None or not self._driver():
+                raise FutureError(
+                    "QueryFuture is pending but its producer made no "
+                    "progress (was the service queue dropped?)")
+        if self._state == _CANCELLED:
+            raise CancelledError("query was cancelled")
+        if self._state == _ERROR:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        """The stored exception (None if the future holds a result).
+        Drives the producer like ``result()``; raises on cancellation."""
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
+        while self._state == _PENDING:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError("QueryFuture.exception timed out")
+            if self._driver is None or not self._driver():
+                raise FutureError("QueryFuture is pending with no producer")
+        if self._state == _CANCELLED:
+            raise CancelledError("query was cancelled")
+        return self._exc
+
+    # ------------------------------------------------- producer-side setters
+    def _set_result(self, value: Any) -> None:
+        if self._state == _PENDING:
+            self._state = _DONE
+            self._result = value
+
+    def _set_exception(self, exc: BaseException) -> None:
+        if self._state == _PENDING:
+            self._state = _ERROR
+            self._exc = exc
+
+
+class BatchTicket:
+    """Handle for one ``submit()`` call: the per-query futures plus the
+    pump that makes progress on the in-flight window queue.
+
+    ``events`` records ``("dispatch", t)`` / ``("finish", t)`` in host
+    order — the ordering probe for the pipelining contract ("dispatch
+    window t+1 before blocking on window t's scan").
+    """
+
+    def __init__(self, futures: List[QueryFuture],
+                 events: Optional[List[Tuple[str, int]]] = None):
+        self.futures = futures
+        self.events: List[Tuple[str, int]] = events if events is not None \
+            else []
+        self._pump: Callable[[], bool] = lambda: False
+        self._poll: Callable[[], bool] = lambda: False
+
+    def __len__(self) -> int:
+        return len(self.futures)
+
+    def done(self) -> bool:
+        return all(f.done() for f in self.futures)
+
+    def poll(self) -> bool:
+        """Non-blocking progress: retire leading windows whose device scan
+        already landed, and dispatch queued windows into freed depth slots.
+        Returns True if anything advanced."""
+        return self._poll()
+
+    def wait(self) -> "BatchTicket":
+        """Drive the pump until every future is resolved.  Exceptions stay
+        stored on their futures; ``wait()`` itself never raises them."""
+        while not self.done():
+            if not self._pump():
+                break
+        return self
+
+    def results(self) -> List[Any]:
+        """``wait()`` then collect in submission order.  Re-raises the
+        first stored exception (cancellation / deadline), so plain callers
+        that never cancel get a clean ``List[QueryResult]``."""
+        self.wait()
+        return [f.result() for f in self.futures]

@@ -1,4 +1,4 @@
-"""ANNS serving front-end: request queue + dynamic batching.
+"""ANNS serving front-end: futures-first request queue + dynamic batching.
 
 The paper's prototype binds one CPU thread per query (§5); the TPU
 adaptation's natural unit is a *batch* per scan.  This front-end bridges
@@ -8,13 +8,26 @@ whole window — inter-query candidate dedup (§4.3 applied to the HBM scan),
 the mesh-sharded ADC scan, and per-request latency attribution all come
 from the executor, not from per-path code.
 
-``scan_window``/``overlap_rerank`` expose the executor's pipelining knob:
-a pump batch larger than ``scan_window`` is split into scan windows and the
-rerank I/O of window t overlaps the device scan of window t+1.
+PR-2 redesign (DESIGN.md §3): ``submit()`` returns a
+:class:`~repro.core.futures.QueryFuture` resolving to a :class:`Response`
+(``fut.result().result`` is the :class:`QueryResult`), with
 
-Synchronous harness (no asyncio dependency): callers enqueue requests and
-``pump()`` drains windows; on a real deployment the pump loop runs in a
-dedicated thread per replica."""
+* **admission control** — a bounded queue (``max_queue``); submissions past
+  the bound raise :class:`BackpressureError` instead of growing latency;
+* **per-request plans** — ``k``/``top_n`` ride to the executor as
+  ``PlanOverrides``, so a mixed-``k`` batch is honored inside ONE shared
+  scan window (the PR-1 service dropped ``Request.k`` on the floor);
+* **deadlines + cancellation** — ``deadline_s`` expires requests at batch
+  formation or before their re-rank; ``fut.cancel()`` drops a queued
+  request or skips its re-rank mid-flight;
+* **pipelining** — ``scan_window``/``inflight_depth`` expose the
+  executor's ``_InflightQueue``: a pump batch splits into scan windows and
+  the rerank of window t overlaps the in-flight scans of t+1..t+d.
+
+Synchronous harness (no asyncio dependency): ``pump()`` drains one batch
+window; a pending future drives ``pump(force=True)`` from ``result()``.
+On a real deployment the pump loop runs in a dedicated thread per replica.
+"""
 
 from __future__ import annotations
 
@@ -26,6 +39,12 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.core.engine import FusionANNSIndex, QueryResult
+from repro.core.executor import PlanOverrides
+from repro.core.futures import (BackpressureError, DeadlineExceeded,
+                                QueryFuture)
+
+__all__ = ["BatchingANNSService", "Request", "Response",
+           "BackpressureError", "DeadlineExceeded", "QueryFuture"]
 
 
 @dataclasses.dataclass
@@ -34,6 +53,9 @@ class Request:
     query: np.ndarray
     t_enqueue: float
     k: Optional[int] = None
+    top_n: Optional[int] = None
+    deadline: Optional[float] = None      # absolute perf_counter time
+    future: Optional[QueryFuture] = None
 
 
 @dataclasses.dataclass
@@ -48,25 +70,55 @@ class Response:
 class BatchingANNSService:
     def __init__(self, index: FusionANNSIndex, *, max_batch: int = 32,
                  max_wait_s: float = 0.002, scan_window: int = 0,
-                 overlap_rerank: bool = False):
+                 overlap_rerank: bool = False, inflight_depth: int = 0,
+                 max_queue: int = 1024):
         self.index = index
         self.executor = index.executor
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.scan_window = scan_window
         self.overlap_rerank = overlap_rerank
+        self.inflight_depth = inflight_depth
+        self.max_queue = max_queue
         self._queue: Deque[Request] = deque()
         self._next_rid = 0
         self.stats: Dict[str, float] = {
-            "batches": 0, "requests": 0, "mean_batch": 0.0}
+            "batches": 0, "requests": 0, "mean_batch": 0.0,
+            "rejected": 0, "expired": 0, "cancelled": 0}
+        # enqueue -> resolve per request; bounded so a long-lived replica's
+        # percentile window stays O(1) memory (sliding, newest-wins)
+        self.latencies_s: Deque[float] = deque(maxlen=8192)
 
-    def submit(self, query: np.ndarray, k: Optional[int] = None) -> int:
+    # --------------------------------------------------------------- submit
+    def submit(self, query: np.ndarray, k: Optional[int] = None, *,
+               top_n: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> QueryFuture:
+        """Enqueue one request; returns its future immediately.
+
+        Raises :class:`BackpressureError` when the queue is at
+        ``max_queue`` — admission control instead of unbounded latency."""
+        if len(self._queue) >= self.max_queue:
+            self.stats["rejected"] += 1
+            raise BackpressureError(
+                f"queue full ({self.max_queue} pending); retry later")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(query, np.float32),
-                                   time.perf_counter(), k))
-        return rid
+        now = time.perf_counter()
+        fut = QueryFuture(tag=rid, driver=self._drive)  # fut.tag == rid
+        self._queue.append(Request(
+            rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
+            deadline=None if deadline_s is None else now + deadline_s,
+            future=fut))
+        return fut
 
+    def _drive(self) -> bool:
+        """Future-side driver: a pending future forces a pump."""
+        if not self._queue:
+            return False
+        self.pump(force=True)
+        return True
+
+    # ----------------------------------------------------------------- pump
     def _window_ready(self, now: float) -> bool:
         if not self._queue:
             return False
@@ -75,17 +127,46 @@ class BatchingANNSService:
         return (now - self._queue[0].t_enqueue) >= self.max_wait_s
 
     def pump(self, force: bool = False) -> List[Response]:
-        """Serve at most one batch window; returns its responses."""
+        """Serve at most one batch window; returns its responses.
+
+        Cancelled requests are dropped at batch formation; requests whose
+        deadline already passed resolve to :class:`DeadlineExceeded`
+        without consuming a batch slot."""
         now = time.perf_counter()
         if not (force and self._queue) and not self._window_ready(now):
             return []
-        batch = [self._queue.popleft()
-                 for _ in range(min(self.max_batch, len(self._queue)))]
+        batch: List[Request] = []
+        while self._queue and len(batch) < self.max_batch:
+            r = self._queue.popleft()
+            if r.future is not None and r.future.cancelled():
+                self.stats["cancelled"] += 1
+                continue
+            if r.deadline is not None and now > r.deadline:
+                self.stats["expired"] += 1
+                if r.future is not None:
+                    r.future._set_exception(DeadlineExceeded(
+                        f"request {r.rid} expired in queue"))
+                continue
+            batch.append(r)
+        if not batch:
+            return []
         queries = np.stack([r.query for r in batch])
         plan = self.index.plan(window=self.scan_window,
-                               overlap_rerank=self.overlap_rerank)
+                               overlap_rerank=self.overlap_rerank,
+                               inflight_depth=self.inflight_depth)
         t0 = time.perf_counter()
-        results = self.executor.run(queries, plan)
+        # per-request knobs reach the executor as PlanOverrides — one shared
+        # scan window honors a mixed-k batch (deadline re-based to submit)
+        overrides = [PlanOverrides(
+            k=r.k, top_n=r.top_n,
+            deadline_s=None if r.deadline is None else r.deadline - t0)
+            for r in batch]
+        ticket = self.executor.submit(queries, plan, overrides=overrides)
+        # propagate cancellations that raced the batch formation
+        for r, f in zip(batch, ticket.futures):
+            if r.future is not None and r.future.cancelled():
+                f.cancel()
+        ticket.wait()                      # exceptions stay on the futures
         t_serve = time.perf_counter() - t0
         self.stats["batches"] += 1
         self.stats["requests"] += len(batch)
@@ -93,13 +174,39 @@ class BatchingANNSService:
                                     / self.stats["batches"])
         # per-request attribution: shared wall-clock + the executor's
         # per-query stage timings (res.stats.t_graph/t_scan/t_rerank)
-        return [Response(rid=r.rid, result=res,
-                         t_queue_s=t0 - r.t_enqueue, t_serve_s=t_serve,
-                         batch_size=len(batch))
-                for r, res in zip(batch, results)]
+        responses: List[Response] = []
+        t_done = time.perf_counter()
+        for r, f in zip(batch, ticket.futures):
+            if f.cancelled():
+                self.stats["cancelled"] += 1
+                continue
+            exc = f.exception()
+            if exc is not None:
+                self.stats["expired"] += isinstance(exc, DeadlineExceeded)
+                if r.future is not None:
+                    r.future._set_exception(exc)
+                continue
+            resp = Response(rid=r.rid, result=f.result(),
+                            t_queue_s=t0 - r.t_enqueue, t_serve_s=t_serve,
+                            batch_size=len(batch))
+            if r.future is not None:
+                r.future._set_result(resp)
+            self.latencies_s.append(t_done - r.t_enqueue)
+            responses.append(resp)
+        return responses
 
     def drain(self) -> List[Response]:
         out: List[Response] = []
         while self._queue:
             out.extend(self.pump(force=True))
         return out
+
+    # ---------------------------------------------------------------- stats
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 of per-request enqueue->resolve latency (seconds)."""
+        if not self.latencies_s:
+            return {"p50": 0.0, "p99": 0.0, "n": 0}
+        lat = np.asarray(self.latencies_s)
+        return {"p50": float(np.percentile(lat, 50)),
+                "p99": float(np.percentile(lat, 99)),
+                "n": len(lat)}

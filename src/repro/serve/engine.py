@@ -79,7 +79,13 @@ class LMServer:
 class RAGPipeline:
     """Retrieval-augmented generation: FusionANNS retrieves the top-k
     context vectors for the query embedding; their ids become context
-    tokens prepended to the prompt (paper Fig. 1 flow)."""
+    tokens prepended to the prompt (paper Fig. 1 flow).
+
+    Uses the futures-first retrieval API (DESIGN.md §3): ``answer`` submits
+    the retrieval (host traversal + async device scan) and only blocks on
+    the future when the context tokens are needed; ``answer_batch``
+    pipelines a whole request window through one submission, resolving
+    each retrieval future right before its generation step."""
 
     def __init__(self, anns_index, lm_server: LMServer,
                  embed_fn: Optional[Callable] = None):
@@ -87,13 +93,39 @@ class RAGPipeline:
         self.server = lm_server
         self.embed = embed_fn or (lambda toks: None)
 
+    def _ctx_tokens(self, res) -> np.ndarray:
+        vocab = self.server.cfg.vocab_size
+        return (res.ids.astype(np.int64) % vocab).astype(np.int32)
+
     def answer(self, query_vec: np.ndarray, prompt: np.ndarray,
                n_tokens: int = 16, k: int = 4) -> Dict[str, Any]:
-        res = self.index.query(query_vec, k=k)
-        vocab = self.server.cfg.vocab_size
-        ctx_tokens = (res.ids.astype(np.int64) % vocab).astype(np.int32)
-        full = np.concatenate([ctx_tokens[None, :], prompt], axis=1)
+        ticket = self.index.submit(
+            np.asarray(query_vec, np.float32)[None], k=k)
+        res = ticket.futures[0].result()   # scan was in flight since submit
+        full = np.concatenate([self._ctx_tokens(res)[None, :], prompt],
+                              axis=1)
         out = self.server.generate(full, n_tokens)
         out["retrieved_ids"] = res.ids
         out["retrieval_stats"] = res.stats
         return out
+
+    def answer_batch(self, query_vecs: np.ndarray, prompts: np.ndarray,
+                     n_tokens: int = 16, k: int = 4,
+                     inflight_depth: int = 2) -> List[Dict[str, Any]]:
+        """One retrieval submission for B requests: per-request scan
+        windows pipeline on the device (depth ``inflight_depth``) while the
+        host runs generation for already-resolved requests."""
+        ticket = self.index.submit(np.asarray(query_vecs, np.float32),
+                                   k=k, window=1,
+                                   inflight_depth=inflight_depth)
+        outs: List[Dict[str, Any]] = []
+        for fut, prompt in zip(ticket.futures, prompts):
+            res = fut.result()
+            full = np.concatenate([self._ctx_tokens(res)[None, :],
+                                   prompt[None] if prompt.ndim == 1
+                                   else prompt], axis=1)
+            out = self.server.generate(full, n_tokens)
+            out["retrieved_ids"] = res.ids
+            out["retrieval_stats"] = res.stats
+            outs.append(out)
+        return outs

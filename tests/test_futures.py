@@ -1,0 +1,267 @@
+"""Futures-first query API (ISSUE 2 acceptance).
+
+Contract under test:
+* ``submit()``-then-``result()`` returns bit-identical ids to ``run()``
+  for the same plan, at every window/overlap/depth combination;
+* with inflight depth >= 2 the host dispatches window t+1 BEFORE blocking
+  on window t's scan (asserted via the ticket's event-ordering probe, not
+  wall-clock), and depth 1 stays strictly synchronous;
+* per-request ``k`` is honored in mixed batches through one shared scan
+  window — both at the executor (``PlanOverrides``) and through the
+  serving front-end (the PR-1 ``pump()`` dropped ``Request.k``);
+* cancellation skips the per-query re-rank and surfaces
+  ``CancelledError``; deadlines surface ``DeadlineExceeded``; the serving
+  queue applies backpressure at ``max_queue``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import PlanOverrides, QueryPlan
+from repro.core.futures import (BackpressureError, CancelledError,
+                                DeadlineExceeded, FutureError, QueryFuture)
+from repro.serve.anns_service import BatchingANNSService
+
+
+# --------------------------------------------------------------- executor
+
+@pytest.fixture(scope="module")
+def singles(anns_bundle):
+    return [anns_bundle.index.query(q) for q in anns_bundle.queries]
+
+
+def test_submit_result_matches_run(anns_bundle, singles):
+    b = anns_bundle
+    for kw in ({}, {"window": 4}, {"window": 4, "overlap_rerank": True},
+               {"window": 3, "inflight_depth": 3}):
+        plan = b.index.plan(**kw)
+        run_res = b.index.executor.run(b.queries, plan)
+        ticket = b.index.executor.submit(b.queries, plan)
+        assert not ticket.done()          # per-query rerank still pending
+        for one, rr, fut in zip(singles, run_res, ticket.futures):
+            np.testing.assert_array_equal(rr.ids, fut.result().ids)
+            np.testing.assert_array_equal(one.ids, rr.ids)
+        assert ticket.done()
+
+
+def test_overlap_true_false_id_parity(anns_bundle, singles):
+    """Satellite: overlap_rerank=True vs False (and deeper pipelines)
+    never change ids — pipelining is a scheduling choice, not a result
+    knob."""
+    b = anns_bundle
+    base = None
+    for overlap, depth in ((False, 0), (True, 0), (False, 1), (False, 2),
+                           (False, 4)):
+        res = b.index.executor.run(b.queries, b.index.plan(
+            window=4, overlap_rerank=overlap, inflight_depth=depth))
+        ids = np.stack([r.ids for r in res])
+        if base is None:
+            base = ids
+        np.testing.assert_array_equal(base, ids)
+    np.testing.assert_array_equal(
+        base, np.stack([s.ids for s in singles]))
+
+
+def _event_index(events, kind):
+    return {wi: i for i, (k, wi) in enumerate(events) if k == kind}
+
+
+def test_depth2_dispatches_ahead_of_blocking(anns_bundle):
+    """Acceptance probe: with depth >= 2 the host dispatches window t+1
+    before blocking on window t's scan — via event ordering, not
+    wall-clock."""
+    b = anns_bundle
+    n_w = 4
+    ticket = b.index.executor.submit(
+        b.queries[:8], b.index.plan(window=2, inflight_depth=2))
+    # eager phase already dispatched the first two windows
+    assert ticket.events[:2] == [("dispatch", 0), ("dispatch", 1)]
+    ticket.wait()
+    disp = _event_index(ticket.events, "dispatch")
+    fin = _event_index(ticket.events, "finish")
+    assert len(disp) == len(fin) == n_w
+    for t in range(n_w - 1):
+        assert disp[t + 1] < fin[t], (t, ticket.events)
+
+
+def test_depth1_is_synchronous(anns_bundle):
+    b = anns_bundle
+    ticket = b.index.executor.submit(
+        b.queries[:8], b.index.plan(window=2, inflight_depth=1))
+    ticket.wait()
+    disp = _event_index(ticket.events, "dispatch")
+    fin = _event_index(ticket.events, "finish")
+    for t in range(3):
+        assert fin[t] < disp[t + 1], ticket.events
+
+
+def test_ticket_poll_makes_progress(anns_bundle):
+    b = anns_bundle
+    ticket = b.index.executor.submit(
+        b.queries[:6], b.index.plan(window=2, inflight_depth=2))
+    while not ticket.done():
+        if not ticket.poll():        # scan not landed yet: block via pump
+            ticket._pump()
+    ids = np.stack([f.result().ids for f in ticket.futures])
+    ref = np.stack([b.index.query(q).ids for q in b.queries[:6]])
+    np.testing.assert_array_equal(ids, ref)
+
+
+def test_mixed_k_overrides_one_window(anns_bundle):
+    """Heterogeneous per-request k inside ONE shared scan window."""
+    b = anns_bundle
+    ks = [3, 7, 5, 10]
+    ticket = b.index.executor.submit(
+        b.queries[:4], b.index.plan(),
+        overrides=[PlanOverrides(k=k) for k in ks])
+    results = ticket.results()
+    # one window => every member sees the same union scan
+    u = results[0].stats.candidates_scanned
+    assert all(r.stats.candidates_scanned == u for r in results)
+    for q, k, r in zip(b.queries, ks, results):
+        assert len(r.ids) == k
+        np.testing.assert_array_equal(r.ids, b.index.query(q, k=k).ids)
+
+
+def test_future_cancel_semantics(anns_bundle, singles):
+    b = anns_bundle
+    ticket = b.index.executor.submit(
+        b.queries[:4], b.index.plan(window=1, inflight_depth=1))
+    victim = ticket.futures[2]
+    assert victim.cancel() is True
+    assert victim.cancelled() and victim.done()
+    assert victim.cancel() is True            # idempotent
+    with pytest.raises(CancelledError):
+        victim.result()
+    # the rest of the batch is unaffected and bit-identical
+    for qi in (0, 1, 3):
+        np.testing.assert_array_equal(singles[qi].ids,
+                                      ticket.futures[qi].result().ids)
+    # cancel after resolution fails
+    assert ticket.futures[0].cancel() is False
+
+
+def test_future_deadline(anns_bundle):
+    b = anns_bundle
+    ticket = b.index.executor.submit(
+        b.queries[:2], b.index.plan(),
+        overrides=[PlanOverrides(deadline_s=0.0), None])
+    with pytest.raises(DeadlineExceeded):
+        ticket.futures[0].result()
+    assert ticket.futures[0].exception() is not None
+    ok = ticket.futures[1].result()           # neighbour is unaffected
+    np.testing.assert_array_equal(ok.ids, b.index.query(b.queries[1]).ids)
+    # plan-level deadline_s=0.0 is honored too (falsy-zero regression)
+    t2 = b.index.executor.submit(b.queries[:1],
+                                 b.index.plan(deadline_s=0.0))
+    with pytest.raises(DeadlineExceeded):
+        t2.futures[0].result()
+
+
+def test_orphan_future_raises(anns_bundle):
+    fut = QueryFuture()
+    with pytest.raises(FutureError):
+        fut.result()
+    with pytest.raises(TimeoutError):
+        QueryFuture(driver=lambda: True).result(timeout=0.0)
+
+
+# ------------------------------------------------------------------- plan
+
+def test_from_config_falsy_values(anns_bundle):
+    """Satellite: explicit 0 must not fall back to the config default."""
+    cfg = anns_bundle.cfg
+    p = QueryPlan.from_config(cfg)
+    assert (p.k, p.top_m, p.top_n) == (cfg.top_k, cfg.top_m, cfg.top_n)
+    assert QueryPlan.from_config(cfg, k=0).k == 0
+    assert QueryPlan.from_config(cfg, top_m=0).top_m == 0
+    assert QueryPlan.from_config(cfg, top_n=0).top_n == 0
+
+
+def test_plan_override_merge(anns_bundle):
+    base = QueryPlan.from_config(anns_bundle.cfg)
+    merged = PlanOverrides(k=3, deadline_s=1.5).merge_into(base)
+    assert merged.k == 3 and merged.deadline_s == 1.5
+    assert merged.top_n == base.top_n         # None keeps the base
+    assert base.override(top_n=0).top_n == 0  # explicit zero wins
+    assert base.override().k == base.k
+    assert base.effective_depth() == 1
+    assert base.override(overlap_rerank=True).effective_depth() == 2
+    assert base.override(inflight_depth=3).effective_depth() == 3
+
+
+# ---------------------------------------------------------------- service
+
+def test_service_per_request_k_regression(anns_bundle):
+    """Satellite regression: pump() must honor Request.k (PR 1 stored it
+    and then ran every request at the plan default)."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0)
+    ks = [3, 5, 7, 10]
+    futs = [svc.submit(q, k=k) for q, k in zip(b.queries, ks)]
+    svc.drain()
+    assert svc.stats["batches"] == 1          # ONE mixed-k scan window
+    for q, k, f in zip(b.queries, ks, futs):
+        resp = f.result()
+        assert resp.batch_size == 4
+        assert len(resp.result.ids) == k
+        np.testing.assert_array_equal(resp.result.ids,
+                                      b.index.query(q, k=k).ids)
+
+
+def test_service_future_drives_pump(anns_bundle):
+    """result() on a pending service future forces the pump itself."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=64, max_wait_s=10.0)
+    fut = svc.submit(b.queries[0])
+    assert not fut.done()
+    resp = fut.result()                       # no explicit pump()/drain()
+    np.testing.assert_array_equal(resp.result.ids,
+                                  b.index.query(b.queries[0]).ids)
+    assert svc.stats["requests"] == 1
+
+
+def test_service_backpressure(anns_bundle):
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0,
+                              max_queue=2)
+    svc.submit(b.queries[0])
+    svc.submit(b.queries[1])
+    with pytest.raises(BackpressureError):
+        svc.submit(b.queries[2])
+    assert svc.stats["rejected"] == 1
+    svc.drain()                               # queue clears; admission again
+    fut = svc.submit(b.queries[2])
+    assert fut.result().result.ids is not None
+
+
+def test_service_cancel_and_deadline(anns_bundle):
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0)
+    live = svc.submit(b.queries[0])
+    dead = svc.submit(b.queries[1], deadline_s=0.0)
+    gone = svc.submit(b.queries[2])
+    assert gone.cancel()
+    responses = svc.drain()
+    assert [r.rid for r in responses] == [live.tag]
+    with pytest.raises(DeadlineExceeded):
+        dead.result()
+    with pytest.raises(CancelledError):
+        gone.result()
+    assert svc.stats["expired"] == 1 and svc.stats["cancelled"] == 1
+    np.testing.assert_array_equal(live.result().result.ids,
+                                  b.index.query(b.queries[0]).ids)
+
+
+def test_service_latency_percentiles(anns_bundle):
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0,
+                              scan_window=2, inflight_depth=2)
+    futs = [svc.submit(q) for q in b.queries[:8]]
+    svc.drain()
+    pct = svc.latency_percentiles()
+    assert pct["n"] == 8
+    assert 0 < pct["p50"] <= pct["p99"]
+    ref = np.stack([b.index.query(q).ids for q in b.queries[:8]])
+    got = np.stack([f.result().result.ids for f in futs])
+    np.testing.assert_array_equal(ref, got)

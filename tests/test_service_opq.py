@@ -22,12 +22,16 @@ def small_index(anns_bundle):
 def test_service_batches_and_answers(small_index):
     cfg, data, queries, index = small_index
     svc = BatchingANNSService(index, max_batch=8, max_wait_s=0.0)
-    rids = [svc.submit(q) for q in queries]
+    futs = [svc.submit(q) for q in queries]   # QueryFuture per request
     responses = svc.drain()
     assert len(responses) == len(queries)
     gt = ground_truth(data, queries, 10)
+    # futures resolve to the same Response objects drain() returned
     by_rid = {r.rid: r for r in responses}
-    ids = np.stack([by_rid[r].result.ids for r in rids])
+    for f in futs:
+        assert f.done()
+        assert f.result() is by_rid[f.tag]
+    ids = np.stack([f.result().result.ids for f in futs])
     assert recall_at_k(ids, gt, 10) >= 0.9
     assert svc.stats["batches"] >= 2          # 20 queries / window 8
     assert all(r.batch_size <= 8 for r in responses)
