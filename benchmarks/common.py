@@ -117,6 +117,53 @@ def service_latency(index: FusionANNSIndex, queries, **svc_kw) -> Dict:
     return pct
 
 
+def service_latency_threaded(index: FusionANNSIndex, queries, *,
+                             producers: int = 8, **svc_kw) -> Dict:
+    """Drive the THREADED serving runtime (pump thread + ticker) from N
+    producer threads against one replica and report per-request p50/p99
+    enqueue->resolve latency (seconds).
+
+    Each producer submits its share of ``queries`` (retrying through
+    backpressure) and blocks on its futures — real condition-variable
+    waits against the pump thread.  ``out_of_order_batches`` counts pump
+    batches where the ticker retired a younger scan window before an
+    older one finished re-ranking."""
+    import threading
+    from repro.serve.anns_service import BackpressureError, \
+        BatchingANNSService
+    svc = BatchingANNSService(index, threaded=True, **svc_kw)
+    futs: List[List] = [[] for _ in range(producers)]
+    chunks = [queries[i::producers] for i in range(producers)]
+
+    def produce(i):
+        for q in chunks[i]:
+            while True:
+                try:
+                    futs[i].append(svc.submit(q))
+                    break
+                except BackpressureError:
+                    time.sleep(1e-3)
+
+    threads = [threading.Thread(target=produce, args=(i,))
+               for i in range(producers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    responses = [f.result(timeout=300) for fs in futs for f in fs]
+    svc.stop()
+    pct = svc.latency_percentiles()
+    pct["responses"] = responses
+    pct["stats"] = svc.stats
+
+    def _ooo(events):
+        fins = [wi for kind, wi in events if kind == "finish"]
+        return any(fins[i] > fins[i + 1] for i in range(len(fins) - 1))
+
+    pct["out_of_order_batches"] = sum(_ooo(ev) for ev in svc.ticket_events)
+    return pct
+
+
 def tune_for_recall(index, queries, gt, target: float,
                     top_ms=(8, 16, 24, 48, 96), top_ns=(128, 256, 512)):
     """Find the cheapest (top_m, top_n) reaching the recall target —

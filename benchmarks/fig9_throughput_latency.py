@@ -1,13 +1,16 @@
 """Fig. 9: QPS + latency of SPANN / DiskANN / RUMMY / FusionANNS across the
 three dataset profiles at Recall@10>=0.9 (peak-thread operating point),
-plus two futures-path rows (PR 2): the pipelined inflight-depth sweep and
-the serving front-end's p50/p99 through submit()/QueryFuture."""
+plus the futures-path rows: the pipelined inflight-depth sweep, the
+serving front-end's p50/p99 through submit()/QueryFuture (PR 2), and the
+threaded runtime under 8 producer threads vs the synchronous pump
+(PR 3)."""
 
 import time
 
 import numpy as np
 
-from benchmarks.common import HW, bundle, fusion_demand, service_latency
+from benchmarks.common import (HW, bundle, fusion_demand, service_latency,
+                               service_latency_threaded)
 from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
 from repro.core.engine import recall_at_k
 from repro.core.perf_model import (QueryDemand, qps_at_threads,
@@ -76,6 +79,27 @@ def _service_latency_row(b) -> dict:
     }
 
 
+def _service_threaded_row(b) -> dict:
+    """Threaded serving runtime (PR 3): 8 producer threads submitting
+    against ONE replica (pump thread + out-of-order ticker), p50/p99 vs
+    the synchronous pump driving the same traffic."""
+    sync = service_latency(b.index, b.queries, max_batch=16, max_wait_s=0.0,
+                           scan_window=8, inflight_depth=2)
+    thr = service_latency_threaded(
+        b.index, b.queries, producers=8, max_batch=16, max_wait_s=0.0005,
+        scan_window=8, inflight_depth=2)
+    return {
+        "name": "fig9.sift.service_threaded",
+        "us_per_call": thr["p50"] * 1e6,
+        "derived": (f"8 producers: p50={thr['p50']*1e3:.2f}ms "
+                    f"p99={thr['p99']*1e3:.2f}ms n={thr['n']} "
+                    f"ooo_batches={thr['out_of_order_batches']}"
+                    f"/{int(thr['stats']['batches'])} | sync pump: "
+                    f"p50={sync['p50']*1e3:.2f}ms "
+                    f"p99={sync['p99']*1e3:.2f}ms"),
+    }
+
+
 def run():
     rows = []
     for ds in ("sift", "spacev", "deep"):
@@ -119,6 +143,7 @@ def run():
         if ds == "sift":
             rows.append(_pipeline_depth_row(b))
             rows.append(_service_latency_row(b))
+            rows.append(_service_threaded_row(b))
     return rows
 
 

@@ -23,6 +23,8 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=30_000)
     ap.add_argument("--dim", type=int, default=96)
     ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--producers", type=int, default=4,
+                    help="submitter threads for the threaded-service demo")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(SIFT_SMALL, n_vectors=args.n, dim=args.dim,
@@ -56,6 +58,37 @@ def main() -> None:
     assert all(f.done() for f in futs)
     pct = svc.latency_percentiles()
 
+    # threaded runtime: a pump thread + out-of-order ticker per replica,
+    # traffic from N producer threads (the deployment shape — DESIGN.md
+    # §"Threading model")
+    import threading
+    tsvc = BatchingANNSService(index, max_batch=16, max_wait_s=0.0005,
+                               scan_window=8, inflight_depth=2,
+                               threaded=True)
+    tfuts = [[] for _ in range(args.producers)]
+
+    def _produce(i):
+        from repro.serve.anns_service import BackpressureError
+        for q in queries[i::args.producers]:
+            while True:
+                try:
+                    tfuts[i].append(tsvc.submit(q))
+                    break
+                except BackpressureError:
+                    time.sleep(1e-3)
+
+    workers = [threading.Thread(target=_produce, args=(i,))
+               for i in range(args.producers)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    for fs in tfuts:
+        for f in fs:
+            f.result(timeout=300)
+    tsvc.stop()
+    tpct = tsvc.latency_percentiles()
+
     stats = [r.stats for r in results]
     demand = QueryDemand(
         ssd_ios=float(np.mean([s.ios for s in stats])),
@@ -77,6 +110,9 @@ def main() -> None:
             [s.early_stopped for s in stats])), 3),
         "service_p50_ms": round(pct["p50"] * 1e3, 2),
         "service_p99_ms": round(pct["p99"] * 1e3, 2),
+        "threaded_p50_ms": round(tpct["p50"] * 1e3, 2),
+        "threaded_p99_ms": round(tpct["p99"] * 1e3, 2),
+        "threaded_producers": args.producers,
         "modelled_qps": {f"t{t}": round(v["qps"]) for t, v in sweep.items()},
         "modelled_latency_ms": {f"t{t}": round(v["latency_ms"], 2)
                                 for t, v in sweep.items()},

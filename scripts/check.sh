@@ -6,6 +6,11 @@
 #                               wall-clock guard
 #   scripts/check.sh smoke      fast executor/engine subset (used by
 #                               benchmarks/run.py --selftest)
+#   scripts/check.sh threaded-stress
+#                               threaded serving runtime: 8 producer
+#                               threads against one replica, id-parity
+#                               with run(), out-of-order retirement
+#                               probe, zero leaked pending futures
 #   scripts/check.sh full       everything, including @slow system tests
 #
 # CHECK_TIMEOUT overrides the guard (seconds).
@@ -21,6 +26,10 @@ case "$MODE" in
         tests/test_executor.py tests/test_futures.py tests/test_engine.py \
         tests/test_updates.py
     ;;
+  threaded-stress)
+    exec timeout "${CHECK_TIMEOUT:-300}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_threaded.py
+    ;;
   tier1)
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider
@@ -30,7 +39,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|full]" >&2
     exit 2
     ;;
 esac

@@ -54,6 +54,7 @@ schema.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
@@ -180,30 +181,60 @@ class _Window:
 
 
 class _InflightQueue:
-    """FIFO of dispatched-but-unretired windows, bounded by depth.
+    """Queue of dispatched-but-unretired windows, bounded by depth.
 
     Depth 1 is the fully synchronous executor; depth d keeps up to d device
     scans in flight while the host re-ranks the oldest window — the
-    explicit home of the pipelining that PR 1 buried inside ``run()``."""
+    explicit home of the pipelining that PR 1 buried inside ``run()``.
+
+    Thread-safety (PR 3): every method must run under the owning ticket's
+    lock.  Two-phase dispatch keeps the slow host traversal OUT of that
+    lock: ``reserve()`` claims a depth slot (counted by ``full()``),
+    ``commit(w)`` fills it, keeping the queue ordered by window index even
+    when a pump thread and a ticker dispatch concurrently.
+    ``pop_ready()`` removes ANY window whose scan has landed — the
+    out-of-order retirement path — while ``pop()`` stays FIFO for the
+    blocking pump."""
 
     def __init__(self, depth: int):
         self.depth = max(1, depth)
         self._q: deque = deque()
+        self._reserved = 0
 
     def __len__(self) -> int:
         return len(self._q)
 
     def full(self) -> bool:
-        return len(self._q) >= self.depth
+        return len(self._q) + self._reserved >= self.depth
 
-    def push(self, w: _Window) -> None:
-        self._q.append(w)
+    def reserve(self) -> None:
+        self._reserved += 1
+
+    def cancel_reservation(self) -> None:
+        self._reserved -= 1
+
+    def commit(self, w: _Window) -> None:
+        """Fill a reserved slot, keeping windows ordered by ``wi``."""
+        self._reserved -= 1
+        i = len(self._q)
+        while i > 0 and self._q[i - 1].wi > w.wi:
+            i -= 1
+        self._q.insert(i, w)
 
     def head(self) -> _Window:
         return self._q[0]
 
     def pop(self) -> _Window:
         return self._q.popleft()
+
+    def pop_ready(self, ready) -> Optional[_Window]:
+        """Remove and return the first window (any position) whose scan
+        has landed, or None."""
+        for i, w in enumerate(self._q):
+            if ready(w):
+                del self._q[i]
+                return w
+        return None
 
 
 class QueryExecutor:
@@ -215,6 +246,21 @@ class QueryExecutor:
         self.ctx = ctx if ctx is not None else ShardCtx()
         self._placed: Optional[jax.Array] = None
         self._placed_src = None
+        # serializes stage ①-⑥ host work (traversal + LUT + device dispatch)
+        # across threads: a pump thread and a ticker may both refill depth
+        # slots, and the placement cache write must not race
+        self._dispatch_lock = threading.Lock()
+
+    # the lock is not deepcopy/pickle-able (``fresh_index`` deep-copies the
+    # engine, which may carry a cached executor); a copy gets its own lock
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state.pop("_dispatch_lock", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._dispatch_lock = threading.Lock()
 
     # ------------------------------------------------------------- sharding
     def attach_mesh(self, mesh) -> "QueryExecutor":
@@ -385,49 +431,110 @@ class QueryExecutor:
         starts = list(range(0, n, W))
         inflight = _InflightQueue(plan.effective_depth())
         cursor = [0]                       # next undispatched window index
+        lock, cond, busy = ticket._lock, ticket._cond, ticket._busy
 
-        def _dispatch_next() -> None:
-            wi = cursor[0]
+        def _claim_dispatch() -> Optional[int]:
+            """Under ``lock``: claim the next window index + a depth slot,
+            or None when nothing is dispatchable."""
+            if cursor[0] < len(starts) and not inflight.full():
+                wi = cursor[0]
+                cursor[0] += 1
+                inflight.reserve()
+                busy[0] += 1
+                return wi
+            return None
+
+        def _do_dispatch(wi: int) -> None:
+            """Stage ①-⑥ for a claimed window — slow host work runs outside
+            the ticket lock so a concurrent retire can overlap it."""
             s = starts[wi]
-            w = self._dispatch(queries[s:s + W], plans[s:s + W])
+            try:
+                with self._dispatch_lock:
+                    w = self._dispatch(queries[s:s + W], plans[s:s + W])
+            except BaseException as exc:
+                for qi in range(s, min(s + W, n)):
+                    futures[qi]._set_exception(exc)
+                with cond:
+                    inflight.cancel_reservation()
+                    busy[0] -= 1
+                    cond.notify_all()
+                raise
             w.start, w.wi = s, wi
-            inflight.push(w)
-            ticket.events.append(("dispatch", wi))
-            cursor[0] += 1
+            with cond:
+                inflight.commit(w)
+                ticket.events.append(("dispatch", wi))
+                busy[0] -= 1
+                cond.notify_all()
 
-        def _retire_oldest() -> None:
-            w = inflight.pop()
-            ticket.events.append(("finish", w.wi))
-            self._finish_into(w, futures, deadlines)
+        def _retire(w: _Window) -> None:
+            """Stage ⑥-⑦ for a popped window.  The ``finish`` event is
+            recorded when the re-rank COMPLETES (before ``busy`` drops), so
+            concurrent retirement shows up as out-of-window-order
+            finishes."""
+            try:
+                self._finish_into(w, futures, deadlines)
+            except BaseException as exc:
+                for qi in range(len(w.queries)):
+                    futures[w.start + qi]._set_exception(exc)
+                raise
+            finally:
+                with cond:
+                    ticket.events.append(("finish", w.wi))
+                    busy[0] -= 1
+                    cond.notify_all()
 
         def _pump() -> bool:
-            if cursor[0] < len(starts) and not inflight.full():
-                _dispatch_next()
+            """Blocking progress: prefer dispatching window t+1 over
+            blocking on window t's scan (the paper's CPU/GPU overlap);
+            retirement is FIFO from this path."""
+            w = None
+            with lock:
+                wi = _claim_dispatch()
+                if wi is None and len(inflight):
+                    w = inflight.pop()
+                    busy[0] += 1
+            if wi is not None:
+                _do_dispatch(wi)
                 return True
-            if len(inflight):
-                _retire_oldest()
+            if w is not None:
+                _retire(w)
                 return True
             return False
 
         def _poll() -> bool:
+            """Non-blocking progress (the ticker's entry point): retire ANY
+            window whose scan landed — out of order when an older window is
+            mid-re-rank on another thread — then refill depth slots."""
             from repro.core.distributed import window_scan_ready
             progressed = False
-            while len(inflight) and window_scan_ready(inflight.head().vals,
-                                                      inflight.head().pos):
-                _retire_oldest()
+            while True:
+                with lock:
+                    w = inflight.pop_ready(
+                        lambda x: window_scan_ready(x.vals, x.pos))
+                    if w is not None:
+                        busy[0] += 1
+                if w is not None:
+                    _retire(w)
+                    progressed = True
+                    continue
+                with lock:
+                    wi = _claim_dispatch()
+                if wi is None:
+                    return progressed
+                _do_dispatch(wi)
                 progressed = True
-            while cursor[0] < len(starts) and not inflight.full():
-                _dispatch_next()
-                progressed = True
-            return progressed
 
         ticket._pump = _pump
         ticket._poll = _poll
         for f in futures:
             f._driver = _pump
         # eager phase: fill the in-flight depth before handing back
-        while cursor[0] < len(starts) and not inflight.full():
-            _dispatch_next()
+        while True:
+            with lock:
+                wi = _claim_dispatch()
+            if wi is None:
+                break
+            _do_dispatch(wi)
         return ticket
 
     # ------------------------------------------------------------------ run

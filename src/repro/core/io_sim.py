@@ -1,20 +1,33 @@
 """SSD tier simulation with exact 4 KB-page semantics (paper §4.3).
 
-Implements the optimised storage layout (per-centroid buckets, max-min
-remainder bin-packing so partial pages are shared), the vec->page mapping
-table, Direct-I/O page reads, and the two dedup mechanisms:
+Implements the optimised storage layout (per-centroid buckets,
+first-fit-decreasing remainder bin-packing so partial pages are shared),
+the vec->page mapping table, Direct-I/O page reads, and the two dedup
+mechanisms:
 
-  * intra-mini-batch: requests hitting the same page are merged,
-  * inter-mini-batch: an (per-query) DRAM page buffer absorbs repeats.
+  * intra-mini-batch: requests hitting the same page within ONE ``fetch()``
+    are merged,
+  * inter-mini-batch: a (per-query) DRAM page buffer absorbs repeats
+    ACROSS ``fetch()`` calls.
 
-Every mechanism can be disabled independently for the Fig. 12 ablation.
+The two mechanisms are strictly separated for the Fig. 12 per-mechanism
+attribution: the page buffer only serves pages read by *previous*
+mini-batches, so disabling ``intra_merge`` really does charge one I/O per
+same-page request inside a batch (insertions into the buffer are deferred
+to the end of the fetch).  Every mechanism can be disabled independently.
 I/O counts and byte volumes are exact; latency is modelled by the analytic
 device model in ``core.baselines`` (no NVMe in this container — DESIGN.md §7).
+
+Thread-safety: the per-query DRAM buffer is thread-local, so the threaded
+serving runtime (PR 3) can re-rank two queries concurrently — each
+re-ranking thread sees its own per-query buffer scope and per-query I/O
+accounting stays exact.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -60,12 +73,14 @@ class PageBuffer:
 
 def pack_buckets_maxmin(bucket_sizes: Sequence[int], per_page: int
                         ) -> Tuple[List[List[int]], int]:
-    """Max-min packing of bucket *remainders* into shared pages (§4.3).
+    """First-fit-decreasing packing of bucket *remainders* into shared
+    pages (§4.3's shared-page layout).
 
     Full pages are dedicated; remainders are sorted descending and each is
-    placed with the largest remainder(s) that still fit (classic max-min /
-    first-fit-decreasing).  Returns (groups of bucket-ids sharing a page,
-    total pages used)."""
+    placed into the FIRST open page with room (first-fit-decreasing — not
+    the max-min pairing the name suggests; the name is kept for API
+    stability).  Returns (groups of bucket-ids sharing a page, total pages
+    used)."""
     full_pages = sum(s // per_page for s in bucket_sizes)
     rema = [(s % per_page, i) for i, s in enumerate(bucket_sizes)
             if s % per_page]
@@ -146,7 +161,30 @@ class SSDSim:
         self.layout = layout
         self.intra_merge = intra_merge
         self.use_buffer = use_buffer
-        self.buffer = PageBuffer(buffer_pages)
+        self.buffer_pages = buffer_pages
+        # one DRAM buffer per re-ranking thread: a query's re-rank runs
+        # entirely on one thread, so per-query scoping survives the
+        # threaded runtime's concurrent retirements
+        self._tls = threading.local()
+
+    @property
+    def buffer(self) -> PageBuffer:
+        buf = getattr(self._tls, "buffer", None)
+        if buf is None:
+            buf = PageBuffer(self.buffer_pages)
+            self._tls.buffer = buf
+        return buf
+
+    # thread-local state is not deepcopy/pickle-able; a copy starts with
+    # fresh (empty) per-thread buffers, which is also semantically right
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state.pop("_tls", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._tls = threading.local()
 
     def begin_query(self) -> IOStats:
         """Per-query buffer scope (the paper's DRAM buffer is per-query
@@ -156,18 +194,31 @@ class SSDSim:
 
     def fetch(self, vec_ids: np.ndarray, stats: IOStats) -> np.ndarray:
         """One re-ranking mini-batch: returns the raw vectors, accounting
-        page I/O with intra-batch merge + buffer dedup."""
+        page I/O with intra-batch merge + buffer dedup.
+
+        Buffer insertions are deferred until the whole mini-batch is
+        accounted: the buffer is the INTER-mini-batch mechanism, so with
+        ``intra_merge=False`` same-page requests inside one batch each
+        cost an I/O instead of being silently absorbed by the buffer
+        (keeps the Fig. 12 per-mechanism attribution honest)."""
         pages = self.layout.page_of[vec_ids]
         stats.pages_requested += len(pages)
         wanted = pages if not self.intra_merge else np.unique(pages)
+        buf = self.buffer
+        read_this_batch: List[int] = []       # read order (dups included)
         for p in wanted:
-            if self.use_buffer and self.buffer.hit(int(p)):
+            p = int(p)
+            if self.use_buffer and buf.hit(p):
                 stats.buffer_hits += 1
                 continue
             stats.ios += 1
             stats.bytes_read += self.layout.page_bytes
-            if self.use_buffer:
-                self.buffer.insert(int(p))
+            read_this_batch.append(p)
+        if self.use_buffer:
+            # sequential inserts in read order: LRU recency matches the
+            # actual read sequence (a repeat moves its page to the tail)
+            for p in read_this_batch:
+                buf.insert(p)
         return self.vectors[vec_ids]
 
 

@@ -89,9 +89,19 @@ def heuristic_rerank_jax(query: jax.Array, cand_vectors: jax.Array,
 
     cand_vectors (n, D) sorted by PQ distance; returns (ids (k,), dists (k,),
     batches_run).  Distances of unprocessed batches never affect the heap —
-    the while_loop stops exactly like the host version."""
+    the while_loop stops exactly like the host version.
+
+    The tail batch (``n % batch_size`` candidates) is scored too: inputs
+    are padded to a whole number of batches and the pad rows carry +inf
+    distance / id -1, so they can never displace a real candidate."""
     n, d = cand_vectors.shape
-    n_batches = n // batch_size
+    n_batches = -(-n // batch_size)           # ceil: include the tail batch
+    pad = n_batches * batch_size - n
+    if pad:
+        cand_vectors = jnp.concatenate(
+            [cand_vectors, jnp.zeros((pad, d), cand_vectors.dtype)], axis=0)
+        cand_ids = jnp.concatenate(
+            [cand_ids, jnp.full((pad,), -1, cand_ids.dtype)], axis=0)
     q = query.astype(jnp.float32)
 
     top_d0 = jnp.full((k,), jnp.inf, jnp.float32)
@@ -103,6 +113,8 @@ def heuristic_rerank_jax(query: jax.Array, cand_vectors: jax.Array,
         vecs = jax.lax.dynamic_slice_in_dim(cand_vectors, start, batch_size)
         ids = jax.lax.dynamic_slice_in_dim(cand_ids, start, batch_size)
         dist = jnp.sum((vecs.astype(jnp.float32) - q[None]) ** 2, axis=1)
+        valid = start + jnp.arange(batch_size) < n
+        dist = jnp.where(valid, dist, jnp.inf)    # mask tail padding
         all_d = jnp.concatenate([top_d, dist])
         all_i = jnp.concatenate([top_i, ids.astype(jnp.int32)])
         neg, pos = jax.lax.top_k(-all_d, k)

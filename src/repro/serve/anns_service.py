@@ -1,4 +1,5 @@
-"""ANNS serving front-end: futures-first request queue + dynamic batching.
+"""ANNS serving front-end: futures-first request queue + dynamic batching,
+with an optional threaded runtime (PR 3).
 
 The paper's prototype binds one CPU thread per query (§5); the TPU
 adaptation's natural unit is a *batch* per scan.  This front-end bridges
@@ -13,7 +14,10 @@ PR-2 redesign (DESIGN.md §3): ``submit()`` returns a
 (``fut.result().result`` is the :class:`QueryResult`), with
 
 * **admission control** — a bounded queue (``max_queue``); submissions past
-  the bound raise :class:`BackpressureError` instead of growing latency;
+  the bound raise :class:`BackpressureError` instead of growing latency.
+  Only LIVE requests count against the bound: a burst of ``cancel()``
+  calls compacts out of the queue at the next submission instead of
+  occupying slots until the next pump;
 * **per-request plans** — ``k``/``top_n`` ride to the executor as
   ``PlanOverrides``, so a mixed-``k`` batch is honored inside ONE shared
   scan window (the PR-1 service dropped ``Request.k`` on the floor);
@@ -24,24 +28,34 @@ PR-2 redesign (DESIGN.md §3): ``submit()`` returns a
   executor's ``_InflightQueue``: a pump batch splits into scan windows and
   the rerank of window t overlaps the in-flight scans of t+1..t+d.
 
-Synchronous harness (no asyncio dependency): ``pump()`` drains one batch
-window; a pending future drives ``pump(force=True)`` from ``result()``.
-On a real deployment the pump loop runs in a dedicated thread per replica.
+Two harnesses (DESIGN.md §"Threading model"):
+
+* **synchronous** (``threaded=False``, the default — every existing test's
+  bit-identical-ids guarantee): ``pump()`` drains one batch window inline;
+  a pending future drives ``pump(force=True)`` from ``result()``.
+* **threaded** (``threaded=True``): a dedicated *pump thread* per replica
+  forms batches and drives each ticket's FIFO retirement, while a
+  background *ticker thread* calls ``BatchTicket.poll()`` so windows whose
+  device scan already landed retire OUT OF ORDER while an older window is
+  still re-ranking on the pump thread.  Futures are resolved by the pump
+  thread; ``result()`` is a real condition-variable wait.  ``stop()``
+  drains the queue gracefully (zero pending futures survive shutdown).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.engine import FusionANNSIndex, QueryResult
 from repro.core.executor import PlanOverrides
 from repro.core.futures import (BackpressureError, DeadlineExceeded,
-                                QueryFuture)
+                                FutureError, QueryFuture)
 
 __all__ = ["BatchingANNSService", "Request", "Response",
            "BackpressureError", "DeadlineExceeded", "QueryFuture"]
@@ -71,7 +85,8 @@ class BatchingANNSService:
     def __init__(self, index: FusionANNSIndex, *, max_batch: int = 32,
                  max_wait_s: float = 0.002, scan_window: int = 0,
                  overlap_rerank: bool = False, inflight_depth: int = 0,
-                 max_queue: int = 1024):
+                 max_queue: int = 1024, threaded: bool = False,
+                 tick_interval_s: float = 2e-4):
         self.index = index
         self.executor = index.executor
         self.max_batch = max_batch
@@ -80,14 +95,75 @@ class BatchingANNSService:
         self.overlap_rerank = overlap_rerank
         self.inflight_depth = inflight_depth
         self.max_queue = max_queue
+        self.tick_interval_s = tick_interval_s
         self._queue: Deque[Request] = deque()
         self._next_rid = 0
+        # one lock guards queue + stats + latencies; the condition wakes
+        # the pump thread on submissions and shutdown
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
         self.stats: Dict[str, float] = {
             "batches": 0, "requests": 0, "mean_batch": 0.0,
             "rejected": 0, "expired": 0, "cancelled": 0}
         # enqueue -> resolve per request; bounded so a long-lived replica's
         # percentile window stays O(1) memory (sliding, newest-wins)
         self.latencies_s: Deque[float] = deque(maxlen=8192)
+        # per-batch executor event logs (the out-of-order retirement probe)
+        self.ticket_events: Deque[List[Tuple[str, int]]] = deque(maxlen=256)
+        # threaded runtime
+        self.threaded = False
+        self._running = False
+        self._ticker_stop = False
+        self._serving = 0                  # batches between formation+resolve
+        self._active_ticket = None
+        self._ticker_cv = threading.Condition()   # parks the idle ticker
+        self._pump_thread: Optional[threading.Thread] = None
+        self._ticker_thread: Optional[threading.Thread] = None
+        if threaded:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "BatchingANNSService":
+        """Start the pump + ticker threads (idempotent)."""
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+            self._ticker_stop = False
+            self.threaded = True
+        self._pump_thread = threading.Thread(
+            target=self._pump_loop, name="anns-pump", daemon=True)
+        self._ticker_thread = threading.Thread(
+            target=self._ticker_loop, name="anns-ticker", daemon=True)
+        self._pump_thread.start()
+        self._ticker_thread.start()
+        return self
+
+    def stop(self) -> "BatchingANNSService":
+        """Graceful shutdown: the pump thread drains every queued request
+        (resolving all futures), then both threads exit.  Idempotent."""
+        with self._cv:
+            if not self._running and self._pump_thread is None:
+                return self
+            self._running = False
+            self._cv.notify_all()
+        if self._pump_thread is not None:
+            self._pump_thread.join()
+            self._pump_thread = None
+        self._ticker_stop = True
+        with self._ticker_cv:
+            self._ticker_cv.notify_all()
+        if self._ticker_thread is not None:
+            self._ticker_thread.join()
+            self._ticker_thread = None
+        self.threaded = False
+        return self
+
+    def __enter__(self) -> "BatchingANNSService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
     # --------------------------------------------------------------- submit
     def submit(self, query: np.ndarray, k: Optional[int] = None, *,
@@ -95,28 +171,118 @@ class BatchingANNSService:
                deadline_s: Optional[float] = None) -> QueryFuture:
         """Enqueue one request; returns its future immediately.
 
-        Raises :class:`BackpressureError` when the queue is at
-        ``max_queue`` — admission control instead of unbounded latency."""
-        if len(self._queue) >= self.max_queue:
-            self.stats["rejected"] += 1
-            raise BackpressureError(
-                f"queue full ({self.max_queue} pending); retry later")
-        rid = self._next_rid
-        self._next_rid += 1
-        now = time.perf_counter()
-        fut = QueryFuture(tag=rid, driver=self._drive)  # fut.tag == rid
-        self._queue.append(Request(
-            rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
-            deadline=None if deadline_s is None else now + deadline_s,
-            future=fut))
+        Raises :class:`BackpressureError` when the queue holds
+        ``max_queue`` LIVE requests — cancelled requests are compacted out
+        before the admission decision, so a cancel burst frees its slots
+        for fresh submissions."""
+        with self._cv:
+            if len(self._queue) >= self.max_queue:
+                self._compact_locked()
+            if len(self._queue) >= self.max_queue:
+                self.stats["rejected"] += 1
+                raise BackpressureError(
+                    f"queue full ({self.max_queue} pending); retry later")
+            rid = self._next_rid
+            self._next_rid += 1
+            now = time.perf_counter()
+            # key off _running (not .threaded): both are read under _cv, and
+            # the pump thread's exit check holds the same lock — so either
+            # the pump thread still sees this request (blocking future), or
+            # we already observe the shutdown and fall back to the caller-
+            # driven future, which pump(force=True) from result() can serve
+            threaded = self._running
+            fut = QueryFuture(tag=rid,
+                              driver=None if threaded else self._drive,
+                              blocking=threaded)  # fut.tag == rid
+            self._queue.append(Request(
+                rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
+                deadline=None if deadline_s is None else now + deadline_s,
+                future=fut))
+            self._cv.notify_all()
         return fut
 
+    def _compact_locked(self) -> None:
+        """Eager-drop cancelled requests (must hold ``_lock``)."""
+        live = deque()
+        for r in self._queue:
+            if r.future is not None and r.future.cancelled():
+                self.stats["cancelled"] += 1
+            else:
+                live.append(r)
+        self._queue = live
+
     def _drive(self) -> bool:
-        """Future-side driver: a pending future forces a pump."""
+        """Future-side driver (synchronous harness): a pending future
+        forces a pump."""
         if not self._queue:
             return False
         self.pump(force=True)
         return True
+
+    # -------------------------------------------------------------- threads
+    def _pump_loop(self) -> None:
+        """Dedicated pump thread: sleep until a batch window matures (or
+        shutdown), serve it, repeat.  On shutdown it drains the queue so
+        no future is left pending.
+
+        A failing batch does not kill the replica: its futures were
+        already resolved with the error (``_serve_batch``), the failure is
+        counted, and the loop keeps serving.  Only non-``Exception``
+        escapes (interpreter teardown) stop the thread — after resolving
+        every queued future so no waiter hangs."""
+        try:
+            while True:
+                with self._cv:
+                    while self._running and \
+                            not self._window_ready(time.perf_counter()):
+                        if self._queue:
+                            age = time.perf_counter() \
+                                - self._queue[0].t_enqueue
+                            self._cv.wait(max(self.max_wait_s - age, 1e-4))
+                        else:
+                            self._cv.wait()
+                    if not self._running and not self._queue:
+                        return
+                try:
+                    self.pump(force=not self._running)
+                except Exception:             # noqa: BLE001 — poison batch
+                    with self._lock:
+                        self.stats["pump_errors"] = \
+                            self.stats.get("pump_errors", 0) + 1
+        except BaseException as exc:          # fail loudly, not silently
+            self._fail_pending(exc)
+            raise
+
+    def _ticker_loop(self) -> None:
+        """Background ticker: opportunistic out-of-order retirement.  Polls
+        the in-flight ticket so windows whose device scan landed retire
+        while the pump thread is still re-ranking an older window.  Parks
+        on a condition variable while no ticket is active (no busy-wake on
+        an idle replica); any poll error is counted and survived — losing
+        the ticker must never silently degrade the replica."""
+        while not self._ticker_stop:
+            ticket = self._active_ticket
+            if ticket is None:
+                with self._ticker_cv:
+                    if self._active_ticket is None and not self._ticker_stop:
+                        self._ticker_cv.wait(0.05)
+                continue
+            try:
+                ticket.poll()
+            except Exception:                 # noqa: BLE001 — stay alive;
+                with self._lock:              # errors live on the futures
+                    self.stats["ticker_errors"] = \
+                        self.stats.get("ticker_errors", 0) + 1
+            time.sleep(self.tick_interval_s)
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        """Resolve every queued future with ``exc`` (pump thread died)."""
+        with self._cv:
+            while self._queue:
+                r = self._queue.popleft()
+                if r.future is not None:
+                    r.future._set_exception(
+                        FutureError(f"serving pump failed: {exc!r}"))
 
     # ----------------------------------------------------------------- pump
     def _window_ready(self, now: float) -> bool:
@@ -131,25 +297,49 @@ class BatchingANNSService:
 
         Cancelled requests are dropped at batch formation; requests whose
         deadline already passed resolve to :class:`DeadlineExceeded`
-        without consuming a batch slot."""
+        without consuming a batch slot.  In the threaded runtime this runs
+        on the pump thread; batch formation and stats are lock-guarded,
+        the executor work runs outside the lock so submissions never block
+        behind a scan."""
         now = time.perf_counter()
-        if not (force and self._queue) and not self._window_ready(now):
-            return []
         batch: List[Request] = []
-        while self._queue and len(batch) < self.max_batch:
-            r = self._queue.popleft()
-            if r.future is not None and r.future.cancelled():
-                self.stats["cancelled"] += 1
-                continue
-            if r.deadline is not None and now > r.deadline:
-                self.stats["expired"] += 1
-                if r.future is not None:
-                    r.future._set_exception(DeadlineExceeded(
-                        f"request {r.rid} expired in queue"))
-                continue
-            batch.append(r)
+        with self._lock:
+            if not (force and self._queue) and not self._window_ready(now):
+                return []
+            self._serving += 1
+            while self._queue and len(batch) < self.max_batch:
+                r = self._queue.popleft()
+                if r.future is not None and r.future.cancelled():
+                    self.stats["cancelled"] += 1
+                    continue
+                if r.deadline is not None and now > r.deadline:
+                    self.stats["expired"] += 1
+                    if r.future is not None:
+                        r.future._set_exception(DeadlineExceeded(
+                            f"request {r.rid} expired in queue"))
+                    continue
+                batch.append(r)
+        try:
+            return self._serve_batch(batch)
+        finally:
+            with self._lock:
+                self._serving -= 1
+
+    def _serve_batch(self, batch: List[Request]) -> List[Response]:
         if not batch:
             return []
+        try:
+            return self._serve_batch_inner(batch)
+        except BaseException as exc:
+            # the batch is already out of the queue, so _fail_pending can't
+            # reach it: resolve its futures here or their waiters hang
+            for r in batch:
+                if r.future is not None:
+                    r.future._set_exception(
+                        FutureError(f"serving pump failed: {exc!r}"))
+            raise
+
+    def _serve_batch_inner(self, batch: List[Request]) -> List[Response]:
         queries = np.stack([r.query for r in batch])
         plan = self.index.plan(window=self.scan_window,
                                overlap_rerank=self.overlap_rerank,
@@ -166,36 +356,55 @@ class BatchingANNSService:
         for r, f in zip(batch, ticket.futures):
             if r.future is not None and r.future.cancelled():
                 f.cancel()
-        ticket.wait()                      # exceptions stay on the futures
+        self._active_ticket = ticket          # ticker may now poll it
+        with self._ticker_cv:
+            self._ticker_cv.notify_all()
+        try:
+            ticket.wait()                     # exceptions stay on the futures
+        finally:
+            self._active_ticket = None
+            self.ticket_events.append(list(ticket.events))
         t_serve = time.perf_counter() - t0
-        self.stats["batches"] += 1
-        self.stats["requests"] += len(batch)
-        self.stats["mean_batch"] = (self.stats["requests"]
-                                    / self.stats["batches"])
         # per-request attribution: shared wall-clock + the executor's
         # per-query stage timings (res.stats.t_graph/t_scan/t_rerank)
         responses: List[Response] = []
         t_done = time.perf_counter()
-        for r, f in zip(batch, ticket.futures):
-            if f.cancelled():
-                self.stats["cancelled"] += 1
-                continue
-            exc = f.exception()
-            if exc is not None:
-                self.stats["expired"] += isinstance(exc, DeadlineExceeded)
+        with self._lock:
+            self.stats["batches"] += 1
+            self.stats["requests"] += len(batch)
+            self.stats["mean_batch"] = (self.stats["requests"]
+                                        / self.stats["batches"])
+            for r, f in zip(batch, ticket.futures):
+                if f.cancelled():
+                    self.stats["cancelled"] += 1
+                    continue
+                exc = f.exception()
+                if exc is not None:
+                    self.stats["expired"] += isinstance(exc, DeadlineExceeded)
+                    if r.future is not None:
+                        r.future._set_exception(exc)
+                    continue
+                resp = Response(rid=r.rid, result=f.result(),
+                                t_queue_s=t0 - r.t_enqueue,
+                                t_serve_s=t_serve, batch_size=len(batch))
                 if r.future is not None:
-                    r.future._set_exception(exc)
-                continue
-            resp = Response(rid=r.rid, result=f.result(),
-                            t_queue_s=t0 - r.t_enqueue, t_serve_s=t_serve,
-                            batch_size=len(batch))
-            if r.future is not None:
-                r.future._set_result(resp)
-            self.latencies_s.append(t_done - r.t_enqueue)
-            responses.append(resp)
+                    r.future._set_result(resp)
+                self.latencies_s.append(t_done - r.t_enqueue)
+                responses.append(resp)
         return responses
 
     def drain(self) -> List[Response]:
+        """Synchronous harness: pump until the queue is empty.  Threaded
+        harness: block until the pump thread has served everything that is
+        currently queued or in flight (responses go to their futures, so
+        the return value is empty)."""
+        if self.threaded:
+            while True:
+                with self._lock:
+                    idle = not self._queue and self._serving == 0
+                if idle:
+                    return []
+                time.sleep(1e-3)
         out: List[Response] = []
         while self._queue:
             out.extend(self.pump(force=True))
@@ -204,9 +413,10 @@ class BatchingANNSService:
     # ---------------------------------------------------------------- stats
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 of per-request enqueue->resolve latency (seconds)."""
-        if not self.latencies_s:
+        with self._lock:
+            lat = np.asarray(self.latencies_s)
+        if not len(lat):
             return {"p50": 0.0, "p99": 0.0, "n": 0}
-        lat = np.asarray(self.latencies_s)
         return {"p50": float(np.percentile(lat, 50)),
                 "p99": float(np.percentile(lat, 99)),
                 "n": len(lat)}

@@ -114,7 +114,11 @@ class RAGPipeline:
                      inflight_depth: int = 2) -> List[Dict[str, Any]]:
         """One retrieval submission for B requests: per-request scan
         windows pipeline on the device (depth ``inflight_depth``) while the
-        host runs generation for already-resolved requests."""
+        host runs generation for already-resolved requests.  After each
+        generation step the ticket is polled, so retrieval windows whose
+        scan landed during generation retire opportunistically (possibly
+        out of order — the PR-3 retirement path) and the next ``result()``
+        returns without blocking."""
         ticket = self.index.submit(np.asarray(query_vecs, np.float32),
                                    k=k, window=1,
                                    inflight_depth=inflight_depth)
@@ -128,4 +132,6 @@ class RAGPipeline:
             out["retrieved_ids"] = res.ids
             out["retrieval_stats"] = res.stats
             outs.append(out)
+            # generation kept the host busy: retire any landed scans now
+            ticket.poll()
         return outs

@@ -221,6 +221,25 @@ def test_service_future_drives_pump(anns_bundle):
     assert svc.stats["requests"] == 1
 
 
+def test_cancel_burst_frees_queue_slots(anns_bundle):
+    """Satellite regression: cancelled requests must not occupy queue
+    slots until the next pump — a cancel burst previously made fresh
+    submits raise spurious BackpressureError."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=10.0,
+                              max_queue=3)
+    futs = [svc.submit(q) for q in b.queries[:3]]
+    for f in futs:
+        assert f.cancel()
+    fut = svc.submit(b.queries[3])            # must NOT be rejected
+    assert svc.stats["rejected"] == 0
+    assert svc.stats["cancelled"] == 3        # compacted out, counted once
+    resp = fut.result()
+    np.testing.assert_array_equal(resp.result.ids,
+                                  b.index.query(b.queries[3]).ids)
+    assert svc.stats["cancelled"] == 3        # pump never re-counts them
+
+
 def test_service_backpressure(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0,

@@ -102,6 +102,43 @@ def test_buffer_scope_is_per_query(rng):
     assert s2.ios == s1.ios and s2.buffer_hits == 0
 
 
+def test_buffer_is_inter_batch_only(rng):
+    """Satellite (Fig. 12 attribution): with ``intra_merge=False`` the
+    page buffer must NOT absorb same-page repeats inside one ``fetch()``
+    — intra-batch dedup is the OTHER mechanism.  Buffer insertions are
+    deferred to the end of the mini-batch."""
+    n = 64
+    data = rng.standard_normal((n, 32)).astype(np.float32)
+    primary = np.zeros(n, np.int64)
+    lay = StorageLayout.build(primary, 1, 128)     # 32 vecs/page -> 2 pages
+    ssd = SSDSim(data, lay, intra_merge=False, use_buffer=True)
+    stats = ssd.begin_query()
+    ids = np.array([0, 1, 2, 33, 34])              # page 0 x3, page 1 x2
+    ssd.fetch(ids, stats)
+    assert stats.ios == 5                          # one I/O per request
+    assert stats.buffer_hits == 0                  # nothing absorbed intra
+    ssd.fetch(ids, stats)                          # next mini-batch
+    assert stats.ios == 5                          # inter-batch: all hits
+    assert stats.buffer_hits == 5
+
+
+def test_dedup_attribution_ordering(rng):
+    """Each mechanism only removes its own class of repeats: within one
+    mini-batch buffer-only == no-dedup, and across batches the full
+    config never beats buffer-only by more than the intra-batch merges."""
+    ids = np.concatenate([np.arange(40), np.arange(20)])   # dup-heavy
+    configs = {}
+    for name, (intra, buf) in {"full": (True, True),
+                               "buf_only": (False, True),
+                               "none": (False, False)}.items():
+        _, ssd = _mk_ssd(np.random.default_rng(7), intra=intra, buf=buf)
+        stats = ssd.begin_query()
+        ssd.fetch(ids, stats)                      # single mini-batch
+        configs[name] = stats.ios
+    assert configs["buf_only"] == configs["none"]  # buffer: inter only
+    assert configs["full"] <= configs["buf_only"]
+
+
 def test_lru_eviction(rng):
     buf = PageBuffer(capacity_pages=2)
     buf.insert(1), buf.insert(2), buf.insert(3)

@@ -72,6 +72,39 @@ def test_jax_version_matches_host(rng):
                                   np.sort(host.ids))
 
 
+def test_jax_tail_batch_scored(rng):
+    """Satellite regression: n % batch_size != 0 — the device version
+    silently never scored the last partial batch.  Best candidates are
+    placed IN the tail, so missing it provably corrupts the result."""
+    data, ssd = _setup(rng, n=100)
+    q = rng.standard_normal(16).astype(np.float32)
+    # descending true distance: the k best candidates live at the end,
+    # with the 4 very best inside the ragged tail batch
+    order = np.argsort(np.sum((data - q) ** 2, -1))[::-1].astype(np.int32)
+    ids, dists, batches = heuristic_rerank_jax(
+        jnp.asarray(q), jnp.asarray(data[order]), jnp.asarray(order), 8,
+        batch_size=16, eps=0.0, beta=2)       # eps=0: no early stop
+    assert int(batches) == -(-100 // 16)      # ceil: the tail batch ran
+    exact = np.argsort(np.sum((data - q) ** 2, -1))[:8]
+    np.testing.assert_array_equal(np.sort(np.asarray(ids)), np.sort(exact))
+
+
+def test_jax_matches_host_ragged(rng):
+    """Host-vs-device parity (batch count + ids) with a ragged tail and
+    early stopping enabled."""
+    data, ssd = _setup(rng, n=120)
+    q = rng.standard_normal(16).astype(np.float32)
+    cand = rng.permutation(120).astype(np.int32)
+    host = heuristic_rerank(q, cand, ssd, k=8, batch_size=32, eps=0.05,
+                            beta=2)
+    ids, dists, batches = heuristic_rerank_jax(
+        jnp.asarray(q), jnp.asarray(data[cand]), jnp.asarray(cand), 8,
+        batch_size=32, eps=0.05, beta=2)
+    assert int(batches) == host.batches_run
+    np.testing.assert_array_equal(np.sort(np.asarray(ids)),
+                                  np.sort(host.ids))
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 999), k=st.integers(1, 20),
        batch=st.sampled_from([8, 16, 32]))

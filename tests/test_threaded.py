@@ -1,0 +1,220 @@
+"""Threaded serving runtime (ISSUE 3 acceptance).
+
+Contract under test:
+* with the pump thread + ticker enabled, N producer threads submitting
+  mixed-``k`` requests get BIT-IDENTICAL ids to a synchronous ``run()``
+  of the same queries;
+* ``ticket.events`` shows at least one out-of-order ``finish`` retirement
+  under ``inflight_depth >= 2`` — the ticker retires a younger window
+  whose scan landed while the pump thread is still re-ranking an older
+  one;
+* graceful shutdown (``stop()``) drains the queue and leaves ZERO pending
+  futures;
+* ``BatchTicket.wait()`` raises :class:`FutureError` naming the stalled
+  window instead of returning silently with pending futures (satellite
+  regression).
+
+The out-of-order probe injects a deterministic delay into the heavy
+query's re-rank (monkeypatched ``heuristic_rerank``) — results are
+unchanged, but the older window reliably out-lives its younger
+neighbours' retirement, so the probe does not depend on scheduler luck.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import executor as executor_mod
+from repro.core.futures import (BackpressureError, FutureError, BatchTicket,
+                                QueryFuture)
+from repro.serve.anns_service import BatchingANNSService
+
+HEAVY_K = 10          # requests with this k get a delayed re-rank (probe)
+
+
+def _finishes(events):
+    return [wi for kind, wi in events if kind == "finish"]
+
+
+def _out_of_order(events) -> bool:
+    """True when some younger window finished before an older one."""
+    fins = _finishes(events)
+    return any(fins[i] > fins[i + 1] for i in range(len(fins) - 1))
+
+
+@pytest.fixture
+def slow_heavy_rerank(monkeypatch):
+    """Delay the re-rank of k == HEAVY_K queries (ids unchanged)."""
+    real = executor_mod.heuristic_rerank
+
+    def delayed(query, candidate_ids, ssd, k, **kw):
+        if k == HEAVY_K:
+            time.sleep(0.02)
+        return real(query, candidate_ids, ssd, k, **kw)
+
+    monkeypatch.setattr(executor_mod, "heuristic_rerank", delayed)
+
+
+def test_threaded_stress_parity_out_of_order_shutdown(anns_bundle,
+                                                      slow_heavy_rerank):
+    """The acceptance stress test: 8 producers, mixed k, one replica."""
+    b = anns_bundle
+    n_producers = 8
+    per_producer = 6
+    ks = [HEAVY_K, 1, 3, 5, 1, 7, 2, 4]
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.003,
+                              scan_window=1, inflight_depth=3,
+                              threaded=True)
+    futures = {}
+    errors = []
+
+    def producer(tid):
+        for i in range(per_producer):
+            qi = (tid * per_producer + i) % len(b.queries)
+            k = ks[(tid + i) % len(ks)]
+            while True:
+                try:
+                    fut = svc.submit(b.queries[qi], k=k)
+                    break
+                except BackpressureError:
+                    time.sleep(1e-3)
+            futures[(tid, i)] = (qi, k, fut)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_producers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # resolve every future from the submitting side (condition-variable
+    # waits against the pump thread)
+    results = {}
+    for key, (qi, k, fut) in futures.items():
+        try:
+            results[key] = (qi, k, fut.result(timeout=120).result.ids)
+        except Exception as exc:              # noqa: BLE001 — fail the test
+            errors.append((key, exc))
+    assert not errors, errors
+
+    # a deterministic out-of-order wave: one heavy window followed by
+    # light ones — the ticker retires the lights while the pump thread is
+    # still inside the heavy re-rank
+    wave = [svc.submit(b.queries[0], k=HEAVY_K)]
+    wave += [svc.submit(b.queries[i], k=1) for i in range(1, 8)]
+    for f in wave:
+        f.result(timeout=120)
+
+    svc.stop()
+
+    # 1) bit-identical ids to the synchronous path
+    for qi, k, ids in results.values():
+        np.testing.assert_array_equal(
+            ids, b.index.query(b.queries[qi], k=k).ids)
+    # 2) at least one out-of-order finish under inflight_depth >= 2
+    assert any(_out_of_order(ev) for ev in svc.ticket_events), \
+        [(len(ev), _finishes(ev)) for ev in svc.ticket_events]
+    # 3) shutdown left zero pending futures anywhere
+    assert all(fut.done() for _, _, fut in futures.values())
+    assert all(f.done() for f in wave)
+    assert not svc._queue and svc._serving == 0
+
+
+def test_threaded_matches_sync_service(anns_bundle):
+    """Same queries through the threaded and synchronous harnesses give
+    identical ids (threading is a scheduling choice, not a result knob)."""
+    b = anns_bundle
+    sync = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0,
+                               scan_window=2, inflight_depth=2)
+    sync_futs = [sync.submit(q) for q in b.queries[:8]]
+    sync.drain()
+
+    thr = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.002,
+                              scan_window=2, inflight_depth=2,
+                              threaded=True)
+    thr_futs = [thr.submit(q) for q in b.queries[:8]]
+    got = [f.result(timeout=120).result.ids for f in thr_futs]
+    thr.stop()
+    ref = [f.result().result.ids for f in sync_futs]
+    np.testing.assert_array_equal(np.stack(ref), np.stack(got))
+
+
+def test_threaded_shutdown_drains(anns_bundle):
+    """stop() is a graceful drain: queued-but-unserved requests are still
+    served before the pump thread exits."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=5.0,
+                              threaded=True)
+    futs = [svc.submit(q) for q in b.queries[:10]]
+    svc.stop()                                # immediate shutdown request
+    assert all(f.done() for f in futs)
+    assert not svc._queue
+    for q, f in zip(b.queries, futs):
+        np.testing.assert_array_equal(f.result().result.ids,
+                                      b.index.query(q).ids)
+
+
+def test_blocking_future_waits_for_pump_thread(anns_bundle):
+    """result() on a threaded-service future is a real blocking wait: no
+    driving from the caller, the pump thread resolves it."""
+    b = anns_bundle
+    with BatchingANNSService(b.index, max_batch=64,
+                             max_wait_s=0.01) as svc:
+        fut = svc.submit(b.queries[0])
+        assert fut._driver is None            # nothing to drive: we wait
+        resp = fut.result(timeout=120)
+        np.testing.assert_array_equal(resp.result.ids,
+                                      b.index.query(b.queries[0]).ids)
+    assert svc._pump_thread is None and svc._ticker_thread is None
+
+
+def test_threaded_cancel_and_deadline(anns_bundle):
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.01,
+                              threaded=True)
+    live = svc.submit(b.queries[0])
+    dead = svc.submit(b.queries[1], deadline_s=0.0)
+    gone = svc.submit(b.queries[2])
+    assert gone.cancel()
+    np.testing.assert_array_equal(live.result(timeout=120).result.ids,
+                                  b.index.query(b.queries[0]).ids)
+    with pytest.raises(Exception):
+        dead.result(timeout=120)
+    svc.stop()
+    assert gone.cancelled() and dead.done() and live.done()
+
+
+def test_poison_request_resolves_future_and_replica_survives(anns_bundle):
+    """A request that makes the batch fail (wrong dim) must resolve its
+    future with FutureError — not hang its waiter — and must NOT kill the
+    pump thread: the replica keeps serving."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=1, max_wait_s=0.001,
+                              threaded=True)
+    bad = svc.submit(np.ones(7, np.float32))  # dim mismatch vs the index
+    with pytest.raises(FutureError):
+        bad.result(timeout=60)
+    good = svc.submit(b.queries[0])           # replica still alive
+    np.testing.assert_array_equal(good.result(timeout=60).result.ids,
+                                  b.index.query(b.queries[0]).ids)
+    assert svc.stats.get("pump_errors", 0) >= 1
+    svc.stop()
+
+
+# ----------------------------------------------------- wait() stall (sat. 2)
+
+def test_ticket_wait_stall_raises_future_error():
+    """Satellite regression: wait() with pending futures and a stalled
+    producer must raise FutureError naming the problem, not return
+    silently so results() fails far from the cause."""
+    fut = QueryFuture(tag=7)
+    ticket = BatchTicket([fut])
+    with pytest.raises(FutureError, match="still pending"):
+        ticket.wait()
+
+    # a dispatched-but-never-finished window is named in the error
+    fut2 = QueryFuture(tag=3)
+    ticket2 = BatchTicket([fut2], events=[("dispatch", 0)])
+    with pytest.raises(FutureError, match=r"stalled window\(s\) \[0\]"):
+        ticket2.wait()
