@@ -18,7 +18,7 @@ from repro.configs.base import ANNSConfig
 from repro.core.baselines import (DiskAnnLike, HIGpu, HIPq, RummyLike,
                                   SpannLike)
 from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
-from repro.core.perf_model import DeviceModel, QueryDemand
+from repro.core.perf_model import DeviceModel, demand_from_stats
 from repro.data.synthetic import clustered_vectors
 
 BENCH_N = int(os.environ.get("REPRO_BENCH_N", 20000))
@@ -78,16 +78,12 @@ def fusion_demand(index: FusionANNSIndex, queries, *, fused: bool = False,
     else:
         results = [index.query(q, **kw) for q in queries]
     stats = [r.stats for r in results]
-    m = index.cfg.pq_m
-    demand = QueryDemand(
-        ssd_ios=float(np.mean([s.ios for s in stats])),
-        ssd_bytes=float(np.mean([s.ssd_bytes for s in stats])),
-        h2d_bytes=float(np.mean([s.h2d_bytes for s in stats])),
-        gpu_lookups=float(np.mean([s.candidates_scanned for s in stats])) * m,
-        cpu_dist_ops=float(np.mean(
-            [s.rerank_scored for s in stats])) * index.ssd.vectors.shape[1],
-        graph_hops=2.0 * index.cfg.top_m,
-    )
+    totals = {f: float(np.sum([getattr(s, f) for s in stats]))
+              for f in ("ios", "ssd_bytes", "h2d_bytes",
+                        "candidates_scanned", "rerank_scored")}
+    demand = demand_from_stats(totals, len(stats), pq_m=index.cfg.pq_m,
+                               dim=index.ssd.vectors.shape[1],
+                               top_m=index.cfg.top_m)
     return {"results": results, "demand": demand, "stats": stats}
 
 
@@ -117,21 +113,14 @@ def service_latency(index: FusionANNSIndex, queries, **svc_kw) -> Dict:
     return pct
 
 
-def service_latency_threaded(index: FusionANNSIndex, queries, *,
-                             producers: int = 8, **svc_kw) -> Dict:
-    """Drive the THREADED serving runtime (pump thread + ticker) from N
-    producer threads against one replica and report per-request p50/p99
-    enqueue->resolve latency (seconds).
-
-    Each producer submits its share of ``queries`` (retrying through
-    backpressure) and blocks on its futures — real condition-variable
-    waits against the pump thread.  ``out_of_order_batches`` counts pump
-    batches where the ticker retired a younger scan window before an
-    older one finished re-ranking."""
+def drive_producers(submit, queries, producers: int,
+                    timeout: float = 300) -> List:
+    """N producer threads submitting through ``submit`` (each retries
+    through backpressure), then a blocking resolve of every future —
+    real condition-variable waits against the serving threads.  Shared by
+    the single-replica and routed traffic harnesses."""
     import threading
-    from repro.serve.anns_service import BackpressureError, \
-        BatchingANNSService
-    svc = BatchingANNSService(index, threaded=True, **svc_kw)
+    from repro.serve.anns_service import BackpressureError
     futs: List[List] = [[] for _ in range(producers)]
     chunks = [queries[i::producers] for i in range(producers)]
 
@@ -139,7 +128,7 @@ def service_latency_threaded(index: FusionANNSIndex, queries, *,
         for q in chunks[i]:
             while True:
                 try:
-                    futs[i].append(svc.submit(q))
+                    futs[i].append(submit(q))
                     break
                 except BackpressureError:
                     time.sleep(1e-3)
@@ -150,7 +139,20 @@ def service_latency_threaded(index: FusionANNSIndex, queries, *,
         t.start()
     for t in threads:
         t.join()
-    responses = [f.result(timeout=300) for fs in futs for f in fs]
+    return [f.result(timeout=timeout) for fs in futs for f in fs]
+
+
+def service_latency_threaded(index: FusionANNSIndex, queries, *,
+                             producers: int = 8, **svc_kw) -> Dict:
+    """Drive the THREADED serving runtime (pump thread + ticker) from N
+    producer threads against one replica and report per-request p50/p99
+    enqueue->resolve latency (seconds).
+
+    ``out_of_order_batches`` counts pump batches where the ticker retired
+    a younger scan window before an older one finished re-ranking."""
+    from repro.serve.anns_service import BatchingANNSService
+    svc = BatchingANNSService(index, threaded=True, **svc_kw)
+    responses = drive_producers(svc.submit, queries, producers)
     svc.stop()
     pct = svc.latency_percentiles()
     pct["responses"] = responses
@@ -162,6 +164,24 @@ def service_latency_threaded(index: FusionANNSIndex, queries, *,
 
     pct["out_of_order_batches"] = sum(_ooo(ev) for ev in svc.ticket_events)
     return pct
+
+
+def router_latency(index: FusionANNSIndex, queries, *, n_replicas: int = 2,
+                   policy: str = "jsq", producers: int = 8,
+                   **svc_kw) -> Dict:
+    """Drive a :class:`~repro.serve.router.ReplicaRouter` (N threaded
+    replicas behind one ``submit()``) from ``producers`` submitter threads
+    and report aggregated p50/p99, the stats rollup, and the measured
+    per-query demand the replica-scaling model consumes."""
+    from repro.serve.router import ReplicaRouter
+    router = ReplicaRouter(index, n_replicas=n_replicas, policy=policy,
+                           threaded=True, **svc_kw)
+    drive_producers(router.submit, queries, producers)
+    router.stop()
+    out = router.latency_percentiles()
+    out["rollup"] = router.stats_rollup()
+    out["demand"] = router.measured_demand()
+    return out
 
 
 def tune_for_recall(index, queries, gt, target: float,

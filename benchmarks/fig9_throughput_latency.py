@@ -1,20 +1,21 @@
 """Fig. 9: QPS + latency of SPANN / DiskANN / RUMMY / FusionANNS across the
 three dataset profiles at Recall@10>=0.9 (peak-thread operating point),
 plus the futures-path rows: the pipelined inflight-depth sweep, the
-serving front-end's p50/p99 through submit()/QueryFuture (PR 2), and the
+serving front-end's p50/p99 through submit()/QueryFuture (PR 2), the
 threaded runtime under 8 producer threads vs the synchronous pump
-(PR 3)."""
+(PR 3), and the multi-replica JSQ router with the 1/2/4-replica scaling
+model (PR 4)."""
 
 import time
 
 import numpy as np
 
-from benchmarks.common import (HW, bundle, fusion_demand, service_latency,
-                               service_latency_threaded)
+from benchmarks.common import (HW, bundle, fusion_demand, router_latency,
+                               service_latency, service_latency_threaded)
 from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
 from repro.core.engine import recall_at_k
 from repro.core.perf_model import (QueryDemand, qps_at_threads,
-                                   latency_at_threads)
+                                   latency_at_threads, sweep_replicas)
 
 
 def _mean_demand(results) -> QueryDemand:
@@ -79,16 +80,18 @@ def _service_latency_row(b) -> dict:
     }
 
 
-def _service_threaded_row(b) -> dict:
+def _service_threaded_row(b) -> tuple:
     """Threaded serving runtime (PR 3): 8 producer threads submitting
     against ONE replica (pump thread + out-of-order ticker), p50/p99 vs
-    the synchronous pump driving the same traffic."""
+    the synchronous pump driving the same traffic.  Returns (row, thr) so
+    the router row can reuse the single-replica measurement instead of
+    re-running the whole threaded pass."""
     sync = service_latency(b.index, b.queries, max_batch=16, max_wait_s=0.0,
                            scan_window=8, inflight_depth=2)
     thr = service_latency_threaded(
         b.index, b.queries, producers=8, max_batch=16, max_wait_s=0.0005,
         scan_window=8, inflight_depth=2)
-    return {
+    row = {
         "name": "fig9.sift.service_threaded",
         "us_per_call": thr["p50"] * 1e6,
         "derived": (f"8 producers: p50={thr['p50']*1e3:.2f}ms "
@@ -97,6 +100,29 @@ def _service_threaded_row(b) -> dict:
                     f"/{int(thr['stats']['batches'])} | sync pump: "
                     f"p50={sync['p50']*1e3:.2f}ms "
                     f"p99={sync['p99']*1e3:.2f}ms"),
+    }
+    return row, thr
+
+
+def _router_jsq_row(b, single) -> dict:
+    """Multi-replica routing (serve/router.py): 8 producers against TWO
+    threaded replicas behind one JSQ router, p50/p99 + routed split, plus
+    the replica-scaling model (one mesh carved into 1/2/4 device groups)
+    on the demand measured through the router.  ``single`` is the
+    single-replica threaded measurement from ``_service_threaded_row``."""
+    lat = router_latency(b.index, b.queries, n_replicas=2, policy="jsq",
+                         producers=8, max_batch=16, max_wait_s=0.0005,
+                         scan_window=8, inflight_depth=2)
+    sweep = sweep_replicas(lat["demand"], HW, (1, 2, 4))
+    return {
+        "name": "fig9.sift.router_jsq",
+        "us_per_call": lat["p50"] * 1e6,
+        "derived": (f"2 replicas x 8 producers: p50={lat['p50']*1e3:.2f}ms "
+                    f"p99={lat['p99']*1e3:.2f}ms "
+                    f"routed={lat['rollup']['routed']} "
+                    f"spills={lat['rollup']['spills']} | 1 replica: "
+                    f"p50={single['p50']*1e3:.2f}ms | modelled qps "
+                    f"r1={sweep[1]:.0f} r2={sweep[2]:.0f} r4={sweep[4]:.0f}"),
     }
 
 
@@ -143,7 +169,9 @@ def run():
         if ds == "sift":
             rows.append(_pipeline_depth_row(b))
             rows.append(_service_latency_row(b))
-            rows.append(_service_threaded_row(b))
+            srow, thr = _service_threaded_row(b)
+            rows.append(srow)
+            rows.append(_router_jsq_row(b, thr))
     return rows
 
 

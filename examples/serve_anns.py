@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--producers", type=int, default=4,
                     help="submitter threads for the threaded-service demo")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="serving replicas behind the JSQ router demo")
+    ap.add_argument("--policy", default="jsq",
+                    choices=("round_robin", "jsq", "deadline"),
+                    help="ReplicaRouter routing policy")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(SIFT_SMALL, n_vectors=args.n, dim=args.dim,
@@ -58,36 +63,60 @@ def main() -> None:
     assert all(f.done() for f in futs)
     pct = svc.latency_percentiles()
 
+    # shared producer harness for the threaded-service and router demos:
+    # N submitter threads, each retrying through backpressure, then a
+    # blocking resolve of every future
+    import threading
+
+    def drive_producers(submit):
+        from repro.serve.anns_service import BackpressureError
+        futs = [[] for _ in range(args.producers)]
+
+        def produce(i):
+            for q in queries[i::args.producers]:
+                while True:
+                    try:
+                        futs[i].append(submit(q))
+                        break
+                    except BackpressureError:
+                        time.sleep(1e-3)
+
+        workers = [threading.Thread(target=produce, args=(i,))
+                   for i in range(args.producers)]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        for fs in futs:
+            for f in fs:
+                f.result(timeout=300)
+
     # threaded runtime: a pump thread + out-of-order ticker per replica,
     # traffic from N producer threads (the deployment shape — DESIGN.md
     # §"Threading model")
-    import threading
     tsvc = BatchingANNSService(index, max_batch=16, max_wait_s=0.0005,
                                scan_window=8, inflight_depth=2,
                                threaded=True)
-    tfuts = [[] for _ in range(args.producers)]
-
-    def _produce(i):
-        from repro.serve.anns_service import BackpressureError
-        for q in queries[i::args.producers]:
-            while True:
-                try:
-                    tfuts[i].append(tsvc.submit(q))
-                    break
-                except BackpressureError:
-                    time.sleep(1e-3)
-
-    workers = [threading.Thread(target=_produce, args=(i,))
-               for i in range(args.producers)]
-    for w in workers:
-        w.start()
-    for w in workers:
-        w.join()
-    for fs in tfuts:
-        for f in fs:
-            f.result(timeout=300)
+    drive_producers(tsvc.submit)
     tsvc.stop()
     tpct = tsvc.latency_percentiles()
+
+    # multi-replica routing: N threaded replicas behind one futures-first
+    # submit() (each replica would own a disjoint sub-mesh on a multi-chip
+    # host — launch.mesh.split_mesh; on one device the router is a pure
+    # concurrency layer)
+    from repro.core.perf_model import sweep_replicas
+    from repro.serve.router import ReplicaRouter
+    router = ReplicaRouter(index, n_replicas=args.replicas,
+                           policy=args.policy, threaded=True, max_batch=16,
+                           max_wait_s=0.0005, scan_window=8,
+                           inflight_depth=2)
+    drive_producers(router.submit)
+    router.stop()
+    rpct = router.latency_percentiles()
+    rollup = router.stats_rollup()
+    rsweep = sweep_replicas(router.measured_demand(), DeviceModel(),
+                            (1, args.replicas, 2 * args.replicas))
 
     stats = [r.stats for r in results]
     demand = QueryDemand(
@@ -113,6 +142,14 @@ def main() -> None:
         "threaded_p50_ms": round(tpct["p50"] * 1e3, 2),
         "threaded_p99_ms": round(tpct["p99"] * 1e3, 2),
         "threaded_producers": args.producers,
+        "router_policy": args.policy,
+        "router_replicas": args.replicas,
+        "router_p50_ms": round(rpct["p50"] * 1e3, 2),
+        "router_p99_ms": round(rpct["p99"] * 1e3, 2),
+        "router_routed": rollup["routed"],
+        "router_spills": rollup["spills"],
+        "router_modelled_qps": {f"r{n}": round(v)
+                                for n, v in rsweep.items()},
         "modelled_qps": {f"t{t}": round(v["qps"]) for t, v in sweep.items()},
         "modelled_latency_ms": {f"t{t}": round(v["latency_ms"], 2)
                                 for t, v in sweep.items()},

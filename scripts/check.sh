@@ -11,6 +11,11 @@
 #                               threads against one replica, id-parity
 #                               with run(), out-of-order retirement
 #                               probe, zero leaked pending futures
+#   scripts/check.sh router-stress
+#                               multi-replica routing: policy id-parity,
+#                               8 producers across 2 replicas, JSQ
+#                               saturation bypass, sub-mesh scan parity,
+#                               deterministic fault injection
 #   scripts/check.sh full       everything, including @slow system tests
 #
 # CHECK_TIMEOUT overrides the guard (seconds).
@@ -21,14 +26,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 MODE="${1:-tier1}"
 case "$MODE" in
   smoke)
-    exec timeout "${CHECK_TIMEOUT:-300}" \
+    exec timeout "${CHECK_TIMEOUT:-420}" \
       python -m pytest -x -q -p no:cacheprovider \
         tests/test_executor.py tests/test_futures.py tests/test_engine.py \
-        tests/test_updates.py
+        tests/test_updates.py tests/test_threaded.py
     ;;
   threaded-stress)
     exec timeout "${CHECK_TIMEOUT:-300}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_threaded.py
+    ;;
+  router-stress)
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_router.py \
+        tests/test_faults.py
     ;;
   tier1)
     exec timeout "${CHECK_TIMEOUT:-600}" \
@@ -39,7 +49,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|full]" >&2
     exit 2
     ;;
 esac

@@ -39,6 +39,22 @@ def window_scan_ready(*arrays) -> bool:
     return True
 
 
+def replicate_to_mesh(x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """Commit ``x`` replicated onto ``ctx.mesh``'s devices.
+
+    On a full mesh this is what jit would do implicitly for an uncommitted
+    operand; on a SUB-mesh (multi-replica serving: one replica owns a
+    disjoint device group carved from the shared mesh) it matters — an
+    uncommitted array lives on the process default device, which may not
+    belong to this replica's group at all, and compute-follows-data would
+    otherwise drag the scan off the replica's devices (contending with a
+    sibling replica's scan).  No-op without a mesh."""
+    if ctx.mesh is None:
+        return x
+    spec = P(*((None,) * x.ndim))
+    return jax.device_put(x, NamedSharding(ctx.mesh, spec))
+
+
 def _gather_merge_batched(vals, gids, axes, n_shards: int, tk_out: int):
     """Shared tail of the batched shard bodies: all_gather the per-shard
     (dist, global-id) pairs along the query-local axis and merge."""

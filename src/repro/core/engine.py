@@ -159,6 +159,16 @@ class FusionANNSIndex:
             self._executor = ex
         return ex
 
+    def make_executor(self, mesh=None) -> QueryExecutor:
+        """A FRESH executor over this index (multi-replica serving: each
+        replica owns its own executor, optionally attached to a disjoint
+        sub-mesh from ``launch.mesh.split_mesh``).  All executors share
+        the index's tiers — posting lists, tombstones, SSD sim, and the
+        ``codes`` binding — so inserts/deletes propagate to every replica:
+        an insert rebinds ``self.codes`` and each executor re-places its
+        HBM shard on its next dispatch."""
+        return QueryExecutor(self, mesh=mesh)
+
     def plan(self, *, k: Optional[int] = None, top_m: Optional[int] = None,
              top_n: Optional[int] = None, **kw) -> QueryPlan:
         return QueryPlan.from_config(self.cfg, k=k, top_m=top_m,

@@ -241,11 +241,13 @@ class QueryExecutor:
     """Runs the stage list against one index, optionally mesh-sharded."""
 
     def __init__(self, index: "FusionANNSIndex",
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None, *, mesh=None):
         self.index = index
         self.ctx = ctx if ctx is not None else ShardCtx()
         self._placed: Optional[jax.Array] = None
         self._placed_src = None
+        if mesh is not None:
+            self.attach_mesh(mesh)
         # serializes stage ①-⑥ host work (traversal + LUT + device dispatch)
         # across threads: a pump thread and a ticker may both refill depth
         # slots, and the placement cache write must not race
@@ -264,7 +266,14 @@ class QueryExecutor:
 
     # ------------------------------------------------------------- sharding
     def attach_mesh(self, mesh) -> "QueryExecutor":
-        """Row-shard the HBM tier (PQ codes) over ``mesh``'s corpus axes."""
+        """Row-shard the HBM tier (PQ codes) over ``mesh``'s corpus axes.
+
+        ``mesh`` may be a SUB-mesh — a disjoint device group carved from a
+        larger mesh via ``launch.mesh.split_mesh`` (multi-replica serving:
+        each replica's executor scans its own group, so concurrent
+        replicas never contend for a chip).  Every device operand is
+        committed to the mesh at dispatch, so nothing leaks onto devices
+        outside the group."""
         from repro.sharding.spec import rules_for_mesh
         self.ctx = ShardCtx(mesh=mesh, rules=rules_for_mesh(mesh))
         self._placed = None          # free the previous mesh's placement
@@ -335,11 +344,16 @@ class QueryExecutor:
         mask_dev = jnp.asarray(mask)
         if self.ctx.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core.distributed import replicate_to_mesh
             corpus = self.ctx.rules.corpus
             cand = jax.device_put(cand, NamedSharding(
                 self.ctx.mesh, P(corpus, None)))
             mask_dev = jax.device_put(mask_dev, NamedSharding(
                 self.ctx.mesh, P(None, corpus)))
+            # commit the LUTs too: on a SUB-mesh an uncommitted operand
+            # sits on the process default device, which may belong to a
+            # sibling replica's group — compute must follow THIS mesh
+            luts = replicate_to_mesh(luts, self.ctx)
         scan_top_n = max(p.top_n for p in plans)
         vals, pos = sharded_adc_topn_window(
             cand, luts, mask_dev, min(scan_top_n, bucket), self.ctx,

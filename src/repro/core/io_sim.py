@@ -38,13 +38,15 @@ import numpy as np
 class IOStats:
     ios: int = 0                 # page reads issued to the "SSD"
     pages_requested: int = 0     # before any dedup
-    buffer_hits: int = 0
+    buffer_hits: int = 0         # inter-mini-batch dedup (DRAM page buffer)
+    intra_merged: int = 0        # intra-mini-batch dedup (same-page merge)
     bytes_read: int = 0
 
     def merge(self, other: "IOStats") -> "IOStats":
         return IOStats(self.ios + other.ios,
                        self.pages_requested + other.pages_requested,
                        self.buffer_hits + other.buffer_hits,
+                       self.intra_merged + other.intra_merged,
                        self.bytes_read + other.bytes_read)
 
 
@@ -204,6 +206,9 @@ class SSDSim:
         pages = self.layout.page_of[vec_ids]
         stats.pages_requested += len(pages)
         wanted = pages if not self.intra_merge else np.unique(pages)
+        # per-mechanism attribution invariant (Fig. 12):
+        #   pages_requested - ios == intra_merged + buffer_hits
+        stats.intra_merged += len(pages) - len(wanted)
         buf = self.buffer
         read_this_batch: List[int] = []       # read order (dups included)
         for p in wanted:

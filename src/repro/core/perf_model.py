@@ -58,6 +58,22 @@ class QueryDemand:
         return self.ssd_ios if self.ssd_requests < 0 else self.ssd_requests
 
 
+def demand_from_stats(totals: Dict[str, float], n: float, *, pq_m: int,
+                      dim: int, top_m: int) -> QueryDemand:
+    """Mean per-query demand from summed ``QueryStats`` counters covering
+    ``n`` responses — the ONE stats-to-demand conversion shared by the
+    benchmark harness (``benchmarks.common.fusion_demand``) and the
+    router's replica-scaling sweep (``ReplicaRouter.measured_demand``)."""
+    n = max(n, 1)
+    return QueryDemand(
+        ssd_ios=totals["ios"] / n,
+        ssd_bytes=totals["ssd_bytes"] / n,
+        h2d_bytes=totals["h2d_bytes"] / n,
+        gpu_lookups=totals["candidates_scanned"] / n * pq_m,
+        cpu_dist_ops=totals["rerank_scored"] / n * dim,
+        graph_hops=2.0 * top_m)
+
+
 def single_thread_latency(d: QueryDemand, hw: DeviceModel) -> float:
     io = d.requests * hw.ssd_lat + d.ssd_bytes / hw.ssd_bw
     pcie = d.h2d_bytes / hw.pcie_bw
@@ -97,3 +113,38 @@ def sweep_threads(d: QueryDemand, hw: DeviceModel,
     return {t: {"qps": qps_at_threads(d, hw, t),
                 "latency_ms": 1e3 * latency_at_threads(d, hw, t)}
             for t in threads}
+
+
+def qps_at_replicas(d: QueryDemand, hw: DeviceModel, n_replicas: int,
+                    threads_per_replica: int = 8) -> float:
+    """Multi-replica operating point: one mesh carved into ``n_replicas``
+    disjoint device groups (serve/router.py), each replica running its own
+    pump + ``threads_per_replica`` host serving threads.
+
+    Accelerator-side capacities SCALE with replicas — every group brings
+    its own HBM slice and host<->device links (gpu_lookup_rate, pcie_bw
+    x n) — while the box's SSD is shared and host threads total
+    ``n x t``.  QPS therefore rides ``n x t / L_1`` until a shared
+    resource binds, which is the router's whole premise: replicas add
+    serving-pipeline concurrency, not index capacity."""
+    caps = [hw.ssd_iops / d.requests if d.requests else np.inf,
+            hw.ssd_bw / d.ssd_bytes if d.ssd_bytes else np.inf,
+            n_replicas * hw.pcie_bw / d.h2d_bytes if d.h2d_bytes
+            else np.inf,
+            n_replicas * hw.gpu_lookup_rate / d.gpu_lookups
+            if d.gpu_lookups else np.inf]
+    threads = n_replicas * threads_per_replica
+    cpu_time = (d.cpu_lookups / hw.cpu_lookup_rate
+                + d.cpu_dist_ops / hw.cpu_dist_rate
+                + d.graph_hops * hw.graph_hop_time)
+    if cpu_time:
+        caps.append(threads / cpu_time)
+    caps.append(threads / max(single_thread_latency(d, hw), 1e-12))
+    return float(min(caps))
+
+
+def sweep_replicas(d: QueryDemand, hw: DeviceModel,
+                   replicas=(1, 2, 4),
+                   threads_per_replica: int = 8) -> Dict[int, float]:
+    return {n: qps_at_replicas(d, hw, n, threads_per_replica)
+            for n in replicas}

@@ -7,7 +7,10 @@ import to obtain placeholder devices."""
 
 from __future__ import annotations
 
+from typing import List
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,3 +30,31 @@ def make_test_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
     if n == 1:
         return jax.make_mesh((1, 1), ("data", "model"))
     return jax.make_mesh((2, n // 2), ("data", "model"))
+
+
+def split_mesh(mesh, n_replicas: int) -> List[jax.sharding.Mesh]:
+    """Carve ``mesh`` into ``n_replicas`` DISJOINT sub-meshes (multi-replica
+    serving: each replica's executor row-shards the corpus over its own
+    device group, so per-replica ADC scans never contend for a chip).
+
+    The leading mesh axis is split when divisible; otherwise the device
+    array is flattened and re-folded so any ``n_replicas`` dividing the
+    device count works.  Every sub-mesh keeps the parent's axis names
+    (sharding rules and ``corpus``-axis specs stay valid unchanged)."""
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    if n_replicas == 1:
+        return [mesh]
+    devs = np.asarray(mesh.devices)
+    total = devs.size
+    if total % n_replicas:
+        raise ValueError(
+            f"cannot split {total} devices into {n_replicas} replicas")
+    per = total // n_replicas
+    if devs.shape[0] % n_replicas == 0:
+        groups = np.split(devs, n_replicas, axis=0)
+    else:                      # re-fold: (n_replicas, 1, ..., per)
+        shape = (1,) * (devs.ndim - 1) + (per,)
+        groups = [g.reshape(shape)
+                  for g in np.split(devs.reshape(-1), n_replicas)]
+    return [jax.sharding.Mesh(g, mesh.axis_names) for g in groups]

@@ -1,6 +1,6 @@
 """Model building blocks (pure JAX, GSPMD-shardable).
 
-Design notes (see DESIGN.md §5):
+Design notes (see DESIGN.md):
   * Attention is blockwise/flash-style (``lax.scan`` over KV blocks) so the
     score matrix never materialises; activations are sequence-sharded over the
     ``model`` axis during train/prefill, so no head-divisibility constraint.

@@ -58,7 +58,15 @@ from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 FutureError, QueryFuture)
 
 __all__ = ["BatchingANNSService", "Request", "Response",
-           "BackpressureError", "DeadlineExceeded", "QueryFuture"]
+           "BackpressureError", "DeadlineExceeded", "QueryFuture",
+           "QUERY_STATS_FIELDS"]
+
+# additive QueryStats counters accumulated per served response — the single
+# source of truth for the service's ``query_stats`` dict AND the router's
+# cross-replica rollup (serve/router.py), so the two can't drift
+QUERY_STATS_FIELDS = ("ios", "pages_requested", "buffer_hits", "ssd_bytes",
+                      "h2d_bytes", "candidates_scanned", "rerank_batches",
+                      "rerank_scored")
 
 
 @dataclasses.dataclass
@@ -86,9 +94,13 @@ class BatchingANNSService:
                  max_wait_s: float = 0.002, scan_window: int = 0,
                  overlap_rerank: bool = False, inflight_depth: int = 0,
                  max_queue: int = 1024, threaded: bool = False,
-                 tick_interval_s: float = 2e-4):
+                 tick_interval_s: float = 2e-4, executor=None):
+        # ``executor`` lets a replica run its OWN pipeline instance over
+        # the shared index (multi-replica routing: each replica's executor
+        # is attached to a disjoint sub-mesh — serve/router.py); default is
+        # the index's shared executor, as before
         self.index = index
-        self.executor = index.executor
+        self.executor = executor if executor is not None else index.executor
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.scan_window = scan_window
@@ -105,6 +117,13 @@ class BatchingANNSService:
         self.stats: Dict[str, float] = {
             "batches": 0, "requests": 0, "mean_batch": 0.0,
             "rejected": 0, "expired": 0, "cancelled": 0}
+        # summed QueryStats counters of every response this replica served
+        # (the router's cross-replica rollup reads these); "served" counts
+        # only the responses that actually contributed — cancelled/expired
+        # requests appear in ``stats`` but never here
+        self.query_stats: Dict[str, int] = dict.fromkeys(
+            QUERY_STATS_FIELDS, 0)
+        self.query_stats["served"] = 0
         # enqueue -> resolve per request; bounded so a long-lived replica's
         # percentile window stays O(1) memory (sliding, newest-wins)
         self.latencies_s: Deque[float] = deque(maxlen=8192)
@@ -115,6 +134,7 @@ class BatchingANNSService:
         self._running = False
         self._ticker_stop = False
         self._serving = 0                  # batches between formation+resolve
+        self._in_flight = 0                # requests inside a forming batch
         self._active_ticket = None
         self._ticker_cv = threading.Condition()   # parks the idle ticker
         self._pump_thread: Optional[threading.Thread] = None
@@ -319,11 +339,13 @@ class BatchingANNSService:
                             f"request {r.rid} expired in queue"))
                     continue
                 batch.append(r)
+            self._in_flight += len(batch)
         try:
             return self._serve_batch(batch)
         finally:
             with self._lock:
                 self._serving -= 1
+                self._in_flight -= len(batch)
 
     def _serve_batch(self, batch: List[Request]) -> List[Response]:
         if not batch:
@@ -387,6 +409,10 @@ class BatchingANNSService:
                 resp = Response(rid=r.rid, result=f.result(),
                                 t_queue_s=t0 - r.t_enqueue,
                                 t_serve_s=t_serve, batch_size=len(batch))
+                for field in QUERY_STATS_FIELDS:
+                    self.query_stats[field] += getattr(resp.result.stats,
+                                                       field)
+                self.query_stats["served"] += 1
                 if r.future is not None:
                     r.future._set_result(resp)
                 self.latencies_s.append(t_done - r.t_enqueue)
@@ -411,6 +437,17 @@ class BatchingANNSService:
         return out
 
     # ---------------------------------------------------------------- stats
+    def live_load(self) -> int:
+        """Admission-state load: LIVE (uncancelled) queued requests plus
+        requests inside a forming or in-flight batch.  This is what the
+        router's join-shortest-queue policy reads — cancelled-but-not-yet-
+        compacted requests don't count, so a cancel burst doesn't repel
+        traffic from an actually idle replica."""
+        with self._lock:
+            queued = sum(1 for r in self._queue
+                         if r.future is None or not r.future.cancelled())
+            return queued + self._in_flight
+
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 of per-request enqueue->resolve latency (seconds)."""
         with self._lock:

@@ -76,6 +76,21 @@ class LMServer:
                 "wall_s": dt}
 
 
+class _RoutedFuture:
+    """Adapter: a router/service future resolving to a serving
+    ``Response``, exposed with the executor-future surface
+    (``result() -> QueryResult``)."""
+
+    def __init__(self, fut):
+        self._fut = fut
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._fut.result(timeout).result
+
+
 class RAGPipeline:
     """Retrieval-augmented generation: FusionANNS retrieves the top-k
     context vectors for the query embedding; their ids become context
@@ -85,13 +100,35 @@ class RAGPipeline:
     the retrieval (host traversal + async device scan) and only blocks on
     the future when the context tokens are needed; ``answer_batch``
     pipelines a whole request window through one submission, resolving
-    each retrieval future right before its generation step."""
+    each retrieval future right before its generation step.
+
+    ``router=`` swaps the retrieval tier for a
+    :class:`~repro.serve.router.ReplicaRouter` (DESIGN.md §5): each
+    retrieval is routed to one of N serving replicas and the per-request
+    future resolves to that replica's response — same ids, the replicas'
+    pump threads make progress instead of ``ticket.poll()``."""
 
     def __init__(self, anns_index, lm_server: LMServer,
-                 embed_fn: Optional[Callable] = None):
+                 embed_fn: Optional[Callable] = None, router=None):
         self.index = anns_index
         self.server = lm_server
         self.embed = embed_fn or (lambda toks: None)
+        self.router = router
+
+    def _retrieve(self, query_vecs: np.ndarray, k: int,
+                  inflight_depth: int = 2):
+        """Submit every query; returns ``(futures, poll)`` where each
+        future's ``.result()`` is a :class:`~repro.core.engine.QueryResult`
+        (router futures resolve to a serving ``Response``; unwrapped
+        lazily so generation still overlaps the in-flight retrievals) and
+        ``poll()`` opportunistically retires landed scan windows."""
+        q = np.atleast_2d(np.asarray(query_vecs, np.float32))
+        if self.router is not None:
+            return ([_RoutedFuture(self.router.submit(v, k=k)) for v in q],
+                    lambda: None)
+        ticket = self.index.submit(q, k=k, window=1,
+                                   inflight_depth=inflight_depth)
+        return list(ticket.futures), ticket.poll
 
     def _ctx_tokens(self, res) -> np.ndarray:
         vocab = self.server.cfg.vocab_size
@@ -99,9 +136,8 @@ class RAGPipeline:
 
     def answer(self, query_vec: np.ndarray, prompt: np.ndarray,
                n_tokens: int = 16, k: int = 4) -> Dict[str, Any]:
-        ticket = self.index.submit(
-            np.asarray(query_vec, np.float32)[None], k=k)
-        res = ticket.futures[0].result()   # scan was in flight since submit
+        futs, _ = self._retrieve(np.asarray(query_vec, np.float32)[None], k)
+        res = futs[0].result()             # scan was in flight since submit
         full = np.concatenate([self._ctx_tokens(res)[None, :], prompt],
                               axis=1)
         out = self.server.generate(full, n_tokens)
@@ -119,11 +155,10 @@ class RAGPipeline:
         scan landed during generation retire opportunistically (possibly
         out of order — the PR-3 retirement path) and the next ``result()``
         returns without blocking."""
-        ticket = self.index.submit(np.asarray(query_vecs, np.float32),
-                                   k=k, window=1,
-                                   inflight_depth=inflight_depth)
+        futs, poll = self._retrieve(np.asarray(query_vecs, np.float32), k,
+                                    inflight_depth=inflight_depth)
         outs: List[Dict[str, Any]] = []
-        for fut, prompt in zip(ticket.futures, prompts):
+        for fut, prompt in zip(futs, prompts):
             res = fut.result()
             full = np.concatenate([self._ctx_tokens(res)[None, :],
                                    prompt[None] if prompt.ndim == 1
@@ -133,5 +168,6 @@ class RAGPipeline:
             out["retrieval_stats"] = res.stats
             outs.append(out)
             # generation kept the host busy: retire any landed scans now
-            ticket.poll()
+            # (no-op under a router — replica pump threads own progress)
+            poll()
         return outs

@@ -1,0 +1,250 @@
+"""Multi-replica routing over one mesh (the ROADMAP's PR-3 follow-on).
+
+The threaded :class:`~repro.serve.anns_service.BatchingANNSService` is the
+per-replica building block: one pump thread + one ticker per replica keeps
+a single device group busy.  Serving heavy traffic from one box is then a
+ROUTING problem — saturate the whole device tier with many concurrent
+query streams.  :class:`ReplicaRouter` fronts N such replicas:
+
+* **one mesh, disjoint device groups** — ``launch.mesh.split_mesh`` carves
+  the shared mesh into N sub-meshes; each replica's
+  :class:`~repro.core.executor.QueryExecutor` row-shards the PQ corpus
+  over ITS group only (``core.distributed`` commits every scan operand to
+  the sub-mesh), so concurrent per-replica ADC scans never contend for a
+  chip.  Without a mesh (tests, 1-device hosts) every replica runs
+  unsharded on the default device and the router is a pure concurrency
+  layer.
+* **same futures-first surface** — ``submit() -> QueryFuture`` with
+  ``k``/``top_n``/``deadline_s``, backpressure (a submission rejected by
+  every replica raises :class:`BackpressureError`), graceful fan-out
+  ``stop()`` drain, aggregated ``latency_percentiles()`` and a
+  ``QueryStats`` rollup.
+* **pluggable policies** —
+
+  ============= =========================================================
+  policy        choice per request
+  ============= =========================================================
+  round_robin   cycle through replicas (stateless, cache-friendly)
+  jsq           join-shortest-queue: each replica's LIVE request count
+                (``BatchingANNSService.live_load()`` — uncancelled queued
+                + in-flight) picks the least-loaded replica
+  deadline      round-robin baseline, but a request carrying a deadline
+                spills to the least-loaded replica when that is strictly
+                less loaded than the round-robin pick
+  ============= =========================================================
+
+  Every policy also SPILLS on backpressure: when the chosen replica's
+  queue is full the router tries the remaining replicas (least-loaded
+  first) before rejecting.
+* **update propagation** — replicas share ONE index object (posting
+  lists, tombstones, SSD tier, the ``codes`` binding), so
+  ``router.insert()/delete()`` are visible to every replica: an insert
+  rebinds ``index.codes`` and each replica's executor re-places its HBM
+  shard on its next dispatch; deletes tombstone in DRAM and are filtered
+  at candidate collection on every replica (``test_updates`` semantics
+  hold under routing).
+
+Routing never changes results: each replica runs the same unified
+executor pipeline over the same index, so ids are bit-identical to a
+single-replica ``run()`` under every policy (tests/test_router.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import FusionANNSIndex
+from repro.core.futures import BackpressureError, QueryFuture
+from repro.serve.anns_service import (QUERY_STATS_FIELDS,
+                                      BatchingANNSService)
+
+__all__ = ["ReplicaRouter", "POLICIES"]
+
+POLICIES = ("round_robin", "jsq", "deadline")
+
+
+class ReplicaRouter:
+    """Fronts N serving replicas with one futures-first ``submit()``."""
+
+    def __init__(self, index: FusionANNSIndex, *, n_replicas: int = 2,
+                 policy: str = "jsq", mesh=None, threaded: bool = True,
+                 **svc_kw):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.index = index
+        self.policy = policy
+        if mesh is not None:
+            from repro.launch.mesh import split_mesh
+            self.meshes = split_mesh(mesh, n_replicas)
+        else:
+            self.meshes = [None] * n_replicas
+        # each replica: own executor (own sub-mesh, own dispatch lock, own
+        # HBM placement) wrapped by its own pump/ticker service
+        self.replicas: List[BatchingANNSService] = [
+            BatchingANNSService(index, executor=index.make_executor(m),
+                                threaded=threaded, **svc_kw)
+            for m in self.meshes]
+        self._lock = threading.Lock()
+        self._rr = 0                       # round-robin cursor
+        self.stats: Dict[str, object] = {
+            "submitted": 0, "rejected": 0, "spills": 0,
+            "deadline_spills": 0, "routed": [0] * n_replicas}
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ReplicaRouter":
+        for r in self.replicas:
+            r.start()
+        return self
+
+    def stop(self) -> "ReplicaRouter":
+        """Graceful fan-out drain: every replica's pump thread serves its
+        remaining queue (zero pending futures survive), in parallel."""
+        ts = [threading.Thread(target=r.stop) for r in self.replicas]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        return self
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --------------------------------------------------------------- routing
+    def _route_order(self, deadline_s: Optional[float]
+                     ) -> tuple[Sequence[int], Optional[int]]:
+        """Replica indices to try (primary choice first) plus the
+        deadline-spill target, if this request jumped the round-robin
+        line.  Fallbacks (the backpressure spill path) go least-loaded
+        first."""
+        n = len(self.replicas)
+        if n == 1:
+            return (0,), None
+        loads = [r.live_load() for r in self.replicas]
+        by_load = sorted(range(n), key=lambda i: (loads[i], i))
+        if self.policy == "jsq":
+            return by_load, None
+        with self._lock:
+            start = self._rr
+            self._rr = (self._rr + 1) % n
+        if self.policy == "deadline" and deadline_s is not None:
+            least = by_load[0]
+            if loads[least] < loads[start]:
+                # deadline-aware spill: tight-deadline traffic jumps to
+                # the least-loaded replica instead of waiting in line
+                return ([least] + [i for i in by_load if i != least],
+                        least)
+        # primary = the round-robin pick; backpressure fallbacks go
+        # least-loaded first (the documented spill order)
+        return [start] + [i for i in by_load if i != start], None
+
+    def submit(self, query: np.ndarray, k: Optional[int] = None, *,
+               top_n: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> QueryFuture:
+        """Route one request; returns the serving replica's future (same
+        surface as ``BatchingANNSService.submit``).  Tries the policy's
+        choice first, spills across the remaining replicas on
+        backpressure, and raises :class:`BackpressureError` only when
+        EVERY replica's queue is full."""
+        order, dl_target = self._route_order(deadline_s)
+        last: Optional[BackpressureError] = None
+        for pos, i in enumerate(order):
+            try:
+                fut = self.replicas[i].submit(query, k, top_n=top_n,
+                                              deadline_s=deadline_s)
+            except BackpressureError as exc:
+                last = exc
+                continue
+            with self._lock:
+                self.stats["submitted"] += 1
+                self.stats["routed"][i] += 1
+                if pos:
+                    self.stats["spills"] += 1
+                # counted only when the request actually LANDED on the
+                # spill target (not when the spill was merely chosen)
+                if dl_target is not None and i == dl_target:
+                    self.stats["deadline_spills"] += 1
+            return fut
+        with self._lock:
+            self.stats["rejected"] += 1
+        raise BackpressureError(
+            f"all {len(self.replicas)} replicas backpressured") from last
+
+    def drain(self) -> None:
+        """Serve everything currently queued on every replica."""
+        for r in self.replicas:
+            r.drain()
+
+    # ----------------------------------------------------------- aggregates
+    def live_load(self) -> int:
+        return sum(r.live_load() for r in self.replicas)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 over ALL replicas' per-request enqueue->resolve
+        latencies (one traffic stream, N servers)."""
+        lats = []
+        for r in self.replicas:
+            with r._lock:
+                lats.extend(r.latencies_s)
+        if not lats:
+            return {"p50": 0.0, "p99": 0.0, "n": 0}
+        arr = np.asarray(lats)
+        return {"p50": float(np.percentile(arr, 50)),
+                "p99": float(np.percentile(arr, 99)), "n": len(arr)}
+
+    def stats_rollup(self) -> Dict[str, object]:
+        """Router counters + per-replica service stats + the summed
+        ``QueryStats`` counters of every response served anywhere."""
+        totals = dict.fromkeys(QUERY_STATS_FIELDS, 0)
+        per_replica = []
+        requests = batches = served = 0
+        for r in self.replicas:
+            with r._lock:
+                per_replica.append(dict(r.stats))
+                requests += int(r.stats["requests"])
+                batches += int(r.stats["batches"])
+                served += r.query_stats["served"]
+                for f in QUERY_STATS_FIELDS:
+                    totals[f] += r.query_stats[f]
+        with self._lock:
+            out = {k: (list(v) if isinstance(v, list) else v)
+                   for k, v in self.stats.items()}
+        out["requests"] = requests
+        out["batches"] = batches
+        out["served"] = served
+        out["query_stats"] = totals
+        out["per_replica"] = per_replica
+        return out
+
+    def measured_demand(self):
+        """Mean per-query :class:`~repro.core.perf_model.QueryDemand` over
+        everything SERVED anywhere (cancelled/expired requests contributed
+        no stats, so they don't dilute the mean) — the analytic device
+        model's input for the replica-scaling sweep
+        (``perf_model.qps_at_replicas``)."""
+        from repro.core.perf_model import demand_from_stats
+        roll = self.stats_rollup()
+        return demand_from_stats(
+            roll["query_stats"], roll["served"],
+            pq_m=self.index.cfg.pq_m,
+            dim=self.index.ssd.vectors.shape[1],
+            top_m=self.index.cfg.top_m)
+
+    # -------------------------------------------------------------- updates
+    def insert(self, vectors: np.ndarray) -> np.ndarray:
+        """Insert into the SHARED index: every replica sees the new ids on
+        its next dispatch (the executor's HBM placement is keyed on the
+        ``codes`` binding, which insert replaces)."""
+        return self.index.insert(vectors)
+
+    def delete(self, ids: np.ndarray) -> None:
+        """Tombstone ids in the shared DRAM tier — filtered at candidate
+        collection by every replica immediately."""
+        self.index.delete(ids)

@@ -1,0 +1,158 @@
+"""Deterministic fault injection for the threaded serving runtime
+(ISSUE 4 satellite).
+
+Every fault here is injected at a seam (monkeypatched class/module
+attribute or an event-gated wrapper), never with sleeps-and-hope:
+
+* **lost/stalled scan window** — ``_InflightQueue.commit`` swallows the
+  window (the dispatch happened, the scan never lands anywhere the pump
+  can see).  ``BatchTicket.wait()`` must raise :class:`FutureError`
+  NAMING the stalled window, and through the threaded service the same
+  fault must resolve the waiting futures with that error instead of
+  hanging them — then the replica keeps serving once the fault clears;
+* **cancel-after-retire race** — a ``cancel()`` that loses the race
+  against retirement returns False and leaves the result intact; a
+  cancel that lands between dispatch and retirement skips ONLY its own
+  re-rank (counted via a wrapped ``heuristic_rerank``);
+* **poison batch** — a request that fails its batch (dim mismatch)
+  resolves only that batch's futures with :class:`FutureError`; the
+  replica's pump thread survives, and the ROUTER keeps serving on every
+  replica.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import executor as executor_mod
+from repro.core.futures import CancelledError, FutureError
+from repro.serve.anns_service import BatchingANNSService
+from repro.serve.router import ReplicaRouter
+
+
+def _swallow_commit(self, w):
+    """Fault: the depth slot is released but the window never becomes
+    retirable — a scan that was dispatched and then lost."""
+    self._reserved -= 1
+
+
+# ------------------------------------------------------------ stalled scan
+
+def test_lost_window_stall_raises_naming_window(anns_bundle, monkeypatch):
+    b = anns_bundle
+    monkeypatch.setattr(executor_mod._InflightQueue, "commit",
+                        _swallow_commit)
+    ticket = b.index.executor.submit(b.queries[:2], b.index.plan(window=1))
+    with pytest.raises(FutureError, match=r"stalled window\(s\) \[0, 1\]"):
+        ticket.wait()
+    assert not ticket.futures[0].done() and not ticket.futures[1].done()
+
+
+def test_stalled_scan_resolves_futures_and_replica_recovers(anns_bundle,
+                                                            monkeypatch):
+    """Through the threaded service: the stall must surface on the
+    request futures (naming the window) — never hang their waiters — and
+    the replica must keep serving after the fault clears."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=2, max_wait_s=0.001,
+                              threaded=True)
+    with monkeypatch.context() as m:
+        m.setattr(executor_mod._InflightQueue, "commit", _swallow_commit)
+        doomed = svc.submit(b.queries[0])
+        with pytest.raises(FutureError, match=r"stalled window"):
+            doomed.result(timeout=60)
+    # fault cleared: same replica, same pump thread, normal service
+    good = svc.submit(b.queries[1])
+    np.testing.assert_array_equal(good.result(timeout=60).result.ids,
+                                  b.index.query(b.queries[1]).ids)
+    assert svc.stats.get("pump_errors", 0) >= 1
+    svc.stop()
+    assert not svc._queue and svc._serving == 0
+
+
+# --------------------------------------------------- cancel-vs-retire races
+
+def test_cancel_after_retire_loses_and_keeps_result(anns_bundle):
+    b = anns_bundle
+    with BatchingANNSService(b.index, max_batch=4,
+                             max_wait_s=0.001) as svc:
+        fut = svc.submit(b.queries[0])
+        resp = fut.result(timeout=60)          # retired: race already lost
+        assert fut.cancel() is False
+        assert not fut.cancelled() and fut.done()
+        # the stored result survives the late cancel
+        np.testing.assert_array_equal(fut.result().result.ids, resp.result.ids)
+        np.testing.assert_array_equal(resp.result.ids,
+                                      b.index.query(b.queries[0]).ids)
+
+
+def test_cancel_between_dispatch_and_retire_skips_only_own_rerank(
+        anns_bundle, monkeypatch):
+    """Both windows are dispatched (scans in flight), nothing retired yet;
+    cancelling query 1 must skip exactly its re-rank and leave query 0
+    bit-identical."""
+    b = anns_bundle
+    calls = []
+    real = executor_mod.heuristic_rerank
+
+    def counting(query, candidate_ids, ssd, k, **kw):
+        calls.append(len(candidate_ids))
+        return real(query, candidate_ids, ssd, k, **kw)
+
+    monkeypatch.setattr(executor_mod, "heuristic_rerank", counting)
+    ticket = b.index.executor.submit(
+        b.queries[:2], b.index.plan(window=1, inflight_depth=2))
+    assert ticket.futures[1].cancel()
+    ticket.wait()
+    assert ticket.futures[1].cancelled()
+    with pytest.raises(CancelledError):
+        ticket.futures[1].result()
+    assert len(calls) == 1                     # only query 0 re-ranked
+    np.testing.assert_array_equal(ticket.futures[0].result().ids,
+                                  b.index.query(b.queries[0]).ids)
+
+
+# ------------------------------------------------------------- poison batch
+
+def test_poison_batch_fails_own_futures_router_keeps_serving(anns_bundle):
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
+                           threaded=True, max_batch=1, max_wait_s=0.001)
+    bad = router.submit(np.ones(7, np.float32))    # dim mismatch
+    with pytest.raises(FutureError):
+        bad.result(timeout=60)
+    # both replicas still serve after the poison batch (round-robin
+    # guarantees the poisoned replica gets fresh traffic too)
+    goods = [router.submit(q) for q in b.queries[:4]]
+    for q, f in zip(b.queries[:4], goods):
+        np.testing.assert_array_equal(f.result(timeout=60).result.ids,
+                                      b.index.query(q).ids)
+    roll = router.stats_rollup()
+    assert roll["routed"] == [3, 2]            # poison + 2 / 2 goods
+    assert sum(s.get("pump_errors", 0) for s in roll["per_replica"]) >= 1
+    router.stop()
+    for svc in router.replicas:
+        assert not svc._queue and svc._serving == 0
+
+
+def test_poison_batch_does_not_poison_batchmates_futures_forever(
+        anns_bundle):
+    """A poison request coalesced WITH a good one fails that whole batch
+    (its own futures), but a resubmission of the good query on the healed
+    queue succeeds — the failure never outlives its batch."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=10.0)
+    bad = svc.submit(np.ones(7, np.float32))
+    good = svc.submit(b.queries[0])
+    # sync harness: the pump re-raises the original fault AFTER resolving
+    # the batch futures with FutureError
+    with pytest.raises(Exception):
+        svc.pump(force=True)
+    assert isinstance(bad.exception(), FutureError)
+    assert isinstance(good.exception(), FutureError)
+    retry = svc.submit(b.queries[0])
+    svc.drain()
+    np.testing.assert_array_equal(retry.result().result.ids,
+                                  b.index.query(b.queries[0]).ids)

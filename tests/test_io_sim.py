@@ -139,6 +139,50 @@ def test_dedup_attribution_ordering(rng):
     assert configs["full"] <= configs["buf_only"]
 
 
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 999), intra=st.sampled_from([True, False]),
+       buf=st.sampled_from([True, False]), n_batches=st.integers(1, 6),
+       buffer_pages=st.sampled_from([2, 8, 64]))
+def test_dedup_counters_sum_to_pages_saved(seed, intra, buf, n_batches,
+                                           buffer_pages):
+    """Satellite (PR-3 Fig. 12 attribution lock-in): the two dedup
+    mechanisms each count their OWN saves, and under any randomized
+    workload they sum EXACTLY to the total pages saved —
+
+        pages_requested - ios == intra_merged + buffer_hits
+
+    with each counter pinned to zero when its mechanism is disabled (so
+    neither mechanism can silently absorb the other's class of repeats,
+    even under LRU eviction pressure)."""
+    rng = np.random.default_rng(seed)
+    data, ssd = _mk_ssd(rng, intra=intra, buf=buf,
+                        buffer_pages=buffer_pages)
+    stats = ssd.begin_query()
+    id_rng = np.random.default_rng(seed + 1)
+    for _ in range(n_batches):
+        ids = id_rng.integers(0, 300, int(id_rng.integers(1, 60)))
+        ssd.fetch(ids, stats)
+    assert stats.pages_requested - stats.ios \
+        == stats.intra_merged + stats.buffer_hits
+    if not intra:
+        assert stats.intra_merged == 0
+    if not buf:
+        assert stats.buffer_hits == 0
+    assert stats.bytes_read == stats.ios * ssd.layout.page_bytes
+
+
+def test_dedup_counter_merge_is_additive(rng):
+    data, ssd = _mk_ssd(rng)
+    s1, s2 = ssd.begin_query(), ssd.begin_query()
+    ssd.fetch(np.arange(40), s1)
+    ssd.fetch(np.concatenate([np.arange(20), np.arange(20)]), s2)
+    m = s1.merge(s2)
+    for f in ("ios", "pages_requested", "buffer_hits", "intra_merged",
+              "bytes_read"):
+        assert getattr(m, f) == getattr(s1, f) + getattr(s2, f)
+    assert m.pages_requested - m.ios == m.intra_merged + m.buffer_hits
+
+
 def test_lru_eviction(rng):
     buf = PageBuffer(capacity_pages=2)
     buf.insert(1), buf.insert(2), buf.insert(3)

@@ -1,0 +1,80 @@
+"""Property-based tests for the layered-plan merge (ISSUE 4 satellite).
+
+``PlanOverrides.merge_into`` / ``QueryPlan.override`` carry per-request
+knobs into a shared scan window (PR 2); the algebra they must satisfy:
+
+* **idempotence** — merging the same override twice is the first merge;
+* **layering order** — for every field, the LAST non-``None`` layer wins
+  (``ov2`` over ``ov1`` over the base plan; explicit ``kw`` over ``ov``);
+* **None vs 0** — only ``None`` means "keep the base"; explicit zeros are
+  honored, both in ``override()`` and ``QueryPlan.from_config`` (the PR-2
+  ``is None`` fix — ``k=0`` must never be conflated with "default").
+
+Runs under ``hypothesis`` when installed, else the deterministic
+``tests/_propshim.py`` fallback (tier-1 policy, see conftest.py).
+"""
+
+from _propshim import given, settings, strategies as st
+
+from repro.configs.anns_datasets import SIFT_SMALL
+from repro.core.executor import PlanOverrides, QueryPlan
+
+BASE = QueryPlan(k=10, top_m=24, top_n=256)
+
+# None (keep), 0 (explicit zero — must NOT be conflated with None), and a
+# few positive values
+_knob = st.sampled_from([None, 0, 1, 7, 64])
+_dl = st.sampled_from([None, 0.0, 0.25, 5.0])
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=_knob, top_m=_knob, top_n=_knob, deadline_s=_dl)
+def test_merge_into_is_idempotent(k, top_m, top_n, deadline_s):
+    ov = PlanOverrides(k=k, top_m=top_m, top_n=top_n,
+                       deadline_s=deadline_s)
+    once = ov.merge_into(BASE)
+    assert ov.merge_into(once) == once
+
+
+@settings(max_examples=60, deadline=None)
+@given(k1=_knob, n1=_knob, d1=_dl, k2=_knob, n2=_knob, d2=_dl)
+def test_layering_last_non_none_wins(k1, n1, d1, k2, n2, d2):
+    ov1 = PlanOverrides(k=k1, top_n=n1, deadline_s=d1)
+    ov2 = PlanOverrides(k=k2, top_n=n2, deadline_s=d2)
+    merged = ov2.merge_into(ov1.merge_into(BASE))
+
+    def pick(a, b, base):
+        return a if a is not None else (b if b is not None else base)
+
+    assert merged.k == pick(k2, k1, BASE.k)
+    assert merged.top_n == pick(n2, n1, BASE.top_n)
+    assert merged.deadline_s == pick(d2, d1, BASE.deadline_s)
+    # untouched fields ride through every layer
+    assert merged.top_m == BASE.top_m
+    assert merged.rerank_batch == BASE.rerank_batch
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=_knob, kw_k=_knob)
+def test_override_kwargs_layer_over_overrides(k, kw_k):
+    """``plan.override(ov, k=...)``: the kw layer sits ABOVE the override
+    layer — same last-non-None-wins rule."""
+    merged = BASE.override(PlanOverrides(k=k), k=kw_k)
+    expect = kw_k if kw_k is not None else (k if k is not None else BASE.k)
+    assert merged.k == expect
+
+
+def test_empty_override_is_identity():
+    assert PlanOverrides().merge_into(BASE) == BASE
+    assert BASE.override() == BASE
+
+
+def test_zero_k_is_not_none():
+    """The PR-2 edge case: k=0 / top_n=0 are real values, not defaults."""
+    assert PlanOverrides(k=0).merge_into(BASE).k == 0
+    assert PlanOverrides(top_n=0).merge_into(BASE).top_n == 0
+    assert PlanOverrides(k=None).merge_into(BASE).k == BASE.k
+    # from_config has the same contract (explicit ``is None`` checks)
+    assert QueryPlan.from_config(SIFT_SMALL, k=0).k == 0
+    assert QueryPlan.from_config(SIFT_SMALL).k == SIFT_SMALL.top_k
+    assert QueryPlan.from_config(SIFT_SMALL, top_n=0).top_n == 0

@@ -84,3 +84,15 @@ def test_rag_pipeline(rng):
     assert out["tokens"].shape == (1, 4)
     assert len(out["retrieved_ids"]) == acfg.top_k
     assert out["retrieval_stats"].ios >= 0
+
+    # routed retrieval tier (DESIGN.md §5): bit-identical retrieved ids
+    from repro.serve.router import ReplicaRouter
+    with ReplicaRouter(index, n_replicas=2, policy="jsq", max_batch=4,
+                       max_wait_s=0.001) as router:
+        routed = RAGPipeline(index, server, router=router)
+        out2 = routed.answer(data[3],
+                             rng.integers(0, cfg.vocab_size, (1, 4),
+                                          dtype=np.int32), n_tokens=4,
+                             k=acfg.top_k)
+    np.testing.assert_array_equal(out2["retrieved_ids"],
+                                  out["retrieved_ids"])
