@@ -184,6 +184,42 @@ def router_latency(index: FusionANNSIndex, queries, *, n_replicas: int = 2,
     return out
 
 
+def client_async_latency(index: FusionANNSIndex, queries, *,
+                         n_replicas: int = 2, policy: str = "jsq",
+                         max_inflight: int = 64, repeat: int = 1,
+                         **svc_kw) -> Dict:
+    """Drive the asyncio front door (``AsyncANNSClient`` — DESIGN.md §6)
+    over an N-replica router: ONE event loop holds the whole workload in
+    flight (vs a thread per producer), backpressure is awaited admission,
+    and responses stream back in completion order.  Reports wall clock,
+    per-request p50/p99 (submit->resolve, as measured by each
+    ``SearchResponse.latency_s``), and the client's admission counters."""
+    import asyncio
+    from repro.serve.client import AsyncANNSClient, SearchRequest
+    from repro.serve.router import ReplicaRouter
+    router = ReplicaRouter(index, n_replicas=n_replicas, policy=policy,
+                           threaded=True, **svc_kw)
+    reqs = [SearchRequest(query=q, tag=i)
+            for i, q in enumerate(np.concatenate([queries] * repeat))]
+
+    async def drive():
+        async with AsyncANNSClient(router,
+                                   max_inflight=max_inflight) as client:
+            t0 = time.perf_counter()
+            resps = [r async for r in client.search_many(reqs)]
+            return time.perf_counter() - t0, resps, dict(client.stats)
+
+    try:
+        wall, resps, cstats = asyncio.run(drive())
+    finally:
+        router.stop()
+    lat = np.asarray([r.latency_s for r in resps])
+    return {"p50": float(np.percentile(lat, 50)),
+            "p99": float(np.percentile(lat, 99)), "n": len(lat),
+            "wall_s": wall, "client_stats": cstats,
+            "rollup": router.stats_rollup(), "responses": resps}
+
+
 def tune_for_recall(index, queries, gt, target: float,
                     top_ms=(8, 16, 24, 48, 96), top_ns=(128, 256, 512)):
     """Find the cheapest (top_m, top_n) reaching the recall target —

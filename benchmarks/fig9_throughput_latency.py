@@ -3,14 +3,16 @@ three dataset profiles at Recall@10>=0.9 (peak-thread operating point),
 plus the futures-path rows: the pipelined inflight-depth sweep, the
 serving front-end's p50/p99 through submit()/QueryFuture (PR 2), the
 threaded runtime under 8 producer threads vs the synchronous pump
-(PR 3), and the multi-replica JSQ router with the 1/2/4-replica scaling
-model (PR 4)."""
+(PR 3), the multi-replica JSQ router with the 1/2/4-replica scaling
+model (PR 4), and the asyncio client front door over that router
+(PR 5)."""
 
 import time
 
 import numpy as np
 
-from benchmarks.common import (HW, bundle, fusion_demand, router_latency,
+from benchmarks.common import (HW, bundle, client_async_latency,
+                               fusion_demand, router_latency,
                                service_latency, service_latency_threaded)
 from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
 from repro.core.engine import recall_at_k
@@ -126,6 +128,27 @@ def _router_jsq_row(b, single) -> dict:
     }
 
 
+def _client_async_row(b) -> dict:
+    """The asyncio front door (PR 5): one event loop holding the whole
+    workload in flight over a 2-replica JSQ router — p50/p99 per-request
+    latency plus awaited-admission counters (the client never surfaces
+    BackpressureError)."""
+    lat = client_async_latency(
+        b.index, b.queries, n_replicas=2, policy="jsq", max_inflight=64,
+        repeat=2, max_batch=16, max_wait_s=0.0005, scan_window=8,
+        inflight_depth=2)
+    return {
+        "name": "fig9.sift.client_async",
+        "us_per_call": lat["p50"] * 1e6,
+        "derived": (f"1 loop x {lat['n']} reqs over 2 replicas: "
+                    f"p50={lat['p50']*1e3:.2f}ms p99={lat['p99']*1e3:.2f}ms "
+                    f"wall={lat['wall_s']*1e3:.0f}ms "
+                    f"admission_waits="
+                    f"{lat['client_stats']['admission_waits']} "
+                    f"routed={lat['rollup']['routed']}"),
+    }
+
+
 def run():
     rows = []
     for ds in ("sift", "spacev", "deep"):
@@ -172,6 +195,7 @@ def run():
             srow, thr = _service_threaded_row(b)
             rows.append(srow)
             rows.append(_router_jsq_row(b, thr))
+            rows.append(_client_async_row(b))
     return rows
 
 

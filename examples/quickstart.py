@@ -1,4 +1,8 @@
-"""Quickstart: build a FusionANNS index and run queries.
+"""Quickstart: build a FusionANNS index and serve typed queries.
+
+Uses the unified client API (DESIGN.md §6): a ``SearchRequest`` per
+query through an ``ANNSClient`` over the batching service, responses as
+``SearchResponse`` (ids / dists / QueryStats / latency).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +15,8 @@ import numpy as np
 from repro.configs.anns_datasets import SIFT_SMALL
 from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
 from repro.data.synthetic import clustered_vectors
+from repro.serve.anns_service import BatchingANNSService
+from repro.serve.client import ANNSClient, SearchRequest
 
 
 def main() -> None:
@@ -29,16 +35,27 @@ def main() -> None:
           f"replication {index.posting.replication_factor():.2f}x, "
           f"SSD pages {index.ssd.layout.n_pages}")
 
+    # one serving API: a typed request per query, dynamic batching under
+    # the hood, a typed response back (ids/dists/stats/latency)
+    client = ANNSClient(BatchingANNSService(index, max_batch=8,
+                                            max_wait_s=0.0))
+    responses = client.search_many(
+        [SearchRequest(query=q, tag=i) for i, q in enumerate(queries)])
+
     gt = ground_truth(data, queries, cfg.top_k)
-    results = index.batch_query(queries)
-    rec = recall_at_k(np.stack([r.ids for r in results]), gt, cfg.top_k)
-    s = results[0].stats
+    rec = recall_at_k(np.stack([r.ids for r in responses]), gt, cfg.top_k)
+    r0 = responses[0]
     print(f"recall@{cfg.top_k} = {rec:.3f}")
-    print(f"query 0: {s.candidates_scanned} candidates scanned on the "
-          f"accelerator tier, {s.h2d_bytes} B host->device (IDs only), "
-          f"{s.ios} SSD I/Os for re-ranking "
-          f"({s.rerank_batches} mini-batches, "
-          f"early_stopped={s.early_stopped})")
+    print(f"query 0 ({r0.latency_s*1e3:.1f} ms, batch of "
+          f"{r0.batch_size}): {r0.stats.candidates_scanned} candidates "
+          f"scanned on the accelerator tier, {r0.stats.h2d_bytes} B "
+          f"host->device (IDs only), {r0.stats.ios} SSD I/Os for "
+          f"re-ranking ({r0.stats.rerank_batches} mini-batches, "
+          f"early_stopped={r0.stats.early_stopped})")
+
+    # the same request type works against the index directly (no service)
+    direct = index.search(SearchRequest(query=queries[0], k=cfg.top_k))
+    assert (direct.ids == r0.ids).all()
 
 
 if __name__ == "__main__":

@@ -27,6 +27,8 @@ def main() -> None:
                     help="submitter threads for the threaded-service demo")
     ap.add_argument("--replicas", type=int, default=2,
                     help="serving replicas behind the JSQ router demo")
+    ap.add_argument("--inflight", type=int, default=64,
+                    help="AsyncANNSClient max in-flight requests")
     ap.add_argument("--policy", default="jsq",
                     choices=("round_robin", "jsq", "deadline"),
                     help="ReplicaRouter routing policy")
@@ -54,32 +56,31 @@ def main() -> None:
     wall = time.time() - t0
     rec = recall_at_k(np.stack([r.ids for r in results]), gt, 10)
 
-    # serving front-end on the same API: per-request futures + p50/p99
+    # serving front-end on the same API: typed requests in, typed
+    # responses out (SearchRequest -> QueryFuture -> SearchResponse)
     from repro.serve.anns_service import BatchingANNSService
+    from repro.serve.client import (ANNSClient, AsyncANNSClient,
+                                    SearchRequest)
     svc = BatchingANNSService(index, max_batch=16, max_wait_s=0.0,
                               scan_window=8, inflight_depth=2)
-    futs = [svc.submit(q) for q in queries]
+    futs = [svc.submit(SearchRequest(query=q, tag=i))
+            for i, q in enumerate(queries)]
     svc.drain()
     assert all(f.done() for f in futs)
     pct = svc.latency_percentiles()
 
     # shared producer harness for the threaded-service and router demos:
-    # N submitter threads, each retrying through backpressure, then a
-    # blocking resolve of every future
+    # N submitter threads behind the sync client (which blocks through
+    # backpressure instead of surfacing BackpressureError)
     import threading
 
-    def drive_producers(submit):
-        from repro.serve.anns_service import BackpressureError
-        futs = [[] for _ in range(args.producers)]
+    def drive_producers(backend):
+        client = ANNSClient(backend)
 
         def produce(i):
-            for q in queries[i::args.producers]:
-                while True:
-                    try:
-                        futs[i].append(submit(q))
-                        break
-                    except BackpressureError:
-                        time.sleep(1e-3)
+            client.search_many(
+                [SearchRequest(query=q)
+                 for q in queries[i::args.producers]], timeout=300)
 
         workers = [threading.Thread(target=produce, args=(i,))
                    for i in range(args.producers)]
@@ -87,9 +88,6 @@ def main() -> None:
             w.start()
         for w in workers:
             w.join()
-        for fs in futs:
-            for f in fs:
-                f.result(timeout=300)
 
     # threaded runtime: a pump thread + out-of-order ticker per replica,
     # traffic from N producer threads (the deployment shape — DESIGN.md
@@ -97,7 +95,7 @@ def main() -> None:
     tsvc = BatchingANNSService(index, max_batch=16, max_wait_s=0.0005,
                                scan_window=8, inflight_depth=2,
                                threaded=True)
-    drive_producers(tsvc.submit)
+    drive_producers(tsvc)
     tsvc.stop()
     tpct = tsvc.latency_percentiles()
 
@@ -111,7 +109,24 @@ def main() -> None:
                            policy=args.policy, threaded=True, max_batch=16,
                            max_wait_s=0.0005, scan_window=8,
                            inflight_depth=2)
-    drive_producers(router.submit)
+    drive_producers(router)
+
+    # the asyncio front door (DESIGN.md §6): ONE event loop drives the
+    # whole workload over the same router — thousands of in-flight
+    # coroutines instead of a thread per producer; backpressure is an
+    # awaited admission, never an exception
+    import asyncio
+
+    async def drive_async():
+        async with AsyncANNSClient(router,
+                                   max_inflight=args.inflight) as client:
+            reqs = [SearchRequest(query=q, tag=i)
+                    for i, q in enumerate(queries)]
+            t0 = time.perf_counter()
+            lat = [r.latency_s async for r in client.search_many(reqs)]
+            return (time.perf_counter() - t0, lat, dict(client.stats))
+
+    awall, alat, astats = asyncio.run(drive_async())
     router.stop()
     rpct = router.latency_percentiles()
     rollup = router.stats_rollup()
@@ -148,6 +163,12 @@ def main() -> None:
         "router_p99_ms": round(rpct["p99"] * 1e3, 2),
         "router_routed": rollup["routed"],
         "router_spills": rollup["spills"],
+        "async_client_wall_ms": round(awall * 1e3, 1),
+        "async_client_p50_ms": round(
+            float(np.percentile(alat, 50)) * 1e3, 2),
+        "async_client_p99_ms": round(
+            float(np.percentile(alat, 99)) * 1e3, 2),
+        "async_client_admission_waits": astats["admission_waits"],
         "router_modelled_qps": {f"r{n}": round(v)
                                 for n, v in rsweep.items()},
         "modelled_qps": {f"t{t}": round(v["qps"]) for t, v in sweep.items()},

@@ -16,6 +16,12 @@
 #                               8 producers across 2 replicas, JSQ
 #                               saturation bypass, sub-mesh scan parity,
 #                               deterministic fault injection
+#   scripts/check.sh async-stress
+#                               unified client API: Backend protocol
+#                               conformance, 4-path id parity, 200
+#                               concurrent asyncio coroutines over a
+#                               2-replica router, awaited-admission
+#                               backpressure, zero leaked futures
 #   scripts/check.sh full       everything, including @slow system tests
 #
 # CHECK_TIMEOUT overrides the guard (seconds).
@@ -29,11 +35,15 @@ case "$MODE" in
     exec timeout "${CHECK_TIMEOUT:-420}" \
       python -m pytest -x -q -p no:cacheprovider \
         tests/test_executor.py tests/test_futures.py tests/test_engine.py \
-        tests/test_updates.py tests/test_threaded.py
+        tests/test_updates.py tests/test_threaded.py tests/test_client.py
     ;;
   threaded-stress)
     exec timeout "${CHECK_TIMEOUT:-300}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_threaded.py
+    ;;
+  async-stress)
+    exec timeout "${CHECK_TIMEOUT:-300}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_client.py
     ;;
   router-stress)
     exec timeout "${CHECK_TIMEOUT:-600}" \
@@ -49,7 +59,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|full]" >&2
     exit 2
     ;;
 esac

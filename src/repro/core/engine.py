@@ -187,6 +187,13 @@ class FusionANNSIndex:
             queries, self.plan(k=k, top_m=top_m, top_n=top_n, **kw),
             overrides=overrides)
 
+    def search(self, request):
+        """Typed single-request serve (DESIGN.md §6): accepts a
+        :class:`~repro.serve.client.SearchRequest` and returns its
+        :class:`~repro.serve.client.SearchResponse` through the shared
+        executor's Backend-protocol path — same ids as :meth:`query`."""
+        return self.executor.submit(request).result()
+
     def query(self, query: np.ndarray, *, k: Optional[int] = None,
               top_m: Optional[int] = None, top_n: Optional[int] = None,
               disable_early_stop: bool = False) -> QueryResult:

@@ -82,7 +82,7 @@ class QueryFuture:
     """
 
     __slots__ = ("_state", "_result", "_exc", "_driver", "_blocking",
-                 "_cond", "tag")
+                 "_cond", "_callbacks", "tag")
 
     def __init__(self, tag: Any = None,
                  driver: Optional[Callable[[], bool]] = None,
@@ -93,6 +93,7 @@ class QueryFuture:
         self._driver = driver
         self._blocking = blocking
         self._cond = threading.Condition()
+        self._callbacks: List[Callable[["QueryFuture"], None]] = []
         self.tag = tag
 
     # -------------------------------------------------------------- queries
@@ -115,7 +116,40 @@ class QueryFuture:
                 return False
             self._state = _CANCELLED
             self._cond.notify_all()
-            return True
+        self._run_callbacks()
+        return True
+
+    # ------------------------------------------------------------ callbacks
+    def add_done_callback(self, fn: Callable[["QueryFuture"], None]) -> None:
+        """Call ``fn(self)`` exactly once when this future resolves — with
+        a result, an exception, or a cancellation.  If the future is
+        already resolved the callback fires immediately, in the calling
+        thread; otherwise it fires in whichever thread resolves the future
+        (producer thread, ticker, or a caller driving the sync harness).
+
+        The registered-vs-fired decision is atomic under the per-future
+        lock, so a callback registered concurrently with resolution never
+        fires twice and never gets lost.  Callbacks run OUTSIDE the lock
+        (an asyncio bridge calling ``loop.call_soon_threadsafe`` from the
+        callback must not deadlock against a caller holding it); a raising
+        callback does not poison the future or its other callbacks."""
+        with self._cond:
+            if self._state == _PENDING:
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except Exception:                  # noqa: BLE001 — callback's problem
+            pass
+
+    def _run_callbacks(self) -> None:
+        with self._cond:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            try:
+                fn(self)
+            except Exception:              # noqa: BLE001 — callback's problem
+                pass
 
     # ----------------------------------------------------------------- wait
     def _await(self, timeout: Optional[float], what: str) -> None:
@@ -172,17 +206,21 @@ class QueryFuture:
     # ------------------------------------------------- producer-side setters
     def _set_result(self, value: Any) -> None:
         with self._cond:
-            if self._state == _PENDING:
-                self._result = value
-                self._state = _DONE
-                self._cond.notify_all()
+            if self._state != _PENDING:
+                return
+            self._result = value
+            self._state = _DONE
+            self._cond.notify_all()
+        self._run_callbacks()
 
     def _set_exception(self, exc: BaseException) -> None:
         with self._cond:
-            if self._state == _PENDING:
-                self._exc = exc
-                self._state = _ERROR
-                self._cond.notify_all()
+            if self._state != _PENDING:
+                return
+            self._exc = exc
+            self._state = _ERROR
+            self._cond.notify_all()
+        self._run_callbacks()
 
 
 class BatchTicket:

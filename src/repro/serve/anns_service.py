@@ -9,9 +9,14 @@ whole window — inter-query candidate dedup (§4.3 applied to the HBM scan),
 the mesh-sharded ADC scan, and per-request latency attribution all come
 from the executor, not from per-path code.
 
-PR-2 redesign (DESIGN.md §3): ``submit()`` returns a
-:class:`~repro.core.futures.QueryFuture` resolving to a :class:`Response`
-(``fut.result().result`` is the :class:`QueryResult`), with
+PR-2 redesign (DESIGN.md §3), re-based on the unified client API in PR 5
+(DESIGN.md §6): ``submit()`` accepts a typed
+:class:`~repro.serve.client.SearchRequest` (or the legacy positional
+form) and returns a :class:`~repro.core.futures.QueryFuture` resolving
+DIRECTLY to a :class:`~repro.serve.client.SearchResponse` —
+``fut.result().ids`` is the answer; the old double-wrapped
+``fut.result().result`` access keeps working one release through the
+response's ``.result`` shim — with
 
 * **admission control** — a bounded queue (``max_queue``); submissions past
   the bound raise :class:`BackpressureError` instead of growing latency.
@@ -52,21 +57,18 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import FusionANNSIndex, QueryResult
-from repro.core.executor import PlanOverrides
+from repro.core.engine import FusionANNSIndex
+# QUERY_STATS_FIELDS' canonical home moved to core.executor (next to the
+# QueryStats schema) in PR 5; re-exported here for existing importers
+from repro.core.executor import QUERY_STATS_FIELDS, PlanOverrides
 from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 FutureError, QueryFuture)
+from repro.serve.client import (SearchResponse, as_request,
+                                response_from_result)
 
 __all__ = ["BatchingANNSService", "Request", "Response",
            "BackpressureError", "DeadlineExceeded", "QueryFuture",
            "QUERY_STATS_FIELDS"]
-
-# additive QueryStats counters accumulated per served response — the single
-# source of truth for the service's ``query_stats`` dict AND the router's
-# cross-replica rollup (serve/router.py), so the two can't drift
-QUERY_STATS_FIELDS = ("ios", "pages_requested", "buffer_hits", "ssd_bytes",
-                      "h2d_bytes", "candidates_scanned", "rerank_batches",
-                      "rerank_scored")
 
 
 @dataclasses.dataclass
@@ -78,15 +80,13 @@ class Request:
     top_n: Optional[int] = None
     deadline: Optional[float] = None      # absolute perf_counter time
     future: Optional[QueryFuture] = None
+    tag: object = None                    # caller correlation handle
 
 
-@dataclasses.dataclass
-class Response:
-    rid: int
-    result: QueryResult
-    t_queue_s: float          # time spent waiting for the batch window
-    t_serve_s: float          # batch execution time (shared)
-    batch_size: int
+# the pre-PR-5 per-request response type; now an alias of the unified
+# SearchResponse (same attribute surface plus ids/dists/stats/latency_s —
+# the old ``.result`` access works through the compat property)
+Response = SearchResponse
 
 
 class BatchingANNSService:
@@ -127,6 +127,10 @@ class BatchingANNSService:
         # enqueue -> resolve per request; bounded so a long-lived replica's
         # percentile window stays O(1) memory (sliding, newest-wins)
         self.latencies_s: Deque[float] = deque(maxlen=8192)
+        # responses served since the last drain() — the Backend-protocol
+        # drain contract; bounded like the latency window so a long-lived
+        # replica that is never drained stays O(1) memory
+        self._undrained: Deque[SearchResponse] = deque(maxlen=8192)
         # per-batch executor event logs (the out-of-order retirement probe)
         self.ticket_events: Deque[List[Tuple[str, int]]] = deque(maxlen=256)
         # threaded runtime
@@ -186,15 +190,23 @@ class BatchingANNSService:
         self.stop()
 
     # --------------------------------------------------------------- submit
-    def submit(self, query: np.ndarray, k: Optional[int] = None, *,
+    def submit(self, query, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
-               deadline_s: Optional[float] = None) -> QueryFuture:
-        """Enqueue one request; returns its future immediately.
+               deadline_s: Optional[float] = None,
+               tag=None) -> QueryFuture:
+        """Enqueue one request; returns its future immediately, resolving
+        to a :class:`~repro.serve.client.SearchResponse`.  ``query`` may be
+        a typed :class:`~repro.serve.client.SearchRequest` (the Backend-
+        protocol form) or a raw vector with the legacy kwargs.
 
         Raises :class:`BackpressureError` when the queue holds
         ``max_queue`` LIVE requests — cancelled requests are compacted out
         before the admission decision, so a cancel burst frees its slots
         for fresh submissions."""
+        req = as_request(query, k, top_n=top_n, deadline_s=deadline_s,
+                         tag=tag)
+        query, k, top_n = req.query, req.k, req.top_n
+        deadline_s, tag = req.deadline_s, req.tag
         with self._cv:
             if len(self._queue) >= self.max_queue:
                 self._compact_locked()
@@ -211,13 +223,13 @@ class BatchingANNSService:
             # we already observe the shutdown and fall back to the caller-
             # driven future, which pump(force=True) from result() can serve
             threaded = self._running
-            fut = QueryFuture(tag=rid,
+            fut = QueryFuture(tag=rid if tag is None else tag,
                               driver=None if threaded else self._drive,
-                              blocking=threaded)  # fut.tag == rid
+                              blocking=threaded)  # fut.tag == rid (no tag)
             self._queue.append(Request(
                 rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
                 deadline=None if deadline_s is None else now + deadline_s,
-                future=fut))
+                future=fut, tag=tag))
             self._cv.notify_all()
         return fut
 
@@ -389,7 +401,7 @@ class BatchingANNSService:
         t_serve = time.perf_counter() - t0
         # per-request attribution: shared wall-clock + the executor's
         # per-query stage timings (res.stats.t_graph/t_scan/t_rerank)
-        responses: List[Response] = []
+        responses: List[SearchResponse] = []
         t_done = time.perf_counter()
         with self._lock:
             self.stats["batches"] += 1
@@ -406,34 +418,43 @@ class BatchingANNSService:
                     if r.future is not None:
                         r.future._set_exception(exc)
                     continue
-                resp = Response(rid=r.rid, result=f.result(),
-                                t_queue_s=t0 - r.t_enqueue,
-                                t_serve_s=t_serve, batch_size=len(batch))
+                res = f.result()
+                resp = response_from_result(
+                    res, latency_s=t_done - r.t_enqueue, rid=r.rid,
+                    tag=r.tag, t_queue_s=t0 - r.t_enqueue,
+                    t_serve_s=t_serve, batch_size=len(batch))
                 for field in QUERY_STATS_FIELDS:
-                    self.query_stats[field] += getattr(resp.result.stats,
-                                                       field)
+                    self.query_stats[field] += getattr(res.stats, field)
                 self.query_stats["served"] += 1
                 if r.future is not None:
                     r.future._set_result(resp)
                 self.latencies_s.append(t_done - r.t_enqueue)
+                self._undrained.append(resp)
                 responses.append(resp)
         return responses
 
-    def drain(self) -> List[Response]:
-        """Synchronous harness: pump until the queue is empty.  Threaded
-        harness: block until the pump thread has served everything that is
-        currently queued or in flight (responses go to their futures, so
-        the return value is empty)."""
+    def drain(self) -> List[SearchResponse]:
+        """Serve everything currently queued or in flight, then return the
+        responses served since the last drain — the SAME objects the
+        per-request futures resolve to (the unified Backend drain
+        contract; pre-PR-5 the threaded harness returned an empty list).
+        Synchronous harness: pumps inline; threaded harness: blocks until
+        the pump thread goes idle."""
         if self.threaded:
             while True:
                 with self._lock:
                     idle = not self._queue and self._serving == 0
                 if idle:
-                    return []
+                    return self._pop_undrained()
                 time.sleep(1e-3)
-        out: List[Response] = []
         while self._queue:
-            out.extend(self.pump(force=True))
+            self.pump(force=True)
+        return self._pop_undrained()
+
+    def _pop_undrained(self) -> List[SearchResponse]:
+        with self._lock:
+            out = list(self._undrained)
+            self._undrained.clear()
         return out
 
     # ---------------------------------------------------------------- stats
@@ -457,3 +478,14 @@ class BatchingANNSService:
         return {"p50": float(np.percentile(lat, 50)),
                 "p99": float(np.percentile(lat, 99)),
                 "n": len(lat)}
+
+    def stats_rollup(self) -> Dict[str, object]:
+        """Single-replica rollup in the router's shape (the Backend
+        protocol's uniform reporting surface): service counters plus the
+        summed ``QueryStats`` of every served response."""
+        with self._lock:
+            out: Dict[str, object] = dict(self.stats)
+            out["served"] = self.query_stats["served"]
+            out["query_stats"] = {f: self.query_stats[f]
+                                  for f in QUERY_STATS_FIELDS}
+        return out

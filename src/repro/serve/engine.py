@@ -76,21 +76,6 @@ class LMServer:
                 "wall_s": dt}
 
 
-class _RoutedFuture:
-    """Adapter: a router/service future resolving to a serving
-    ``Response``, exposed with the executor-future surface
-    (``result() -> QueryResult``)."""
-
-    def __init__(self, fut):
-        self._fut = fut
-
-    def done(self) -> bool:
-        return self._fut.done()
-
-    def result(self, timeout: Optional[float] = None):
-        return self._fut.result(timeout).result
-
-
 class RAGPipeline:
     """Retrieval-augmented generation: FusionANNS retrieves the top-k
     context vectors for the query embedding; their ids become context
@@ -104,9 +89,13 @@ class RAGPipeline:
 
     ``router=`` swaps the retrieval tier for a
     :class:`~repro.serve.router.ReplicaRouter` (DESIGN.md §5): each
-    retrieval is routed to one of N serving replicas and the per-request
-    future resolves to that replica's response — same ids, the replicas'
-    pump threads make progress instead of ``ticket.poll()``."""
+    retrieval is routed via a typed
+    :class:`~repro.serve.client.SearchRequest` to one of N serving
+    replicas, and the per-request future resolves to a
+    :class:`~repro.serve.client.SearchResponse` — same ``ids``/``stats``
+    surface as an executor :class:`~repro.core.engine.QueryResult`, so no
+    adapter shim is needed (PR 5 deleted the routed-future wrapper); the
+    replicas' pump threads make progress instead of ``ticket.poll()``."""
 
     def __init__(self, anns_index, lm_server: LMServer,
                  embed_fn: Optional[Callable] = None, router=None):
@@ -118,14 +107,16 @@ class RAGPipeline:
     def _retrieve(self, query_vecs: np.ndarray, k: int,
                   inflight_depth: int = 2):
         """Submit every query; returns ``(futures, poll)`` where each
-        future's ``.result()`` is a :class:`~repro.core.engine.QueryResult`
-        (router futures resolve to a serving ``Response``; unwrapped
-        lazily so generation still overlaps the in-flight retrievals) and
-        ``poll()`` opportunistically retires landed scan windows."""
+        future resolves to something with the ``ids``/``dists``/``stats``
+        surface — a :class:`~repro.core.engine.QueryResult` from the
+        executor ticket, or a :class:`~repro.serve.client.SearchResponse`
+        from a router — and ``poll()`` opportunistically retires landed
+        scan windows."""
         q = np.atleast_2d(np.asarray(query_vecs, np.float32))
         if self.router is not None:
-            return ([_RoutedFuture(self.router.submit(v, k=k)) for v in q],
-                    lambda: None)
+            from repro.serve.client import SearchRequest
+            return ([self.router.submit(SearchRequest(query=v, k=k))
+                     for v in q], lambda: None)
         ticket = self.index.submit(q, k=k, window=1,
                                    inflight_depth=inflight_depth)
         return list(ticket.futures), ticket.poll

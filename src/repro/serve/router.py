@@ -57,9 +57,10 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.engine import FusionANNSIndex
+from repro.core.executor import QUERY_STATS_FIELDS
 from repro.core.futures import BackpressureError, QueryFuture
-from repro.serve.anns_service import (QUERY_STATS_FIELDS,
-                                      BatchingANNSService)
+from repro.serve.anns_service import BatchingANNSService
+from repro.serve.client import SearchResponse, as_request
 
 __all__ = ["ReplicaRouter", "POLICIES"]
 
@@ -89,6 +90,9 @@ class ReplicaRouter:
             BatchingANNSService(index, executor=index.make_executor(m),
                                 threaded=threaded, **svc_kw)
             for m in self.meshes]
+        # mirrors the replicas' harness (clients read this to pick their
+        # backpressure strategy: sleep-retry vs pump-on-behalf)
+        self.threaded = threaded
         self._lock = threading.Lock()
         self._rr = 0                       # round-robin cursor
         self.stats: Dict[str, object] = {
@@ -99,6 +103,7 @@ class ReplicaRouter:
     def start(self) -> "ReplicaRouter":
         for r in self.replicas:
             r.start()
+        self.threaded = True
         return self
 
     def stop(self) -> "ReplicaRouter":
@@ -109,6 +114,7 @@ class ReplicaRouter:
             t.start()
         for t in ts:
             t.join()
+        self.threaded = False
         return self
 
     def __enter__(self) -> "ReplicaRouter":
@@ -145,20 +151,24 @@ class ReplicaRouter:
         # least-loaded first (the documented spill order)
         return [start] + [i for i in by_load if i != start], None
 
-    def submit(self, query: np.ndarray, k: Optional[int] = None, *,
+    def submit(self, query, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
-               deadline_s: Optional[float] = None) -> QueryFuture:
+               deadline_s: Optional[float] = None,
+               tag=None) -> QueryFuture:
         """Route one request; returns the serving replica's future (same
-        surface as ``BatchingANNSService.submit``).  Tries the policy's
-        choice first, spills across the remaining replicas on
+        surface as ``BatchingANNSService.submit`` — ``query`` may be a
+        typed :class:`~repro.serve.client.SearchRequest`, and the future
+        resolves to a :class:`~repro.serve.client.SearchResponse`).  Tries
+        the policy's choice first, spills across the remaining replicas on
         backpressure, and raises :class:`BackpressureError` only when
         EVERY replica's queue is full."""
-        order, dl_target = self._route_order(deadline_s)
+        req = as_request(query, k, top_n=top_n, deadline_s=deadline_s,
+                         tag=tag)
+        order, dl_target = self._route_order(req.deadline_s)
         last: Optional[BackpressureError] = None
         for pos, i in enumerate(order):
             try:
-                fut = self.replicas[i].submit(query, k, top_n=top_n,
-                                              deadline_s=deadline_s)
+                fut = self.replicas[i].submit(req)
             except BackpressureError as exc:
                 last = exc
                 continue
@@ -177,10 +187,15 @@ class ReplicaRouter:
         raise BackpressureError(
             f"all {len(self.replicas)} replicas backpressured") from last
 
-    def drain(self) -> None:
-        """Serve everything currently queued on every replica."""
+    def drain(self) -> List["SearchResponse"]:
+        """Serve everything currently queued on every replica; returns the
+        responses served since the last drain, across ALL replicas (the
+        unified Backend drain contract — pre-PR-5 this returned None while
+        the service returned its responses)."""
+        out: List[SearchResponse] = []
         for r in self.replicas:
-            r.drain()
+            out.extend(r.drain())
+        return out
 
     # ----------------------------------------------------------- aggregates
     def live_load(self) -> int:

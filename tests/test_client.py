@@ -1,0 +1,414 @@
+"""One serving API (ISSUE 5 acceptance): typed ``SearchRequest``/
+``SearchResponse``, the ``Backend`` protocol, and the sync/async front
+doors.
+
+Contract under test:
+* executor, batching service, and replica router all implement the
+  ``Backend`` protocol — typed ``submit()`` futures resolving directly to
+  ``SearchResponse``, ``drain()`` returning the served responses on every
+  backend (the pre-PR-5 router returned ``None``), the shared
+  ``stats_rollup()`` shape;
+* bit-identical ids across all four public paths for the same queries:
+  ``FusionANNSIndex.query``, the sync ``ANNSClient`` over the service,
+  the ``AsyncANNSClient`` over the router, and legacy ``executor.run()``;
+* the asyncio front door AWAITS admission instead of raising
+  ``BackpressureError``, maps deadlines to asyncio timeouts, streams
+  ``search_many()`` results in completion order, and leaks zero futures
+  across ``aclose()`` — including under ≥200 concurrent coroutines over a
+  2-replica router.
+"""
+
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.futures import (BackpressureError, DeadlineExceeded,
+                                QueryFuture)
+from repro.serve.anns_service import BatchingANNSService, Response
+from repro.serve.client import (ANNSClient, AsyncANNSClient, Backend,
+                                SearchRequest, SearchResponse, as_request)
+from repro.serve.router import ReplicaRouter
+
+
+@pytest.fixture(scope="module")
+def ref_ids(anns_bundle):
+    """index.query ids per held-out query — the parity baseline."""
+    return [anns_bundle.index.query(q).ids for q in anns_bundle.queries]
+
+
+# ------------------------------------------------------------ typed surface
+
+def test_backend_protocol_conformance(anns_bundle):
+    """Executor, service, and router all satisfy the runtime-checkable
+    protocol AND the behavioural contract: typed submit -> SearchResponse
+    future, drain() -> served responses."""
+    b = anns_bundle
+    backends = {
+        "executor": b.index.executor,
+        "service": BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0),
+        "router": ReplicaRouter(b.index, n_replicas=2, threaded=False,
+                                max_batch=4, max_wait_s=0.0),
+    }
+    for name, backend in backends.items():
+        assert isinstance(backend, Backend), name
+        fut = backend.submit(SearchRequest(query=b.queries[0], tag="t0"))
+        assert isinstance(fut, QueryFuture), name
+        drained = backend.drain()
+        assert isinstance(drained, list) and len(drained) == 1, name
+        assert isinstance(drained[0], SearchResponse), name
+        resp = fut.result()
+        assert resp is drained[0], name    # future and drain agree
+        np.testing.assert_array_equal(resp.ids, b.index.query(
+            b.queries[0]).ids, err_msg=name)
+        roll = backend.stats_rollup()
+        assert roll["served"] >= 1, name
+        assert roll["query_stats"]["candidates_scanned"] > 0, name
+        pct = backend.latency_percentiles()
+        assert pct["n"] >= 1 and pct["p50"] > 0, name
+        assert backend.live_load() == 0, name
+        backend.stop()
+
+
+def test_search_request_response_types(anns_bundle):
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0)
+    req = SearchRequest(query=b.queries[0], k=5, tag="abc")
+    fut = svc.submit(req)
+    assert fut.tag == "abc"                # tag rides to the future
+    resp = fut.result()
+    assert isinstance(resp, SearchResponse)
+    assert resp.tag == "abc" and resp.rid == 0
+    assert len(resp.ids) == 5 and resp.latency_s > 0
+    assert resp.t_serve_s > 0 and resp.batch_size == 1
+    np.testing.assert_array_equal(resp.ids, b.index.query(
+        b.queries[0], k=5).ids)
+    # migration shims: the legacy double-wrapped access and the legacy
+    # Response name both keep working one release
+    np.testing.assert_array_equal(resp.result.ids, resp.ids)
+    assert Response is SearchResponse
+    # as_request normalizes the legacy positional form, and passes a
+    # ready-made request through untouched
+    legacy = as_request(b.queries[0], 5, tag="abc")
+    assert legacy.k == 5 and legacy.tag == "abc"
+    assert as_request(req) is req
+    # explicit kwargs riding along with a ready-made request OVERRIDE its
+    # fields (fresh request, original untouched) — never silently dropped
+    riding = as_request(req, 3, deadline_s=0.5)
+    assert riding is not req and riding.k == 3 and riding.deadline_s == 0.5
+    assert riding.tag == "abc" and req.k == 5
+
+
+def test_index_search_typed_entrypoint(anns_bundle):
+    b = anns_bundle
+    resp = b.index.search(SearchRequest(query=b.queries[1], k=7))
+    assert isinstance(resp, SearchResponse) and len(resp.ids) == 7
+    np.testing.assert_array_equal(resp.ids,
+                                  b.index.query(b.queries[1], k=7).ids)
+
+
+# --------------------------------------------------------- executor backend
+
+def test_executor_backend_async_and_cancel(anns_bundle):
+    """The executor's request path is a real submission: the future is
+    pending on return (scan in flight), result() drives retirement, and
+    cancelling the client-facing future skips the query's re-rank."""
+    b = anns_bundle
+    ex = b.index.executor
+    fut = ex.submit(SearchRequest(query=b.queries[2], tag="x"))
+    assert not fut.done() and ex.live_load() == 1
+    np.testing.assert_array_equal(fut.result().ids,
+                                  b.index.query(b.queries[2]).ids)
+    victim = ex.submit(SearchRequest(query=b.queries[3]))
+    assert victim.cancel() and victim.cancelled()
+    ex.drain()                             # retires the cancelled ticket
+    assert ex.live_load() == 0
+
+
+# ----------------------------------------------------------- 4-path parity
+
+def test_four_path_id_parity(anns_bundle, ref_ids):
+    """Bit-identical ids across index.query, legacy executor.run(), the
+    sync ANNSClient over the service, and the AsyncANNSClient over a
+    2-replica router."""
+    b = anns_bundle
+    # path 2: legacy executor.run (per-query windows, like index.query)
+    run_res = b.index.executor.run(b.queries, b.index.plan(window=1))
+    for ref, rr in zip(ref_ids, run_res):
+        np.testing.assert_array_equal(ref, rr.ids)
+    # path 3: sync client over the (sync-harness) batching service
+    client = ANNSClient(BatchingANNSService(b.index, max_batch=8,
+                                            max_wait_s=0.0))
+    resps = client.search_many(
+        [SearchRequest(query=q, tag=i) for i, q in enumerate(b.queries)])
+    for ref, resp in zip(ref_ids, resps):
+        np.testing.assert_array_equal(ref, resp.ids)
+    # path 4: asyncio front door over a threaded 2-replica router
+    router = ReplicaRouter(b.index, n_replicas=2, policy="jsq",
+                           threaded=True, max_batch=8, max_wait_s=0.0005)
+
+    async def drive():
+        async with AsyncANNSClient(router, max_inflight=32) as ac:
+            reqs = [SearchRequest(query=q, tag=i)
+                    for i, q in enumerate(b.queries)]
+            return {r.tag: r.ids async for r in ac.search_many(reqs)}
+
+    try:
+        by_tag = asyncio.run(drive())
+    finally:
+        router.stop()
+    assert len(by_tag) == len(b.queries)
+    for i, ref in enumerate(ref_ids):
+        np.testing.assert_array_equal(ref, by_tag[i])
+
+
+# ------------------------------------------------------------ asyncio doors
+
+def test_async_stress_200_coroutines(anns_bundle, ref_ids):
+    """≥200 concurrent search() coroutines over a 2-replica router:
+    bit-identical ids vs run(), zero leaked futures on aclose()."""
+    b = anns_bundle
+    n_req = 200
+    router = ReplicaRouter(b.index, n_replicas=2, policy="jsq",
+                           threaded=True, max_batch=16, max_wait_s=0.0005,
+                           scan_window=8, inflight_depth=2, max_queue=64)
+    client = AsyncANNSClient(router, max_inflight=128)
+
+    async def one(i):
+        return await client.search(SearchRequest(
+            query=b.queries[i % len(b.queries)], tag=i))
+
+    async def drive():
+        out = await asyncio.gather(*[one(i) for i in range(n_req)])
+        await client.aclose()
+        return out
+
+    try:
+        resps = asyncio.run(drive())
+    finally:
+        router.stop()
+    assert len(resps) == n_req
+    for resp in resps:
+        np.testing.assert_array_equal(resp.ids,
+                                      ref_ids[resp.tag % len(b.queries)])
+    # zero leaks: nothing pending anywhere after aclose()
+    assert client.stats["completed"] == n_req
+    assert not client._inflight
+    assert router.live_load() == 0
+    roll = router.stats_rollup()
+    assert roll["served"] == n_req
+    assert sum(roll["routed"]) == n_req
+
+
+class _StubBackend:
+    """Minimal Backend whose futures resolve when the test says so —
+    deterministic probe for the bridge/ordering/deadline contracts (and
+    proof that ANY protocol implementation composes with the client)."""
+
+    def __init__(self):
+        self.futs = {}
+
+    def submit(self, request: SearchRequest) -> QueryFuture:
+        fut = QueryFuture(tag=request.tag, blocking=True)
+        self.futs[request.tag] = fut
+        return fut
+
+    def resolve(self, tag):
+        self.futs[tag]._set_result(SearchResponse(
+            ids=np.array([tag]), dists=np.zeros(1), stats=None, tag=tag))
+
+    def drain(self):
+        return []
+
+    def stop(self):
+        return self
+
+    def live_load(self):
+        return sum(1 for f in self.futs.values() if not f.done())
+
+    def latency_percentiles(self):
+        return {"p50": 0.0, "p99": 0.0, "n": 0}
+
+    def stats_rollup(self):
+        return {"served": 0, "query_stats": {}}
+
+
+def test_as_completed_streaming_order():
+    """search_many yields in COMPLETION order, not submission order."""
+    stub = _StubBackend()
+    assert isinstance(stub, Backend)
+    completion = [2, 0, 1]
+
+    async def drive():
+        client = AsyncANNSClient(stub, max_inflight=8)
+
+        async def resolver():
+            while len(stub.futs) < 3:
+                await asyncio.sleep(0.001)
+            for tag in completion:
+                stub.resolve(tag)
+                await asyncio.sleep(0.02)  # let the stream consume it
+
+        task = asyncio.ensure_future(resolver())
+        reqs = [SearchRequest(query=np.zeros(4, np.float32), tag=i)
+                for i in range(3)]
+        got = [r.tag async for r in client.search_many(reqs)]
+        await task
+        await client.aclose()
+        return got
+
+    assert asyncio.run(drive()) == completion
+
+
+def test_async_deadline_maps_to_asyncio_timeout():
+    """A request whose backend never answers times out on the LOOP side:
+    DeadlineExceeded (not asyncio.TimeoutError), backend future
+    cancelled — so loop-side and rerank-side expiry look identical."""
+    stub = _StubBackend()
+
+    async def drive():
+        client = AsyncANNSClient(stub)
+        with pytest.raises(DeadlineExceeded):
+            await client.search(SearchRequest(
+                query=np.zeros(4, np.float32), deadline_s=0.05, tag="slow"))
+        assert client.stats["deadline_timeouts"] == 1
+        await client.aclose()
+
+    asyncio.run(drive())
+    assert stub.futs["slow"].cancelled()   # no orphaned backend work
+
+
+def test_async_deadline_bounds_admission_wait():
+    """deadline_s counts admission time too: a request that can never be
+    admitted (every submit backpressured) still expires at its deadline
+    instead of waiting indefinitely for a slot."""
+
+    class _FullBackend(_StubBackend):
+        def submit(self, request):
+            raise BackpressureError("always full")
+
+    stub = _FullBackend()
+
+    async def drive():
+        client = AsyncANNSClient(stub, admission_poll_s=1e-3)
+        t0 = time.perf_counter()
+        with pytest.raises(DeadlineExceeded):
+            await client.search(SearchRequest(
+                query=np.zeros(4, np.float32), deadline_s=0.05))
+        assert time.perf_counter() - t0 < 2.0   # not the admission forever
+        assert client.stats["admission_waits"] > 0
+        await client.aclose()
+
+    asyncio.run(drive())
+
+
+def test_search_many_consumer_break_cancels_backend():
+    """A consumer bailing out of search_many mid-stream must not orphan
+    admitted backend work: every already-submitted backend future is
+    cancelled (or resolved) — nothing stays pending past the stream."""
+    stub = _StubBackend()
+
+    async def drive():
+        client = AsyncANNSClient(stub, max_inflight=8)
+
+        async def resolver():
+            while not stub.futs:
+                await asyncio.sleep(0.001)
+            stub.resolve(0)
+
+        task = asyncio.ensure_future(resolver())
+        reqs = [SearchRequest(query=np.zeros(4, np.float32), tag=i)
+                for i in range(3)]
+        async for _ in client.search_many(reqs):
+            break                          # bail after the first response
+        await task
+        await client.aclose()
+
+    asyncio.run(drive())
+    assert stub.futs                       # something was admitted
+    assert all(f.done() for f in stub.futs.values())
+    assert stub.live_load() == 0
+
+
+def test_async_awaits_admission_instead_of_raising(anns_bundle, ref_ids):
+    """Backpressure never reaches an async caller: a full replica queue
+    makes the coroutine WAIT for admission, and every request is still
+    served exactly once."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, threaded=True, max_batch=4,
+                              max_wait_s=0.0005, max_queue=1)
+    client = AsyncANNSClient(svc, max_inflight=32)
+    n_req = 24
+
+    async def drive():
+        resps = await asyncio.gather(*[
+            client.search(SearchRequest(
+                query=b.queries[i % len(b.queries)], tag=i))
+            for i in range(n_req)])
+        await client.aclose()
+        return resps
+
+    try:
+        resps = asyncio.run(drive())
+    finally:
+        svc.stop()
+    for resp in resps:
+        np.testing.assert_array_equal(resp.ids,
+                                      ref_ids[resp.tag % len(b.queries)])
+    # the queue DID reject submissions (backpressure engaged) ...
+    assert svc.stats["rejected"] > 0
+    # ... and the client absorbed every rejection as an awaited retry
+    assert client.stats["admission_waits"] > 0
+    assert client.stats["completed"] == n_req
+
+
+def test_sync_client_blocks_through_admission(anns_bundle, ref_ids):
+    """The sync front door has the same guarantee: search() blocks
+    through a full queue instead of surfacing BackpressureError."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=2, max_wait_s=0.0,
+                              max_queue=1)
+    client = ANNSClient(svc)
+    resps = client.search_many(
+        [SearchRequest(query=q, tag=i) for i, q in enumerate(b.queries[:6])])
+    for ref, resp in zip(ref_ids, resps):
+        np.testing.assert_array_equal(ref, resp.ids)
+    assert client.stats["admission_waits"] > 0
+    assert svc.stats["rejected"] > 0
+
+
+def test_async_client_over_sync_backend(anns_bundle, ref_ids):
+    """Any front end composes with any backend: the asyncio door over the
+    caller-driven sync harness (no pump thread) — futures are driven from
+    the loop's thread pool, serialized for the single-driver harness."""
+    b = anns_bundle
+    svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0)
+
+    async def drive():
+        async with AsyncANNSClient(svc, max_inflight=8) as client:
+            reqs = [SearchRequest(query=q, tag=i)
+                    for i, q in enumerate(b.queries[:8])]
+            return {r.tag: r.ids async for r in client.search_many(reqs)}
+
+    by_tag = asyncio.run(drive())
+    for i in range(8):
+        np.testing.assert_array_equal(ref_ids[i], by_tag[i])
+
+
+def test_router_drain_returns_responses(anns_bundle):
+    """Satellite bugfix: ReplicaRouter.drain() returns the served
+    responses (it returned None pre-PR-5), matching the service."""
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, threaded=False,
+                           max_batch=4, max_wait_s=0.0)
+    futs = [router.submit(SearchRequest(query=q, tag=i))
+            for i, q in enumerate(b.queries[:6])]
+    drained = router.drain()
+    assert len(drained) == 6
+    assert all(isinstance(r, SearchResponse) for r in drained)
+    by_tag = {r.tag: r for r in drained}
+    for f in futs:
+        assert f.result() is by_tag[f.tag]  # same objects, both surfaces
+    assert router.drain() == []            # nothing new since last drain
+    router.stop()

@@ -190,6 +190,46 @@ def test_plan_override_merge(anns_bundle):
     assert base.override(inflight_depth=3).effective_depth() == 3
 
 
+# ------------------------------------------------------- done callbacks
+
+def test_add_done_callback_fires_once_per_outcome():
+    """PR-5 satellite: exactly-once callbacks on every terminal state,
+    immediate fire when already resolved (the asyncio bridge's contract)."""
+    calls = []
+    fut = QueryFuture()
+    fut.add_done_callback(lambda f: calls.append(("pre", f.result())))
+    assert calls == []                    # pending: registered, not fired
+    fut._set_result(41)
+    assert calls == [("pre", 41)]
+    fut._set_result(99)                   # resolution is one-way
+    assert fut.result() == 41 and calls == [("pre", 41)]
+    fut.add_done_callback(lambda f: calls.append(("post", f.result())))
+    assert calls == [("pre", 41), ("post", 41)]   # immediate fire
+
+    cancelled = QueryFuture()
+    cancelled.add_done_callback(lambda f: calls.append(("c", f.cancelled())))
+    assert cancelled.cancel() and calls[-1] == ("c", True)
+
+    failed = QueryFuture()
+    failed.add_done_callback(lambda f: calls.append(("e", f.exception())))
+    boom = FutureError("boom")
+    failed._set_exception(boom)
+    assert calls[-1] == ("e", boom)
+
+
+def test_add_done_callback_raising_does_not_poison():
+    """A raising callback neither breaks the future nor starves later
+    callbacks."""
+    calls = []
+    fut = QueryFuture()
+    fut.add_done_callback(lambda f: 1 / 0)
+    fut.add_done_callback(lambda f: calls.append(f.result()))
+    fut._set_result(7)
+    assert calls == [7] and fut.result() == 7
+    fut.add_done_callback(lambda f: 1 / 0)    # immediate-fire path too
+    assert fut.result() == 7
+
+
 # ---------------------------------------------------------------- service
 
 def test_service_per_request_k_regression(anns_bundle):
