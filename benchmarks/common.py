@@ -19,6 +19,7 @@ from repro.core.baselines import (DiskAnnLike, HIGpu, HIPq, RummyLike,
                                   SpannLike)
 from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
 from repro.core.perf_model import DeviceModel, demand_from_stats
+from repro.serve.client import SearchRequest
 from repro.data.synthetic import clustered_vectors
 
 BENCH_N = int(os.environ.get("REPRO_BENCH_N", 20000))
@@ -101,7 +102,7 @@ def service_latency(index: FusionANNSIndex, queries, **svc_kw) -> Dict:
     for q in queries:
         while True:
             try:
-                futs.append(svc.submit(q))
+                futs.append(svc.submit(SearchRequest(query=q)))
                 break
             except BackpressureError:
                 svc.pump(force=True)
@@ -126,9 +127,10 @@ def drive_producers(submit, queries, producers: int,
 
     def produce(i):
         for q in chunks[i]:
+            req = SearchRequest(query=q)
             while True:
                 try:
-                    futs[i].append(submit(q))
+                    futs[i].append(submit(req))
                     break
                 except BackpressureError:
                     time.sleep(1e-3)

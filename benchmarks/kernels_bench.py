@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.l2dist import l2_distances
-from repro.kernels.pq_adc import pq_adc, pq_adc_topk, pq_adc_topk_batch
+from repro.kernels.pq_adc import (pq_adc, pq_adc_fused_topk, pq_adc_topk,
+                                  pq_adc_topk_batch)
 
 
 def _time(fn, *args, iters=20):
@@ -35,19 +36,63 @@ def run():
                    codes, lut)
         rows.append({"name": f"kern.pq_adc_topk.n{n}", "us_per_call": us,
                      "derived": "fused scan+topk (jnp path)"})
-    # the executor's windowed scan: B queries amortise one pass over the
-    # codes; the mask is the per-query candidate membership (stage ⑤)
-    n, m, b = 65536, 32, 8
-    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
-    luts = jnp.asarray(rng.random((b, m, 256)), jnp.float32)
-    mask = jnp.asarray(rng.random((b, n)) < 0.1)
-    us = _time(lambda c, l, mk: pq_adc_topk_batch(c, l, 256, mask=mk,
-                                                  use_kernel=False),
-               codes, luts, mask)
-    rows.append({"name": f"kern.pq_adc_topk_batch.b{b}.n{n}",
-                 "us_per_call": us,
-                 "derived": f"lookups_per_s={b * n * m / (us / 1e6):.2e} "
-                            "(executor window scan; masked)"})
+    # the executor's windowed scan at fig9's default shapes: B queries
+    # amortise one pass over the codes; the mask is the per-query
+    # candidate membership (stage ⑤).  The fused row runs the SAME query
+    # set through the ISSUE-6 LUT→ADC→top-k pipeline (per-query candidate
+    # row lists instead of a dense mask) and must return bit-identical
+    # top-k (dist, id) pairs at ≥ 2x the unfused wall-clock.
+    m, b, topk = 32, 8, 256
+    dsub = 4
+    cb = jnp.asarray(rng.standard_normal((m, 256, dsub)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((b, m * dsub)), jnp.float32)
+    from repro.kernels.pq_adc import build_luts_ref
+    luts = jax.jit(build_luts_ref)(cb, queries)
+    for n in (65536, 262144):
+        codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+        mask_np = rng.random((b, n)) < 0.1
+        mask = jnp.asarray(mask_np)
+        s = 1 << int(np.ceil(np.log2(mask_np.sum(1).max())))
+        rows_np = np.full((b, s), -1, np.int32)
+        for qi in range(b):
+            ids_q = np.where(mask_np[qi])[0]          # ascending
+            rows_np[qi, :len(ids_q)] = ids_q
+        cand_rows = jnp.asarray(rows_np)
+        us_unfused = _time(
+            lambda c, l, mk: pq_adc_topk_batch(c, l, topk, mask=mk,
+                                               use_kernel=False),
+            codes, luts, mask)
+        rows.append({"name": f"kern.pq_adc_topk_batch.b{b}.n{n}",
+                     "us_per_call": us_unfused,
+                     "derived": f"lookups_per_s="
+                                f"{b * n * m / (us_unfused / 1e6):.2e} "
+                                "(executor window scan; masked)"})
+        us_fused = _time(
+            lambda c, q, k, r: pq_adc_fused_topk(c, q, k, r, topk,
+                                                 use_kernel=False),
+            codes, queries, cb, cand_rows)
+        # acceptance gate: bit-identical top-k (dist, id) pairs at fp32
+        v_u, i_u = pq_adc_topk_batch(codes, luts, topk, mask=mask,
+                                     use_kernel=False)
+        v_f, i_f = pq_adc_fused_topk(codes, queries, cb, cand_rows, topk,
+                                     use_kernel=False)
+        fin = np.isfinite(np.asarray(v_u))
+        assert np.array_equal(np.asarray(v_f)[fin], np.asarray(v_u)[fin]) \
+            and np.array_equal(np.asarray(i_f)[fin], np.asarray(i_u)[fin]), \
+            f"fused/unfused top-k diverged at n={n}"
+        rows.append({"name": f"kern.pq_adc_fused.b{b}.n{n}",
+                     "us_per_call": us_fused,
+                     "derived": f"speedup_vs_unfused="
+                                f"{us_unfused / us_fused:.2f}x "
+                                "(bit-identical top-k)"})
+        us_int8 = _time(
+            lambda c, q, k, r: pq_adc_fused_topk(c, q, k, r, topk,
+                                                 use_kernel=False,
+                                                 lut_int8=True),
+            codes, queries, cb, cand_rows)
+        rows.append({"name": f"kern.pq_adc_fused_int8.b{b}.n{n}",
+                     "us_per_call": us_int8,
+                     "derived": "fig10 int8-LUT accuracy level"})
     q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
     us = _time(lambda a, b: l2_distances(a, b, use_kernel=False), q, v)

@@ -22,6 +22,10 @@
 #                               concurrent asyncio coroutines over a
 #                               2-replica router, awaited-admission
 #                               backpressure, zero leaked futures
+#   scripts/check.sh kernels    kernel parity tests + micro-benchmarks;
+#                               persists BENCH_kernels.json and fails on
+#                               rows slower than BENCH_REGRESSION_FACTOR
+#                               (default 1.6) x the previous artifact
 #   scripts/check.sh full       everything, including @slow system tests
 #
 # CHECK_TIMEOUT overrides the guard (seconds).
@@ -50,6 +54,13 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider tests/test_router.py \
         tests/test_faults.py
     ;;
+  kernels)
+    timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_kernels.py \
+        tests/test_kernel_props.py
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m benchmarks.run --only kernels --persist
+    ;;
   tier1)
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider
@@ -59,7 +70,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|kernels|full]" >&2
     exit 2
     ;;
 esac

@@ -224,3 +224,62 @@ def sharded_adc_topn_window(codes: jax.Array, luts: jax.Array,
         in_specs=(P(axes, None), P(None, None, None), P(None, axes)),
         out_specs=(P(None, None), P(None, None)),
     )(codes, luts, mask)
+
+
+def _local_scan_topn_rows(codes, queries, codebooks, rows, top_n: int,
+                          axes, n_shards: int, use_kernel: bool,
+                          lut_int8: bool):
+    """Per-shard body of the FUSED windowed scan: each query scans its own
+    candidate-row list.  ``rows`` holds GLOBAL row ids (replicated); this
+    shard scores only the ids that land in its local range, surfaces the
+    rest as +inf, and all_gathers (distance, global-id) pairs — still the
+    paper's ID-only interconnect invariant."""
+    from repro.kernels.pq_adc.ops import pq_adc_fused_topk
+    n_loc = codes.shape[0]
+    me = jax.lax.axis_index(axes) if n_shards > 1 else 0
+    local = rows - me * n_loc
+    mine = (rows >= 0) & (local >= 0) & (local < n_loc)
+    # keep ascending-id order inside the shard: misses -> -1 pads
+    local = jnp.where(mine, local, -1)
+    vals, lids = pq_adc_fused_topk(codes, queries, codebooks, local,
+                                   top_n, use_kernel=use_kernel,
+                                   lut_int8=lut_int8)
+    gids = jnp.where(lids >= 0, lids + me * n_loc, -1)
+    return _gather_merge_batched(vals, gids, axes, n_shards,
+                                 min(top_n, rows.shape[1]))
+
+
+def sharded_adc_topn_rows(codes: jax.Array, queries: jax.Array,
+                          codebooks: jax.Array, rows: jax.Array,
+                          top_n: int, ctx: ShardCtx, *,
+                          use_kernel: bool = False, lut_int8: bool = False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Executor stage ⑤, fused form (`fused=` plan knob): LUT build + ADC
+    scan + partial top-k in one pipeline per shard, per-query candidate
+    ROW LISTS instead of a dense (B, N) mask.
+
+    codes (N, M) uint8 row-sharded over the ``corpus`` axes; queries
+    (B, M*dsub) f32 (OPQ rotation pre-applied) and codebooks (M, K, dsub)
+    replicated; rows (B, S) int32 GLOBAL row ids, -1 = pad, ascending per
+    query -> (dists (B, tk), GLOBAL ids (B, tk)) replicated with
+    tk = min(top_n, S).  Empty slots come back as (+inf, -1).  Unlike
+    `sharded_adc_topn_window`, the ids are global rows, not bucket
+    positions — no candidate union/gather ever materialises."""
+    if ctx.mesh is None:
+        from repro.kernels.pq_adc.ops import pq_adc_fused_topk
+        return pq_adc_fused_topk(codes, queries, codebooks, rows, top_n,
+                                 use_kernel=use_kernel, lut_int8=lut_int8)
+    axes = ctx.rules.corpus
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in axes_t:
+        n_shards *= ctx.mesh.shape[a]
+    body = functools.partial(_local_scan_topn_rows, top_n=top_n,
+                             axes=axes_t, n_shards=n_shards,
+                             use_kernel=use_kernel, lut_int8=lut_int8)
+    return _shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(axes, None), P(None, None), P(None, None, None),
+                  P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+    )(codes, queries, codebooks, rows)

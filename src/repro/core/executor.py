@@ -119,6 +119,8 @@ class QueryPlan:
     overlap_rerank: bool = False  # legacy spelling of inflight_depth=2
     inflight_depth: int = 0      # dispatched windows in flight; 0 = auto
     deadline_s: Optional[float] = None  # relative to submit(); None = never
+    fused: bool = False          # stage ④⑤⑥ in one LUT→ADC→top-k pipeline
+    lut_int8: bool = False       # fig10 accuracy level: int8 ADC tables
 
     @staticmethod
     def from_config(cfg, *, k: Optional[int] = None,
@@ -187,6 +189,7 @@ class _Window:
     t_scan_host: float           # host-side LUT/gather/dispatch time
     start: int = 0               # global index of this window's first query
     wi: int = 0                  # window index within the ticket
+    ids_global: bool = False     # fused path: ``pos`` holds global row ids
 
 
 class _InflightQueue:
@@ -353,6 +356,9 @@ class QueryExecutor:
                  if sum(len(p) for p in per_q) else np.zeros((0,), np.int64))
         t1 = time.perf_counter()
 
+        if plans[0].fused:
+            return self._dispatch_fused(queries, plans, per_q, union,
+                                        t_graph=t1 - t0)
         u = len(union)
         shards = self._n_shards()
         bucket = max(64, shards, 1 << int(np.ceil(np.log2(max(u, 1)))))
@@ -390,6 +396,45 @@ class QueryExecutor:
                        union=union, vals=vals, pos=pos, t_graph=t1 - t0,
                        t_scan_host=time.perf_counter() - t1)
 
+    def _dispatch_fused(self, queries: np.ndarray,
+                        plans: Sequence[QueryPlan], per_q, union,
+                        t_graph: float) -> _Window:
+        """Fused form of stages ④⑤⑥ (``plan.fused``): one LUT→ADC→top-k
+        pipeline per shard over per-query candidate ROW LISTS.  No union
+        bucket, membership mask, or candidate gather ever materialises —
+        the scan reads the resident HBM codes directly and only (distance,
+        global-id) pairs come back.  Trades the §4.3 inter-query dedup of
+        the scan itself for one dispatch; stats keep ``candidates_scanned``
+        = |union| so the two paths report through one schema."""
+        from repro.core.distributed import (replicate_to_mesh,
+                                            sharded_adc_topn_rows)
+        idx = self.index
+        t1 = time.perf_counter()
+        maxlen = max((len(p) for p in per_q), default=0)
+        S = max(64, 1 << int(np.ceil(np.log2(max(maxlen, 1)))))
+        rows = np.full((len(queries), S), -1, np.int32)
+        for qi, ids_q in enumerate(per_q):
+            # candidate_ids output is np.unique'd => ascending, which pins
+            # top-k tie-breaks to smallest-id-first, same as the dense path
+            rows[qi, :len(ids_q)] = ids_q
+        qrot = jnp.asarray(np.stack(
+            [idx._lut_query(np.asarray(q, np.float32)) for q in queries]))
+        rows_dev = jnp.asarray(rows)
+        codebooks = idx.codebook.codebooks
+        if self.ctx.mesh is not None:
+            qrot = replicate_to_mesh(qrot, self.ctx)
+            rows_dev = replicate_to_mesh(rows_dev, self.ctx)
+            codebooks = replicate_to_mesh(codebooks, self.ctx)
+        scan_top_n = max(p.top_n for p in plans)
+        vals, gids = sharded_adc_topn_rows(
+            self._device_codes(), qrot, codebooks, rows_dev,
+            min(scan_top_n, S), self.ctx, use_kernel=idx.use_kernel,
+            lut_int8=plans[0].lut_int8)
+        return _Window(queries=queries, plans=list(plans), per_q=per_q,
+                       union=union, vals=vals, pos=gids, t_graph=t_graph,
+                       t_scan_host=time.perf_counter() - t1,
+                       ids_global=True)
+
     def _finish_into(self, w: _Window, futures: Sequence[QueryFuture],
                      deadlines: Sequence[Optional[float]]) -> None:
         """Stages ⑥-⑦: block on the scan, merge, re-rank against the SSD,
@@ -419,7 +464,10 @@ class QueryExecutor:
                 continue
             p = w.plans[qi]
             good = np.isfinite(vals[qi])
-            ids_sel = w.union[pos[qi][good]]
+            # fused windows return global row ids directly; dense windows
+            # return positions into the padded candidate bucket
+            ids_sel = (pos[qi][good] if w.ids_global
+                       else w.union[pos[qi][good]])
             d_sel = vals[qi][good]
             # ascending (distance, id): makes sharded == unsharded exactly
             order = np.lexsort((ids_sel, d_sel))

@@ -1,2 +1,6 @@
-from repro.kernels.pq_adc.ops import pq_adc, pq_adc_batch, pq_adc_topk, pq_adc_topk_batch  # noqa: F401
-from repro.kernels.pq_adc.ref import pq_adc_ref, pq_adc_batch_ref  # noqa: F401
+from repro.kernels.pq_adc.ops import (pq_adc, pq_adc_batch,  # noqa: F401
+                                      pq_adc_fused_topk, pq_adc_topk,
+                                      pq_adc_topk_batch, quantize_luts)
+from repro.kernels.pq_adc.ref import (build_luts_ref,  # noqa: F401
+                                      pq_adc_batch_ref, pq_adc_ref,
+                                      pq_adc_rows_ref)

@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.pq_adc.pq_adc import (pq_adc_scan, pq_adc_scan_batch,
-                                         pq_adc_scan_topk)
-from repro.kernels.pq_adc.ref import pq_adc_batch_ref, pq_adc_ref
+                                         pq_adc_scan_fused, pq_adc_scan_topk)
+from repro.kernels.pq_adc.ref import (build_luts_ref, pq_adc_batch_ref,
+                                      pq_adc_ref)
 
 
 def _pad_codes(codes: jax.Array, block_n: int):
@@ -74,18 +75,134 @@ def pq_adc_topk_batch(codes: jax.Array, luts: jax.Array, topk: int, *,
 def pq_adc_topk(codes: jax.Array, lut: jax.Array, topk: int, *,
                 block_n: int = 2048, use_kernel: bool = True,
                 interpret: bool = True):
-    """Fused scan + top-k: returns (dists (topk,), ids (topk,)) ascending."""
+    """Fused scan + top-k: returns (dists (tk,), ids (tk,)) ascending with
+    tk = min(topk, N) — only REAL rows, never padding.
+
+    Two ISSUE-6 fixes live here and in the kernel:
+    * padding rows are masked to +inf INSIDE each block before its partial
+      top-k (``n`` rides into ``pq_adc_scan_topk``), so a mostly-padding
+      final block can't evict genuine candidates before the merge;
+    * the output is truncated to min(topk, N): with the per-block mask in
+      place every block keeps its real rows preferentially, so the first
+      min(topk, N) merged entries are guaranteed finite — +inf padding
+      ids can no longer leak into rerank candidate lists when N < topk.
+    """
     n = codes.shape[0]
+    tk_out = min(topk, n)
     if not use_kernel:
         d = pq_adc_ref(codes, lut)
-        neg, ids = jax.lax.top_k(-d, min(topk, n))
+        neg, ids = jax.lax.top_k(-d, tk_out)
         return -neg, ids
     padded, n, pad = _pad_codes(codes, min(block_n, max(n, 8)))
     bn = min(block_n, padded.shape[0])
     tk = min(topk, bn)
-    vals, ids = pq_adc_scan_topk(padded, lut, tk, block_n=bn,
+    vals, ids = pq_adc_scan_topk(padded, lut, tk, n=n, block_n=bn,
                                  interpret=interpret)
-    # mask padding ids, then global merge
-    vals = jnp.where(ids < n, vals, jnp.inf)
-    neg, pos = jax.lax.top_k(-vals, min(topk, vals.shape[0]))
+    neg, pos = jax.lax.top_k(-vals, tk_out)
     return -neg, ids[pos]
+
+
+@jax.jit
+def quantize_luts(luts: jax.Array):
+    """fig10 accuracy levels: asymmetric int8 quantisation of the ADC
+    tables, per (query, subquantizer).  (B, M, K) f32 ->
+    (q8 (B, M, K) int8, scale (B, M) f32, zp (B, M) f32);
+    dequant is (q8 + 128) * scale + zp, accumulated in fp32."""
+    lo = jnp.min(luts, axis=-1, keepdims=True)
+    hi = jnp.max(luts, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q8 = (jnp.round((luts - lo) / scale) - 128.0).astype(jnp.int8)
+    return q8, scale[..., 0], lo[..., 0]
+
+
+# the LUT build is its OWN dispatch on purpose: when the (B, M, K) table
+# expression is traced into the same jit as the gather below, XLA:CPU fuses
+# it INTO the gather's loop fusion and recomputes sum((cb - q)^2) per
+# lookup (~3x slower; optimization_barrier doesn't help — it materialises
+# the 67 MB gather instead).  Built separately, the table lands as a jit
+# PARAMETER and the scan compiles to one gather+reduce loop fusion.
+_build_luts = jax.jit(build_luts_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def _fused_rows_scan(codes, luts, rows, topk: int):
+    """One dispatch: u8 row gather + LUT gather + sum over M + pad mask +
+    per-query top-k over the candidate segment.  ``luts`` MUST be a traced
+    parameter (see _build_luts)."""
+    b, s = rows.shape
+    m = codes.shape[1]
+    k = luts.shape[-1]
+    rsafe = jnp.maximum(rows, 0)
+    crow = codes.at[rsafe].get(mode="promise_in_bounds")      # (B, S, M)
+    idx = (crow.astype(jnp.int32)
+           + (jnp.arange(m, dtype=jnp.int32) * k)[None, None, :]
+           + (jnp.arange(b, dtype=jnp.int32) * (m * k))[:, None, None])
+    flat = luts.reshape(-1)
+    d = jnp.sum(flat.at[idx].get(mode="promise_in_bounds"), axis=-1)
+    d = jnp.where(rows >= 0, d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, min(topk, s))
+    # rows carries -1 at pad slots, so ids inherit the "no candidate"
+    # marker for free (+inf distance rides along)
+    return -neg, jnp.take_along_axis(rows, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def _fused_rows_scan_int8(codes, q8, scale, zp, rows, topk: int):
+    """int8-LUT variant of _fused_rows_scan: gather int8 table entries,
+    dequantise per element, accumulate in fp32 (the "fp32 merge")."""
+    b, s = rows.shape
+    m = codes.shape[1]
+    k = q8.shape[-1]
+    rsafe = jnp.maximum(rows, 0)
+    crow = codes.at[rsafe].get(mode="promise_in_bounds")
+    idx = (crow.astype(jnp.int32)
+           + (jnp.arange(m, dtype=jnp.int32) * k)[None, None, :]
+           + (jnp.arange(b, dtype=jnp.int32) * (m * k))[:, None, None])
+    g = q8.reshape(-1).at[idx].get(
+        mode="promise_in_bounds").astype(jnp.float32)         # (B, S, M)
+    d = jnp.sum((g + 128.0) * scale[:, None, :] + zp[:, None, :], axis=-1)
+    d = jnp.where(rows >= 0, d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, min(topk, s))
+    return -neg, jnp.take_along_axis(rows, pos, axis=1)
+
+
+def pq_adc_fused_topk(codes: jax.Array, queries: jax.Array,
+                      codebooks: jax.Array, rows: jax.Array, topk: int, *,
+                      lut_int8: bool = False, use_kernel: bool = True,
+                      block_s: int = 2048, interpret: bool = True):
+    """The fused query pipeline (ISSUE-6 tentpole): LUT build -> ADC scan
+    -> partial top-k over each query's OWN candidate rows, one device
+    round-trip per scan window.
+
+    codes (N, M) uint8 (the whole HBM tier — no per-window candidate
+    gather); queries (B, M*dsub) f32 with any OPQ rotation already
+    applied; codebooks (M, K, dsub) f32; rows (B, S) int32 global row ids,
+    -1 = pad, each query's ids sorted ascending (makes top-k tie-breaks
+    match the dense masked scan bit-exactly).  Returns
+    (dists (B, tk), row ids (B, tk)) ascending, tk = min(topk, S); slots
+    past a query's candidate count come back as (+inf, -1), never as a
+    padding row id.
+
+    ``use_kernel=True`` runs the single Pallas kernel (LUT resident in
+    VMEM across the grid, int8 scratch under ``lut_int8``);
+    ``use_kernel=False`` is the CPU hot path: a tiny LUT-build dispatch
+    plus ONE fused gather/scan/top-k jit (2.2-3.4x the unfused dense
+    masked scan at fig9 shapes — see benchmarks/kernels_bench.py)."""
+    b, s = rows.shape
+    tk_out = min(topk, s)
+    if not use_kernel:
+        luts = _build_luts(codebooks, queries)
+        if lut_int8:
+            q8, scale, zp = quantize_luts(luts)
+            return _fused_rows_scan_int8(codes, q8, scale, zp, rows, tk_out)
+        return _fused_rows_scan(codes, luts, rows, tk_out)
+    bs = min(block_s, max(s, 8))
+    pad = (-s) % bs
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.full((b, pad), -1, rows.dtype)], axis=1)
+    vals, ids = pq_adc_scan_fused(codes, queries, codebooks, rows, tk_out,
+                                  block_s=bs, lut_int8=lut_int8,
+                                  interpret=interpret)
+    neg, pos = jax.lax.top_k(-vals, min(tk_out, vals.shape[1]))
+    return -neg, jnp.take_along_axis(ids, pos, axis=1)

@@ -21,3 +21,33 @@ def pq_adc_batch_ref(codes: jnp.ndarray, luts: jnp.ndarray) -> jnp.ndarray:
     idx = codes.astype(jnp.int32) + (jnp.arange(m, dtype=jnp.int32)
                                      * k)[None, :]
     return jnp.sum(flat[:, idx], axis=-1)
+
+
+def build_luts_ref(codebooks: jnp.ndarray, queries: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """ADC distance tables, batched: codebooks (M, K, dsub), queries
+    (B, M*dsub) -> (B, M, K) squared-L2 per sub-space (Eq. 1's table).
+    Oracle for the fused kernel's in-VMEM LUT build stage."""
+    b = queries.shape[0]
+    m, k, dsub = codebooks.shape
+    qs = queries.astype(jnp.float32).reshape(b, m, 1, dsub)
+    return jnp.sum((codebooks[None] - qs) ** 2, axis=-1)
+
+
+def pq_adc_rows_ref(codes: jnp.ndarray, luts: jnp.ndarray,
+                    rows: jnp.ndarray) -> jnp.ndarray:
+    """Segmented per-query scan oracle: codes (N, M) uint8, luts
+    (B, M, K) f32, rows (B, S) int32 row ids into ``codes`` (-1 = pad)
+    -> distances (B, S) f32 with +inf at pad slots.
+
+    This is the parity anchor for the fused query kernel: each query
+    scans only ITS candidate rows (the paper's per-query candidate-list
+    formulation), instead of a dense (B, N) scan masked afterwards."""
+    b, m, k = luts.shape
+    rsafe = jnp.maximum(rows, 0)
+    crow = jnp.take(codes, rsafe, axis=0)                     # (B, S, M)
+    idx = (crow.astype(jnp.int32)
+           + (jnp.arange(m, dtype=jnp.int32) * k)[None, None, :]
+           + (jnp.arange(b, dtype=jnp.int32) * (m * k))[:, None, None])
+    d = jnp.sum(jnp.take(luts.reshape(-1), idx), axis=-1)     # (B, S)
+    return jnp.where(rows >= 0, d, jnp.inf)

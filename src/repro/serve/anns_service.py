@@ -10,13 +10,12 @@ the mesh-sharded ADC scan, and per-request latency attribution all come
 from the executor, not from per-path code.
 
 PR-2 redesign (DESIGN.md §3), re-based on the unified client API in PR 5
-(DESIGN.md §6): ``submit()`` accepts a typed
-:class:`~repro.serve.client.SearchRequest` (or the legacy positional
-form) and returns a :class:`~repro.core.futures.QueryFuture` resolving
-DIRECTLY to a :class:`~repro.serve.client.SearchResponse` —
-``fut.result().ids`` is the answer; the old double-wrapped
-``fut.result().result`` access keeps working one release through the
-response's ``.result`` shim — with
+(DESIGN.md §6): ``submit()`` takes a typed
+:class:`~repro.serve.client.SearchRequest` (raw-vector convenience lives
+in :class:`~repro.serve.client.ANNSClient` / ``as_request``) and returns
+a :class:`~repro.core.futures.QueryFuture` resolving DIRECTLY to a
+:class:`~repro.serve.client.SearchResponse` — ``fut.result().ids`` is
+the answer — with
 
 * **admission control** — a bounded queue (``max_queue``); submissions past
   the bound raise :class:`BackpressureError` instead of growing latency.
@@ -63,10 +62,10 @@ from repro.core.engine import FusionANNSIndex
 from repro.core.executor import QUERY_STATS_FIELDS, PlanOverrides
 from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 FutureError, QueryFuture)
-from repro.serve.client import (SearchResponse, as_request,
+from repro.serve.client import (SearchRequest, SearchResponse,
                                 response_from_result)
 
-__all__ = ["BatchingANNSService", "Request", "Response",
+__all__ = ["BatchingANNSService", "Request",
            "BackpressureError", "DeadlineExceeded", "QueryFuture",
            "QUERY_STATS_FIELDS"]
 
@@ -83,18 +82,13 @@ class Request:
     tag: object = None                    # caller correlation handle
 
 
-# the pre-PR-5 per-request response type; now an alias of the unified
-# SearchResponse (same attribute surface plus ids/dists/stats/latency_s —
-# the old ``.result`` access works through the compat property)
-Response = SearchResponse
-
-
 class BatchingANNSService:
     def __init__(self, index: FusionANNSIndex, *, max_batch: int = 32,
                  max_wait_s: float = 0.002, scan_window: int = 0,
                  overlap_rerank: bool = False, inflight_depth: int = 0,
                  max_queue: int = 1024, threaded: bool = False,
-                 tick_interval_s: float = 2e-4, executor=None):
+                 tick_interval_s: float = 2e-4, executor=None,
+                 fused: bool = False, lut_int8: bool = False):
         # ``executor`` lets a replica run its OWN pipeline instance over
         # the shared index (multi-replica routing: each replica's executor
         # is attached to a disjoint sub-mesh — serve/router.py); default is
@@ -106,6 +100,11 @@ class BatchingANNSService:
         self.scan_window = scan_window
         self.overlap_rerank = overlap_rerank
         self.inflight_depth = inflight_depth
+        # fused LUT→ADC→top-k scan pipeline (plan knob; DESIGN.md §2) and
+        # the fig10 int8-LUT accuracy level, inherited by every batch this
+        # replica serves
+        self.fused = fused
+        self.lut_int8 = lut_int8
         self.max_queue = max_queue
         self.tick_interval_s = tick_interval_s
         self._queue: Deque[Request] = deque()
@@ -190,23 +189,24 @@ class BatchingANNSService:
         self.stop()
 
     # --------------------------------------------------------------- submit
-    def submit(self, query, k: Optional[int] = None, *,
-               top_n: Optional[int] = None,
-               deadline_s: Optional[float] = None,
-               tag=None) -> QueryFuture:
+    def submit(self, request: SearchRequest) -> QueryFuture:
         """Enqueue one request; returns its future immediately, resolving
-        to a :class:`~repro.serve.client.SearchResponse`.  ``query`` may be
-        a typed :class:`~repro.serve.client.SearchRequest` (the Backend-
-        protocol form) or a raw vector with the legacy kwargs.
+        to a :class:`~repro.serve.client.SearchResponse`.  ``request``
+        must be a typed :class:`~repro.serve.client.SearchRequest` (the
+        Backend-protocol form; raw-vector convenience lives in
+        :class:`~repro.serve.client.ANNSClient` / ``as_request``).
 
         Raises :class:`BackpressureError` when the queue holds
         ``max_queue`` LIVE requests — cancelled requests are compacted out
         before the admission decision, so a cancel burst frees its slots
         for fresh submissions."""
-        req = as_request(query, k, top_n=top_n, deadline_s=deadline_s,
-                         tag=tag)
-        query, k, top_n = req.query, req.k, req.top_n
-        deadline_s, tag = req.deadline_s, req.tag
+        if not isinstance(request, SearchRequest):
+            raise TypeError(
+                "submit() takes a SearchRequest; wrap raw query vectors "
+                "with as_request(...) or use ANNSClient "
+                f"(got {type(request).__name__})")
+        query, k, top_n = request.query, request.k, request.top_n
+        deadline_s, tag = request.deadline_s, request.tag
         with self._cv:
             if len(self._queue) >= self.max_queue:
                 self._compact_locked()
@@ -324,7 +324,7 @@ class BatchingANNSService:
             return True
         return (now - self._queue[0].t_enqueue) >= self.max_wait_s
 
-    def pump(self, force: bool = False) -> List[Response]:
+    def pump(self, force: bool = False) -> List[SearchResponse]:
         """Serve at most one batch window; returns its responses.
 
         Cancelled requests are dropped at batch formation; requests whose
@@ -359,7 +359,7 @@ class BatchingANNSService:
                 self._serving -= 1
                 self._in_flight -= len(batch)
 
-    def _serve_batch(self, batch: List[Request]) -> List[Response]:
+    def _serve_batch(self, batch: List[Request]) -> List[SearchResponse]:
         if not batch:
             return []
         try:
@@ -373,11 +373,13 @@ class BatchingANNSService:
                         FutureError(f"serving pump failed: {exc!r}"))
             raise
 
-    def _serve_batch_inner(self, batch: List[Request]) -> List[Response]:
+    def _serve_batch_inner(self, batch: List[Request]
+                           ) -> List[SearchResponse]:
         queries = np.stack([r.query for r in batch])
         plan = self.index.plan(window=self.scan_window,
                                overlap_rerank=self.overlap_rerank,
-                               inflight_depth=self.inflight_depth)
+                               inflight_depth=self.inflight_depth,
+                               fused=self.fused, lut_int8=self.lut_int8)
         t0 = time.perf_counter()
         # per-request knobs reach the executor as PlanOverrides — one shared
         # scan window honors a mixed-k batch (deadline re-based to submit)

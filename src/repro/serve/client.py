@@ -10,9 +10,7 @@ and a routed-future shim).  This module collapses them into one contract
 * :class:`SearchRequest` / :class:`SearchResponse` — the typed request/
   response pair every serving path speaks.  A response always exposes
   ``ids`` / ``dists`` / ``stats`` (the shared ``QueryStats`` schema) plus
-  ``latency_s`` (submit→resolve) and the serving attribution fields; the
-  legacy ``.result`` property keeps ``fut.result().result.ids`` working
-  one release.
+  ``latency_s`` (submit→resolve) and the serving attribution fields.
 * :class:`Backend` — the protocol the executor, the batching service, and
   the replica router all implement: ``submit(request) -> QueryFuture``
   (resolving to a :class:`SearchResponse`), ``drain()`` (returns the
@@ -91,21 +89,15 @@ class SearchResponse:
     t_serve_s: float = 0.0           # batch execution time (shared)
     batch_size: int = 1
 
-    @property
-    def result(self) -> QueryResult:
-        """Legacy shim: the pre-PR-5 service resolved futures to a
-        ``Response`` whose ``.result`` was the ``QueryResult`` —
-        ``fut.result().result.ids`` keeps working one release."""
-        return QueryResult(ids=self.ids, dists=self.dists, stats=self.stats)
-
 
 def as_request(query, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
                deadline_s: Optional[float] = None,
                tag: Any = None) -> SearchRequest:
-    """Normalize the legacy positional/kwargs submit form into a
-    :class:`SearchRequest` (the migration shim every backend's ``submit``
-    routes through).  A ready-made request passes through untouched —
+    """Normalize a raw query vector + kwargs into a :class:`SearchRequest`
+    (the front-door convenience used by :class:`ANNSClient` /
+    :class:`AsyncANNSClient`; backend ``submit`` methods take the typed
+    request only).  A ready-made request passes through untouched —
     unless explicit kwargs ride along, which override its fields (a
     fresh request, never a mutation) instead of being silently dropped."""
     if isinstance(query, SearchRequest):

@@ -60,7 +60,7 @@ from repro.core.engine import FusionANNSIndex
 from repro.core.executor import QUERY_STATS_FIELDS
 from repro.core.futures import BackpressureError, QueryFuture
 from repro.serve.anns_service import BatchingANNSService
-from repro.serve.client import SearchResponse, as_request
+from repro.serve.client import SearchRequest, SearchResponse
 
 __all__ = ["ReplicaRouter", "POLICIES"]
 
@@ -151,19 +151,20 @@ class ReplicaRouter:
         # least-loaded first (the documented spill order)
         return [start] + [i for i in by_load if i != start], None
 
-    def submit(self, query, k: Optional[int] = None, *,
-               top_n: Optional[int] = None,
-               deadline_s: Optional[float] = None,
-               tag=None) -> QueryFuture:
+    def submit(self, request: SearchRequest) -> QueryFuture:
         """Route one request; returns the serving replica's future (same
-        surface as ``BatchingANNSService.submit`` — ``query`` may be a
-        typed :class:`~repro.serve.client.SearchRequest`, and the future
-        resolves to a :class:`~repro.serve.client.SearchResponse`).  Tries
+        surface as ``BatchingANNSService.submit`` — a typed
+        :class:`~repro.serve.client.SearchRequest` in, a future resolving
+        to a :class:`~repro.serve.client.SearchResponse` out).  Tries
         the policy's choice first, spills across the remaining replicas on
         backpressure, and raises :class:`BackpressureError` only when
         EVERY replica's queue is full."""
-        req = as_request(query, k, top_n=top_n, deadline_s=deadline_s,
-                         tag=tag)
+        if not isinstance(request, SearchRequest):
+            raise TypeError(
+                "submit() takes a SearchRequest; wrap raw query vectors "
+                "with as_request(...) or use ANNSClient "
+                f"(got {type(request).__name__})")
+        req = request
         order, dl_target = self._route_order(req.deadline_s)
         last: Optional[BackpressureError] = None
         for pos, i in enumerate(order):

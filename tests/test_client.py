@@ -26,7 +26,7 @@ import pytest
 
 from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 QueryFuture)
-from repro.serve.anns_service import BatchingANNSService, Response
+from repro.serve.anns_service import BatchingANNSService
 from repro.serve.client import (ANNSClient, AsyncANNSClient, Backend,
                                 SearchRequest, SearchResponse, as_request)
 from repro.serve.router import ReplicaRouter
@@ -84,12 +84,13 @@ def test_search_request_response_types(anns_bundle):
     assert resp.t_serve_s > 0 and resp.batch_size == 1
     np.testing.assert_array_equal(resp.ids, b.index.query(
         b.queries[0], k=5).ids)
-    # migration shims: the legacy double-wrapped access and the legacy
-    # Response name both keep working one release
-    np.testing.assert_array_equal(resp.result.ids, resp.ids)
-    assert Response is SearchResponse
-    # as_request normalizes the legacy positional form, and passes a
-    # ready-made request through untouched
+    # the PR-5 migration shims (positional submit, Response alias,
+    # resp.result) are gone: backend submit is SearchRequest-only
+    with pytest.raises(TypeError):
+        svc.submit(b.queries[0])
+    assert not hasattr(resp, "result")
+    # as_request builds a request from the raw front-door form, and passes
+    # a ready-made request through untouched
     legacy = as_request(b.queries[0], 5, tag="abc")
     assert legacy.k == 5 and legacy.tag == "abc"
     assert as_request(req) is req
@@ -161,6 +162,14 @@ def test_four_path_id_parity(anns_bundle, ref_ids):
     assert len(by_tag) == len(b.queries)
     for i, ref in enumerate(ref_ids):
         np.testing.assert_array_equal(ref, by_tag[i])
+    # path 5: the fused LUT→ADC→top-k scan pipeline (ISSUE-6 tentpole)
+    # through the sync client over a fused-plan service — same ids again
+    fused_client = ANNSClient(BatchingANNSService(
+        b.index, max_batch=8, max_wait_s=0.0, fused=True))
+    fused_resps = fused_client.search_many(
+        [SearchRequest(query=q, tag=i) for i, q in enumerate(b.queries)])
+    for ref, resp in zip(ref_ids, fused_resps):
+        np.testing.assert_array_equal(ref, resp.ids)
 
 
 # ------------------------------------------------------------ asyncio doors

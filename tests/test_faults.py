@@ -30,6 +30,7 @@ from repro.core import executor as executor_mod
 from repro.core.futures import CancelledError, FutureError
 from repro.serve.anns_service import BatchingANNSService
 from repro.serve.router import ReplicaRouter
+from repro.serve.client import SearchRequest
 
 
 def _swallow_commit(self, w):
@@ -60,12 +61,12 @@ def test_stalled_scan_resolves_futures_and_replica_recovers(anns_bundle,
                               threaded=True)
     with monkeypatch.context() as m:
         m.setattr(executor_mod._InflightQueue, "commit", _swallow_commit)
-        doomed = svc.submit(b.queries[0])
+        doomed = svc.submit(SearchRequest(query=b.queries[0]))
         with pytest.raises(FutureError, match=r"stalled window"):
             doomed.result(timeout=60)
     # fault cleared: same replica, same pump thread, normal service
-    good = svc.submit(b.queries[1])
-    np.testing.assert_array_equal(good.result(timeout=60).result.ids,
+    good = svc.submit(SearchRequest(query=b.queries[1]))
+    np.testing.assert_array_equal(good.result(timeout=60).ids,
                                   b.index.query(b.queries[1]).ids)
     assert svc.stats.get("pump_errors", 0) >= 1
     svc.stop()
@@ -78,13 +79,13 @@ def test_cancel_after_retire_loses_and_keeps_result(anns_bundle):
     b = anns_bundle
     with BatchingANNSService(b.index, max_batch=4,
                              max_wait_s=0.001) as svc:
-        fut = svc.submit(b.queries[0])
+        fut = svc.submit(SearchRequest(query=b.queries[0]))
         resp = fut.result(timeout=60)          # retired: race already lost
         assert fut.cancel() is False
         assert not fut.cancelled() and fut.done()
         # the stored result survives the late cancel
-        np.testing.assert_array_equal(fut.result().result.ids, resp.result.ids)
-        np.testing.assert_array_equal(resp.result.ids,
+        np.testing.assert_array_equal(fut.result().ids, resp.ids)
+        np.testing.assert_array_equal(resp.ids,
                                       b.index.query(b.queries[0]).ids)
 
 
@@ -120,14 +121,14 @@ def test_poison_batch_fails_own_futures_router_keeps_serving(anns_bundle):
     b = anns_bundle
     router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
                            threaded=True, max_batch=1, max_wait_s=0.001)
-    bad = router.submit(np.ones(7, np.float32))    # dim mismatch
+    bad = router.submit(SearchRequest(query=np.ones(7, np.float32)))    # dim mismatch
     with pytest.raises(FutureError):
         bad.result(timeout=60)
     # both replicas still serve after the poison batch (round-robin
     # guarantees the poisoned replica gets fresh traffic too)
-    goods = [router.submit(q) for q in b.queries[:4]]
+    goods = [router.submit(SearchRequest(query=q)) for q in b.queries[:4]]
     for q, f in zip(b.queries[:4], goods):
-        np.testing.assert_array_equal(f.result(timeout=60).result.ids,
+        np.testing.assert_array_equal(f.result(timeout=60).ids,
                                       b.index.query(q).ids)
     roll = router.stats_rollup()
     assert roll["routed"] == [3, 2]            # poison + 2 / 2 goods
@@ -144,15 +145,15 @@ def test_poison_batch_does_not_poison_batchmates_futures_forever(
     queue succeeds — the failure never outlives its batch."""
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=10.0)
-    bad = svc.submit(np.ones(7, np.float32))
-    good = svc.submit(b.queries[0])
+    bad = svc.submit(SearchRequest(query=np.ones(7, np.float32)))
+    good = svc.submit(SearchRequest(query=b.queries[0]))
     # sync harness: the pump re-raises the original fault AFTER resolving
     # the batch futures with FutureError
     with pytest.raises(Exception):
         svc.pump(force=True)
     assert isinstance(bad.exception(), FutureError)
     assert isinstance(good.exception(), FutureError)
-    retry = svc.submit(b.queries[0])
+    retry = svc.submit(SearchRequest(query=b.queries[0]))
     svc.drain()
-    np.testing.assert_array_equal(retry.result().result.ids,
+    np.testing.assert_array_equal(retry.result().ids,
                                   b.index.query(b.queries[0]).ids)

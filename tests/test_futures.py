@@ -21,6 +21,7 @@ from repro.core.executor import PlanOverrides, QueryPlan
 from repro.core.futures import (BackpressureError, CancelledError,
                                 DeadlineExceeded, FutureError, QueryFuture)
 from repro.serve.anns_service import BatchingANNSService
+from repro.serve.client import SearchRequest
 
 
 # --------------------------------------------------------------- executor
@@ -238,14 +239,14 @@ def test_service_per_request_k_regression(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0)
     ks = [3, 5, 7, 10]
-    futs = [svc.submit(q, k=k) for q, k in zip(b.queries, ks)]
+    futs = [svc.submit(SearchRequest(query=q, k=k)) for q, k in zip(b.queries, ks)]
     svc.drain()
     assert svc.stats["batches"] == 1          # ONE mixed-k scan window
     for q, k, f in zip(b.queries, ks, futs):
         resp = f.result()
         assert resp.batch_size == 4
-        assert len(resp.result.ids) == k
-        np.testing.assert_array_equal(resp.result.ids,
+        assert len(resp.ids) == k
+        np.testing.assert_array_equal(resp.ids,
                                       b.index.query(q, k=k).ids)
 
 
@@ -253,10 +254,10 @@ def test_service_future_drives_pump(anns_bundle):
     """result() on a pending service future forces the pump itself."""
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=64, max_wait_s=10.0)
-    fut = svc.submit(b.queries[0])
+    fut = svc.submit(SearchRequest(query=b.queries[0]))
     assert not fut.done()
     resp = fut.result()                       # no explicit pump()/drain()
-    np.testing.assert_array_equal(resp.result.ids,
+    np.testing.assert_array_equal(resp.ids,
                                   b.index.query(b.queries[0]).ids)
     assert svc.stats["requests"] == 1
 
@@ -268,14 +269,14 @@ def test_cancel_burst_frees_queue_slots(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=10.0,
                               max_queue=3)
-    futs = [svc.submit(q) for q in b.queries[:3]]
+    futs = [svc.submit(SearchRequest(query=q)) for q in b.queries[:3]]
     for f in futs:
         assert f.cancel()
-    fut = svc.submit(b.queries[3])            # must NOT be rejected
+    fut = svc.submit(SearchRequest(query=b.queries[3]))            # must NOT be rejected
     assert svc.stats["rejected"] == 0
     assert svc.stats["cancelled"] == 3        # compacted out, counted once
     resp = fut.result()
-    np.testing.assert_array_equal(resp.result.ids,
+    np.testing.assert_array_equal(resp.ids,
                                   b.index.query(b.queries[3]).ids)
     assert svc.stats["cancelled"] == 3        # pump never re-counts them
 
@@ -284,22 +285,22 @@ def test_service_backpressure(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0,
                               max_queue=2)
-    svc.submit(b.queries[0])
-    svc.submit(b.queries[1])
+    svc.submit(SearchRequest(query=b.queries[0]))
+    svc.submit(SearchRequest(query=b.queries[1]))
     with pytest.raises(BackpressureError):
-        svc.submit(b.queries[2])
+        svc.submit(SearchRequest(query=b.queries[2]))
     assert svc.stats["rejected"] == 1
     svc.drain()                               # queue clears; admission again
-    fut = svc.submit(b.queries[2])
-    assert fut.result().result.ids is not None
+    fut = svc.submit(SearchRequest(query=b.queries[2]))
+    assert fut.result().ids is not None
 
 
 def test_service_cancel_and_deadline(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.0)
-    live = svc.submit(b.queries[0])
-    dead = svc.submit(b.queries[1], deadline_s=0.0)
-    gone = svc.submit(b.queries[2])
+    live = svc.submit(SearchRequest(query=b.queries[0]))
+    dead = svc.submit(SearchRequest(query=b.queries[1], deadline_s=0.0))
+    gone = svc.submit(SearchRequest(query=b.queries[2]))
     assert gone.cancel()
     responses = svc.drain()
     assert [r.rid for r in responses] == [live.tag]
@@ -308,7 +309,7 @@ def test_service_cancel_and_deadline(anns_bundle):
     with pytest.raises(CancelledError):
         gone.result()
     assert svc.stats["expired"] == 1 and svc.stats["cancelled"] == 1
-    np.testing.assert_array_equal(live.result().result.ids,
+    np.testing.assert_array_equal(live.result().ids,
                                   b.index.query(b.queries[0]).ids)
 
 
@@ -316,11 +317,11 @@ def test_service_latency_percentiles(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0,
                               scan_window=2, inflight_depth=2)
-    futs = [svc.submit(q) for q in b.queries[:8]]
+    futs = [svc.submit(SearchRequest(query=q)) for q in b.queries[:8]]
     svc.drain()
     pct = svc.latency_percentiles()
     assert pct["n"] == 8
     assert 0 < pct["p50"] <= pct["p99"]
     ref = np.stack([b.index.query(q).ids for q in b.queries[:8]])
-    got = np.stack([f.result().result.ids for f in futs])
+    got = np.stack([f.result().ids for f in futs])
     np.testing.assert_array_equal(ref, got)

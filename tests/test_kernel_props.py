@@ -1,0 +1,116 @@
+"""Property-based edge sweeps for the PQ ADC kernel wrappers (ISSUE 6
+satellite).
+
+Invariants under test (Pallas interpret path vs the jnp oracle):
+
+* **ragged N** — for N % block_n ∈ {0, 1, block_n−1} (full blocks, one
+  lonely row in the final block, one row short of full) the padded scan
+  matches the oracle exactly: padding rows never surface and never evict
+  real candidates from a per-block partial top-k;
+* **topk ≥ N** — the fused top-k truncates to N real rows: all finite,
+  no padding ids (the ISSUE-6 +inf-leak fix);
+* **masked batch** — per-query membership masks: masked-out rows surface
+  as +inf and every finite id is a member of that query's mask;
+* **int8 LUT** — the fig10 accuracy level stays within the analytic
+  asymmetric-quantization bound of the fp32 oracle, and its top-k ids
+  keep high overlap.
+
+Runs under ``hypothesis`` when installed, else the deterministic
+``tests/_propshim.py`` fallback (tier-1 policy, see conftest.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from _propshim import given, settings, strategies as st
+
+from repro.kernels.pq_adc import (build_luts_ref, pq_adc_batch_ref,
+                                  pq_adc_fused_topk, pq_adc_ref,
+                                  pq_adc_topk, pq_adc_topk_batch)
+
+_M = 8
+_BLOCK = st.sampled_from([64, 128, 256])
+_REM = st.sampled_from(["zero", "one", "minus_one"])
+_SEED = st.integers(0, 2 ** 16)
+
+
+def _case(seed, n, m=_M, k=256):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.random((m, k)) + 0.5, jnp.float32)
+    return codes, lut
+
+
+@settings(max_examples=12, deadline=None)
+@given(block=_BLOCK, rem=_REM, blocks=st.integers(1, 3), seed=_SEED)
+def test_ragged_n_matches_oracle(block, rem, blocks, seed):
+    n = blocks * block + {"zero": 0, "one": 1, "minus_one": block - 1}[rem]
+    codes, lut = _case(seed, n)
+    topk = min(n, 32)
+    vals, ids = pq_adc_topk(codes, lut, topk, block_n=block)
+    ref_v, ref_i = pq_adc_topk(codes, lut, topk, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref_v),
+                               rtol=1e-6)
+    # equal-distance ties may order differently; the achieved distances
+    # must match exactly and every id must be a real row
+    d = np.asarray(pq_adc_ref(codes, lut))
+    np.testing.assert_allclose(d[np.asarray(ids)], np.asarray(ref_v),
+                               rtol=1e-6)
+    assert np.all((np.asarray(ids) >= 0) & (np.asarray(ids) < n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), topk=st.sampled_from([64, 100, 256]),
+       seed=_SEED)
+def test_topk_at_least_n_truncates_to_real_rows(n, topk, seed):
+    codes, lut = _case(seed, n)
+    for use_kernel in (True, False):
+        vals, ids = pq_adc_topk(codes, lut, topk, use_kernel=use_kernel)
+        assert vals.shape == (n,)
+        assert np.all(np.isfinite(np.asarray(vals)))
+        assert sorted(np.asarray(ids).tolist()) == list(range(n))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(16, 300), b=st.integers(1, 5),
+       density=st.sampled_from([0.0, 0.1, 0.5, 1.0]), seed=_SEED)
+def test_masked_batch_only_members_finite(n, b, density, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 256, (n, _M)), jnp.uint8)
+    luts = jnp.asarray(rng.random((b, _M, 256)), jnp.float32)
+    mask = rng.random((b, n)) < density
+    vals, ids = pq_adc_topk_batch(codes, luts, 32, mask=jnp.asarray(mask),
+                                  use_kernel=False)
+    d = np.asarray(pq_adc_batch_ref(codes, luts))
+    v, i = np.asarray(vals), np.asarray(ids)
+    for qi in range(b):
+        fin = np.isfinite(v[qi])
+        assert fin.sum() == min(32, mask[qi].sum())
+        assert np.all(mask[qi][i[qi][fin]])        # members only
+        np.testing.assert_allclose(d[qi][i[qi][fin]], v[qi][fin],
+                                   rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(100, 600), b=st.integers(1, 4),
+       s=st.sampled_from([32, 128]), seed=_SEED)
+def test_int8_lut_within_quantization_bound(n, b, s, seed):
+    rng = np.random.default_rng(seed)
+    dsub = 4
+    codes = jnp.asarray(rng.integers(0, 256, (n, _M)), jnp.uint8)
+    cb = jnp.asarray(rng.standard_normal((_M, 256, dsub)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, _M * dsub)), jnp.float32)
+    rows = np.full((b, s), -1, np.int32)
+    for qi in range(b):
+        cnt = int(rng.integers(1, min(n, s) + 1))
+        rows[qi, :cnt] = np.sort(rng.choice(n, cnt, replace=False))
+    rows = jnp.asarray(rows)
+    luts = np.asarray(build_luts_ref(cb, q))
+    bound = ((luts.max(-1) - luts.min(-1)) / 255.0 / 2).sum(-1).max() + 1e-5
+    v32, _ = pq_adc_fused_topk(codes, q, cb, rows, 16, use_kernel=False)
+    v8, i8 = pq_adc_fused_topk(codes, q, cb, rows, 16, use_kernel=False,
+                               lut_int8=True)
+    fin = np.isfinite(np.asarray(v32))
+    np.testing.assert_array_equal(fin, np.isfinite(np.asarray(v8)))
+    assert np.max(np.abs(np.asarray(v8)[fin] - np.asarray(v32)[fin]),
+                  initial=0.0) <= bound
+    assert np.all(np.asarray(i8)[~np.isfinite(np.asarray(v8))] == -1)

@@ -50,6 +50,102 @@ def test_pq_adc_topk_fused(rng, n, m, topk, block):
                                rtol=1e-5)
 
 
+def test_pq_adc_topk_padding_block_does_not_evict(rng):
+    """ISSUE-6 regression: a final block that is MOSTLY padding (more
+    padding rows than topk) must not evict genuine candidates — the pad
+    mask has to run inside each block BEFORE its partial top-k."""
+    n, m, block, topk = 2048 + 7, 8, 2048, 32   # final block: 2041 pads
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    # zero LUT rows for code 0 would hide the bug (pads score 0 and win);
+    # random LUTs + offset make padding rows score LOW so eviction shows
+    lut = jnp.asarray(rng.random((m, 256)) + 1.0, jnp.float32)
+    vals, ids = pq_adc_topk(codes, lut, topk, block_n=block)
+    ref_v, ref_i = pq_adc_topk(codes, lut, topk, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref_v),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref_i))
+
+
+@pytest.mark.parametrize("n,topk", [(5, 16), (1, 8), (100, 256)])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_pq_adc_topk_n_below_topk_returns_only_real_rows(rng, n, topk,
+                                                         use_kernel):
+    """ISSUE-6 regression: with n < topk the output is truncated to n —
+    all distances finite, every id a real row (no +inf padding ids can
+    leak into a rerank candidate list)."""
+    m = 8
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.random((m, 256)), jnp.float32)
+    vals, ids = pq_adc_topk(codes, lut, topk, use_kernel=use_kernel)
+    assert vals.shape == (min(topk, n),)
+    assert np.all(np.isfinite(np.asarray(vals)))
+    assert np.all((np.asarray(ids) >= 0) & (np.asarray(ids) < n))
+
+
+def _fused_rows_case(rng, n, m, b, S, k=256, dsub=4):
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    cb = jnp.asarray(rng.standard_normal((m, k, dsub)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, m * dsub)), jnp.float32)
+    rows = np.full((b, S), -1, np.int32)
+    for i in range(b):
+        cnt = int(rng.integers(1, min(n, S) + 1))
+        rows[i, :cnt] = np.sort(rng.choice(n, cnt, replace=False))
+    return codes, cb, q, jnp.asarray(rows)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+@pytest.mark.parametrize("n,b,S,topk", [
+    (555, 3, 64, 16), (2048, 4, 128, 128), (300, 2, 512, 16),
+])
+def test_pq_adc_fused_topk_matches_rows_ref(rng, use_kernel, n, b, S, topk):
+    """Fused LUT→ADC→top-k vs the segmented jnp oracle: identical
+    distances and ids (incl. (+inf, -1) at empty slots) on both the
+    Pallas interpret path and the jnp hot path."""
+    from repro.kernels.pq_adc import (build_luts_ref, pq_adc_fused_topk,
+                                      pq_adc_rows_ref)
+    codes, cb, q, rows = _fused_rows_case(rng, n, 8, b, S)
+    luts = build_luts_ref(cb, q)
+    d_ref = np.asarray(pq_adc_rows_ref(codes, luts, rows))
+    order = np.argsort(d_ref, axis=1, kind="stable")[:, :topk]
+    ref_v = np.take_along_axis(d_ref, order, axis=1)
+    ref_i = np.take_along_axis(np.asarray(rows), order, axis=1)
+    ref_i[~np.isfinite(ref_v)] = -1
+    vals, ids = pq_adc_fused_topk(codes, q, cb, rows, topk,
+                                  use_kernel=use_kernel)
+    fin = np.isfinite(np.asarray(vals))
+    np.testing.assert_array_equal(fin, np.isfinite(ref_v))
+    np.testing.assert_allclose(np.asarray(vals)[fin], ref_v[fin], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ids), ref_i)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_pq_adc_fused_topk_int8_lut_tolerance(rng, use_kernel):
+    """fig10 int8-LUT accuracy level: quantized distances stay within the
+    asymmetric-quantization error bound of the fp32 oracle (per-element
+    max error is scale/2 per subquantizer, fp32 merge adds m of them)."""
+    from repro.kernels.pq_adc import build_luts_ref, pq_adc_fused_topk
+    n, m, b, S, topk = 800, 8, 3, 128, 32
+    codes, cb, q, rows = _fused_rows_case(rng, n, m, b, S)
+    luts = np.asarray(build_luts_ref(cb, q))
+    # bound: sum over m of (per-table scale)/2
+    scale = (luts.max(-1) - luts.min(-1)) / 255.0          # (b, m)
+    bound = (scale / 2).sum(-1).max() + 1e-5
+    v32, i32 = pq_adc_fused_topk(codes, q, cb, rows, topk,
+                                 use_kernel=use_kernel)
+    v8, i8 = pq_adc_fused_topk(codes, q, cb, rows, topk,
+                               use_kernel=use_kernel, lut_int8=True)
+    fin = np.isfinite(np.asarray(v32))
+    np.testing.assert_array_equal(fin, np.isfinite(np.asarray(v8)))
+    assert np.max(np.abs(np.asarray(v8)[fin] - np.asarray(v32)[fin])) \
+        <= bound
+    # near-lossless at these shapes: top-k sets overlap almost entirely
+    for qi in range(b):
+        a = set(np.asarray(i32)[qi][fin[qi]].tolist())
+        c = set(np.asarray(i8)[qi][np.isfinite(np.asarray(v8))[qi]].tolist())
+        inter = len(a & c) / max(len(a), 1)
+        assert inter >= 0.9, (qi, inter)
+
+
 @pytest.mark.parametrize("b,n,d,dtype", [
     (1, 64, 32, jnp.float32), (8, 256, 96, jnp.float32),
     (16, 100, 128, jnp.bfloat16), (128, 1000, 100, jnp.float32),

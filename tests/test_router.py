@@ -33,6 +33,7 @@ import pytest
 
 from repro.core.futures import BackpressureError
 from repro.core.perf_model import DeviceModel, sweep_replicas
+from repro.serve.client import SearchRequest
 from repro.serve.router import POLICIES, ReplicaRouter
 
 
@@ -45,13 +46,14 @@ def test_policy_parity_with_single_replica_run(anns_bundle, policy):
     ks = [1, 3, 5, 7, 10, 2, 4, 6]
     router = ReplicaRouter(b.index, n_replicas=2, policy=policy,
                            threaded=False, max_batch=4, max_wait_s=0.0)
-    futs = [router.submit(q, k=ks[i % len(ks)],
-                          deadline_s=30.0 if i % 2 else None)
+    futs = [router.submit(SearchRequest(
+                query=q, k=ks[i % len(ks)],
+                deadline_s=30.0 if i % 2 else None))
             for i, q in enumerate(b.queries)]
     router.drain()
     for i, (q, f) in enumerate(zip(b.queries, futs)):
         np.testing.assert_array_equal(
-            f.result().result.ids,
+            f.result().ids,
             b.index.query(q, k=ks[i % len(ks)]).ids)
     roll = router.stats_rollup()
     assert sum(roll["routed"]) == len(b.queries)
@@ -66,7 +68,7 @@ def test_round_robin_spreads_evenly(anns_bundle):
     router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
                            threaded=False, max_batch=4, max_wait_s=0.0)
     for q in b.queries[:8]:
-        router.submit(q)
+        router.submit(SearchRequest(query=q))
     assert router.stats_rollup()["routed"] == [4, 4]
     router.drain()
 
@@ -90,7 +92,7 @@ def test_router_stress_8_producers_2_replicas_zero_leaks(anns_bundle):
             while True:
                 try:
                     futures[(tid, i)] = (qi, k, router.submit(
-                        b.queries[qi], k=k))
+                        SearchRequest(query=b.queries[qi], k=k)))
                     break
                 except BackpressureError:
                     time.sleep(1e-3)
@@ -104,7 +106,7 @@ def test_router_stress_8_producers_2_replicas_zero_leaks(anns_bundle):
     results = {}
     for key, (qi, k, fut) in futures.items():
         try:
-            results[key] = (qi, k, fut.result(timeout=120).result.ids)
+            results[key] = (qi, k, fut.result(timeout=120).ids)
         except Exception as exc:              # noqa: BLE001 — fail the test
             errors.append((key, exc))
     assert not errors, errors
@@ -144,13 +146,13 @@ def test_jsq_bypasses_saturated_replica(anns_bundle):
     try:
         # saturate replica 0 below the router (its pump blocks in `gated`,
         # so its live_load stays at 3 for the whole probe)
-        pre = [svc0.submit(b.queries[i]) for i in range(3)]
+        pre = [svc0.submit(SearchRequest(query=b.queries[i])) for i in range(3)]
         assert started.wait(timeout=60)
         assert svc0.live_load() == 3
         routed = []
         for q in b.queries[3:7]:
-            fut = router.submit(q)
-            routed.append((q, fut.result(timeout=60).result.ids))
+            fut = router.submit(SearchRequest(query=q))
+            routed.append((q, fut.result(timeout=60).ids))
     finally:
         release.set()
     for f in pre:
@@ -169,21 +171,21 @@ def test_deadline_policy_spills_to_least_loaded(anns_bundle):
     router = ReplicaRouter(b.index, n_replicas=2, policy="deadline",
                            threaded=False, max_batch=8, max_wait_s=10.0)
     # park 3 live requests on replica 0, below the router
-    pre = [router.replicas[0].submit(q) for q in b.queries[:3]]
+    pre = [router.replicas[0].submit(SearchRequest(query=q)) for q in b.queries[:3]]
     # round-robin cursor is at 0, but the deadline spills to replica 1
-    spilled = router.submit(b.queries[3], deadline_s=30.0)
+    spilled = router.submit(SearchRequest(query=b.queries[3], deadline_s=30.0))
     assert router.stats_rollup()["routed"] == [0, 1]
     assert router.stats_rollup()["deadline_spills"] == 1
     # deadline-free traffic keeps round-robin order: cursor moved to 1,
     # then wraps INTO the loaded replica 0
-    router.submit(b.queries[4])
-    router.submit(b.queries[5])
+    router.submit(SearchRequest(query=b.queries[4]))
+    router.submit(SearchRequest(query=b.queries[5]))
     assert router.stats_rollup()["routed"] == [1, 2]
     router.drain()
-    np.testing.assert_array_equal(spilled.result().result.ids,
+    np.testing.assert_array_equal(spilled.result().ids,
                                   b.index.query(b.queries[3]).ids)
     for q, f in zip(b.queries[:3], pre):
-        np.testing.assert_array_equal(f.result().result.ids,
+        np.testing.assert_array_equal(f.result().ids,
                                       b.index.query(q).ids)
 
 
@@ -194,19 +196,19 @@ def test_router_spills_on_backpressure_then_rejects(anns_bundle):
     router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
                            threaded=False, max_batch=8, max_wait_s=10.0,
                            max_queue=1)
-    a = router.submit(b.queries[0])           # replica 0
-    c = router.submit(b.queries[1])           # replica 1 (rr)
+    a = router.submit(SearchRequest(query=b.queries[0]))           # replica 0
+    c = router.submit(SearchRequest(query=b.queries[1]))           # replica 1 (rr)
     assert router.stats_rollup()["routed"] == [1, 1]
     with pytest.raises(BackpressureError, match="all 2 replicas"):
-        router.submit(b.queries[2])
+        router.submit(SearchRequest(query=b.queries[2]))
     roll = router.stats_rollup()
     assert roll["rejected"] == 1
     router.drain()
     assert a.done() and c.done()
     # slots freed: admission works again
-    d = router.submit(b.queries[2])
+    d = router.submit(SearchRequest(query=b.queries[2]))
     router.drain()
-    np.testing.assert_array_equal(d.result().result.ids,
+    np.testing.assert_array_equal(d.result().ids,
                                   b.index.query(b.queries[2]).ids)
 
 
@@ -218,7 +220,7 @@ def test_router_jsq_qps_model_monotonic_in_replicas(anns_bundle):
     b = anns_bundle
     router = ReplicaRouter(b.index, n_replicas=2, policy="jsq",
                            threaded=True, max_batch=8, max_wait_s=0.001)
-    futs = [router.submit(q) for q in b.queries]
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries]
     for f in futs:
         f.result(timeout=120)
     router.stop()
@@ -240,8 +242,8 @@ def test_updates_propagate_to_every_replica(anns_bundle, fresh_index):
     new_ids = router.insert(b.new_vecs)
     victim = new_ids[0]
     router.delete(np.array([victim]))
-    futs = [router.submit(v) for v in b.new_vecs[:8]]
-    responses = [f.result(timeout=120).result for f in futs]
+    futs = [router.submit(SearchRequest(query=v)) for v in b.new_vecs[:8]]
+    responses = [f.result(timeout=120) for f in futs]
     router.stop()
     assert router.stats_rollup()["routed"] == [4, 4]
     for r in responses:
@@ -278,6 +280,7 @@ from repro.configs.anns_datasets import SIFT_SMALL
 from repro.core.engine import FusionANNSIndex
 from repro.data.synthetic import clustered_vectors
 from repro.launch.mesh import make_test_mesh, split_mesh
+from repro.serve.client import SearchRequest
 from repro.serve.router import ReplicaRouter
 
 rng = np.random.default_rng(0)
@@ -296,8 +299,8 @@ ref = [index.query(q, k=5).ids for q in queries]
 router = ReplicaRouter(index, n_replicas=2, policy="jsq", mesh=mesh,
                        threaded=True, max_batch=4, max_wait_s=0.001)
 shards = [svc.executor._n_shards() for svc in router.replicas]
-futs = [router.submit(q, k=5) for q in queries]
-ids = [f.result(timeout=120).result.ids for f in futs]
+futs = [router.submit(SearchRequest(query=q, k=5)) for q in queries]
+ids = [f.result(timeout=120).ids for f in futs]
 router.stop()
 
 out = {

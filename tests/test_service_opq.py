@@ -11,6 +11,7 @@ from repro.core import opq, pq
 from repro.core.engine import FusionANNSIndex, ground_truth, recall_at_k
 from repro.data.synthetic import clustered_vectors
 from repro.serve.anns_service import BatchingANNSService
+from repro.serve.client import SearchRequest
 
 
 @pytest.fixture(scope="module")
@@ -22,7 +23,7 @@ def small_index(anns_bundle):
 def test_service_batches_and_answers(small_index):
     cfg, data, queries, index = small_index
     svc = BatchingANNSService(index, max_batch=8, max_wait_s=0.0)
-    futs = [svc.submit(q) for q in queries]   # QueryFuture per request
+    futs = [svc.submit(SearchRequest(query=q)) for q in queries]   # QueryFuture per request
     responses = svc.drain()
     assert len(responses) == len(queries)
     gt = ground_truth(data, queries, 10)
@@ -31,7 +32,7 @@ def test_service_batches_and_answers(small_index):
     for f in futs:
         assert f.done()
         assert f.result() is by_rid[f.tag]
-    ids = np.stack([f.result().result.ids for f in futs])
+    ids = np.stack([f.result().ids for f in futs])
     assert recall_at_k(ids, gt, 10) >= 0.9
     assert svc.stats["batches"] >= 2          # 20 queries / window 8
     assert all(r.batch_size <= 8 for r in responses)
@@ -40,7 +41,7 @@ def test_service_batches_and_answers(small_index):
 def test_service_window_semantics(small_index):
     cfg, data, queries, index = small_index
     svc = BatchingANNSService(index, max_batch=64, max_wait_s=10.0)
-    svc.submit(queries[0])
+    svc.submit(SearchRequest(query=queries[0]))
     assert svc.pump() == []                   # window not full, not timed out
     out = svc.pump(force=True)
     assert len(out) == 1

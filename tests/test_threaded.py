@@ -30,6 +30,7 @@ from repro.core import executor as executor_mod
 from repro.core.futures import (BackpressureError, FutureError, BatchTicket,
                                 QueryFuture)
 from repro.serve.anns_service import BatchingANNSService
+from repro.serve.client import SearchRequest
 
 HEAVY_K = 10          # requests with this k get a delayed re-rank (probe)
 
@@ -76,7 +77,7 @@ def test_threaded_stress_parity_out_of_order_shutdown(anns_bundle,
             k = ks[(tid + i) % len(ks)]
             while True:
                 try:
-                    fut = svc.submit(b.queries[qi], k=k)
+                    fut = svc.submit(SearchRequest(query=b.queries[qi], k=k))
                     break
                 except BackpressureError:
                     time.sleep(1e-3)
@@ -93,7 +94,7 @@ def test_threaded_stress_parity_out_of_order_shutdown(anns_bundle,
     results = {}
     for key, (qi, k, fut) in futures.items():
         try:
-            results[key] = (qi, k, fut.result(timeout=120).result.ids)
+            results[key] = (qi, k, fut.result(timeout=120).ids)
         except Exception as exc:              # noqa: BLE001 — fail the test
             errors.append((key, exc))
     assert not errors, errors
@@ -101,8 +102,8 @@ def test_threaded_stress_parity_out_of_order_shutdown(anns_bundle,
     # a deterministic out-of-order wave: one heavy window followed by
     # light ones — the ticker retires the lights while the pump thread is
     # still inside the heavy re-rank
-    wave = [svc.submit(b.queries[0], k=HEAVY_K)]
-    wave += [svc.submit(b.queries[i], k=1) for i in range(1, 8)]
+    wave = [svc.submit(SearchRequest(query=b.queries[0], k=HEAVY_K))]
+    wave += [svc.submit(SearchRequest(query=b.queries[i], k=1)) for i in range(1, 8)]
     for f in wave:
         f.result(timeout=120)
 
@@ -127,16 +128,16 @@ def test_threaded_matches_sync_service(anns_bundle):
     b = anns_bundle
     sync = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.0,
                                scan_window=2, inflight_depth=2)
-    sync_futs = [sync.submit(q) for q in b.queries[:8]]
+    sync_futs = [sync.submit(SearchRequest(query=q)) for q in b.queries[:8]]
     sync.drain()
 
     thr = BatchingANNSService(b.index, max_batch=4, max_wait_s=0.002,
                               scan_window=2, inflight_depth=2,
                               threaded=True)
-    thr_futs = [thr.submit(q) for q in b.queries[:8]]
-    got = [f.result(timeout=120).result.ids for f in thr_futs]
+    thr_futs = [thr.submit(SearchRequest(query=q)) for q in b.queries[:8]]
+    got = [f.result(timeout=120).ids for f in thr_futs]
     thr.stop()
-    ref = [f.result().result.ids for f in sync_futs]
+    ref = [f.result().ids for f in sync_futs]
     np.testing.assert_array_equal(np.stack(ref), np.stack(got))
 
 
@@ -146,12 +147,12 @@ def test_threaded_shutdown_drains(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=4, max_wait_s=5.0,
                               threaded=True)
-    futs = [svc.submit(q) for q in b.queries[:10]]
+    futs = [svc.submit(SearchRequest(query=q)) for q in b.queries[:10]]
     svc.stop()                                # immediate shutdown request
     assert all(f.done() for f in futs)
     assert not svc._queue
     for q, f in zip(b.queries, futs):
-        np.testing.assert_array_equal(f.result().result.ids,
+        np.testing.assert_array_equal(f.result().ids,
                                       b.index.query(q).ids)
 
 
@@ -161,10 +162,10 @@ def test_blocking_future_waits_for_pump_thread(anns_bundle):
     b = anns_bundle
     with BatchingANNSService(b.index, max_batch=64,
                              max_wait_s=0.01) as svc:
-        fut = svc.submit(b.queries[0])
+        fut = svc.submit(SearchRequest(query=b.queries[0]))
         assert fut._driver is None            # nothing to drive: we wait
         resp = fut.result(timeout=120)
-        np.testing.assert_array_equal(resp.result.ids,
+        np.testing.assert_array_equal(resp.ids,
                                       b.index.query(b.queries[0]).ids)
     assert svc._pump_thread is None and svc._ticker_thread is None
 
@@ -173,11 +174,11 @@ def test_threaded_cancel_and_deadline(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=8, max_wait_s=0.01,
                               threaded=True)
-    live = svc.submit(b.queries[0])
-    dead = svc.submit(b.queries[1], deadline_s=0.0)
-    gone = svc.submit(b.queries[2])
+    live = svc.submit(SearchRequest(query=b.queries[0]))
+    dead = svc.submit(SearchRequest(query=b.queries[1], deadline_s=0.0))
+    gone = svc.submit(SearchRequest(query=b.queries[2]))
     assert gone.cancel()
-    np.testing.assert_array_equal(live.result(timeout=120).result.ids,
+    np.testing.assert_array_equal(live.result(timeout=120).ids,
                                   b.index.query(b.queries[0]).ids)
     with pytest.raises(Exception):
         dead.result(timeout=120)
@@ -192,11 +193,11 @@ def test_poison_request_resolves_future_and_replica_survives(anns_bundle):
     b = anns_bundle
     svc = BatchingANNSService(b.index, max_batch=1, max_wait_s=0.001,
                               threaded=True)
-    bad = svc.submit(np.ones(7, np.float32))  # dim mismatch vs the index
+    bad = svc.submit(SearchRequest(query=np.ones(7, np.float32)))  # dim mismatch vs the index
     with pytest.raises(FutureError):
         bad.result(timeout=60)
-    good = svc.submit(b.queries[0])           # replica still alive
-    np.testing.assert_array_equal(good.result(timeout=60).result.ids,
+    good = svc.submit(SearchRequest(query=b.queries[0]))           # replica still alive
+    np.testing.assert_array_equal(good.result(timeout=60).ids,
                                   b.index.query(b.queries[0]).ids)
     assert svc.stats.get("pump_errors", 0) >= 1
     svc.stop()

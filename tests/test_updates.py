@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.engine import ground_truth, recall_at_k
+from repro.serve.client import SearchRequest
 
 
 @pytest.fixture()
@@ -87,14 +88,14 @@ def test_updates_respected_by_batching_service(index_and_data):
     index.delete(np.array([victim]))
     svc = BatchingANNSService(index, max_batch=8, max_wait_s=0.0)
     for v in new_vecs[:8]:
-        svc.submit(v)
+        svc.submit(SearchRequest(query=v))
     responses = svc.drain()
     assert len(responses) == 8
     for r in responses:
-        assert victim not in set(r.result.ids.tolist())
+        assert victim not in set(r.ids.tolist())
     # the other inserted ids are findable through the service
     by_rid = sorted(responses, key=lambda r: r.rid)
-    hits = sum(int(r.result.ids[0] == nid)
+    hits = sum(int(r.ids[0] == nid)
                for r, nid in zip(by_rid[1:8], new_ids[1:8]))
     assert hits >= 5
 
