@@ -222,6 +222,55 @@ def client_async_latency(index: FusionANNSIndex, queries, *,
             "rollup": router.stats_rollup(), "responses": resps}
 
 
+def edge_http_latency(index: FusionANNSIndex, queries, *,
+                      n_replicas: int = 2, policy: str = "jsq",
+                      connections: int = 16, repeat: int = 1,
+                      **svc_kw) -> Dict:
+    """Drive the HTTP edge (serve/edge.py) through a REAL loopback socket:
+    an :class:`~repro.serve.edge.AnnsEdge` on an ephemeral port, fronted
+    by ``connections`` keep-alive HTTP/1.1 connections each working
+    through its share of the workload.  The measured p50/p99 are
+    whole-request HTTP latencies (serialize -> socket -> parse -> auth ->
+    coalesce -> client -> router -> replica -> response bytes), i.e. the
+    full PR-7 front-door overhead on top of the in-process client path —
+    the fig9 ``edge_http`` row."""
+    import asyncio
+    from repro.serve.edge import AnnsEdge, EdgeConfig, HttpConn
+    from repro.serve.stack import make_serving_stack
+    router = make_serving_stack(index, n_replicas=n_replicas,
+                                policy=policy, **svc_kw)
+    work = np.concatenate([queries] * repeat)
+
+    async def drive():
+        async with AnnsEdge(router, EdgeConfig(),
+                            own_backend=True) as edge:
+            conns = [await HttpConn.open(edge.cfg.host, edge.port)
+                     for _ in range(connections)]
+            lat: List[float] = []
+
+            async def pump(ci: int) -> None:
+                for q in work[ci::connections]:
+                    t0 = time.perf_counter()
+                    status, doc = await conns[ci].request(
+                        "POST", "/v1/search", {"query": q.tolist()})
+                    lat.append(time.perf_counter() - t0)
+                    assert status == 200, doc
+
+            t0 = time.perf_counter()
+            await asyncio.gather(*[pump(i) for i in range(connections)])
+            wall = time.perf_counter() - t0
+            _, stats = await conns[0].request("GET", "/v1/stats")
+            for c in conns:
+                await c.aclose()
+            return wall, lat, stats
+
+    wall, lat, stats = asyncio.run(drive())
+    arr = np.asarray(lat)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)), "n": len(arr),
+            "wall_s": wall, "edge_stats": stats}
+
+
 def tune_for_recall(index, queries, gt, target: float,
                     top_ms=(8, 16, 24, 48, 96), top_ns=(128, 256, 512)):
     """Find the cheapest (top_m, top_n) reaching the recall target —

@@ -4,16 +4,17 @@ plus the futures-path rows: the pipelined inflight-depth sweep, the
 serving front-end's p50/p99 through submit()/QueryFuture (PR 2), the
 threaded runtime under 8 producer threads vs the synchronous pump
 (PR 3), the multi-replica JSQ router with the 1/2/4-replica scaling
-model (PR 4), and the asyncio client front door over that router
-(PR 5)."""
+model (PR 4), the asyncio client front door over that router (PR 5),
+and the HTTP edge measured through a real loopback socket (PR 7)."""
 
 import time
 
 import numpy as np
 
 from benchmarks.common import (HW, bundle, client_async_latency,
-                               fusion_demand, router_latency,
-                               service_latency, service_latency_threaded)
+                               edge_http_latency, fusion_demand,
+                               router_latency, service_latency,
+                               service_latency_threaded)
 from repro.core.baselines import DiskAnnLike, RummyLike, SpannLike
 from repro.core.engine import recall_at_k
 from repro.core.perf_model import (QueryDemand, qps_at_threads,
@@ -149,6 +150,28 @@ def _client_async_row(b) -> dict:
     }
 
 
+def _edge_http_row(b) -> dict:
+    """The HTTP front door (PR 7): whole-request latency through a REAL
+    loopback socket — 16 keep-alive connections against an AnnsEdge over
+    a 2-replica JSQ router, with request coalescing on.  The p50 delta
+    vs fig9.sift.client_async is the HTTP+socket overhead itself."""
+    lat = edge_http_latency(
+        b.index, b.queries, n_replicas=2, policy="jsq", connections=16,
+        repeat=2, max_batch=16, max_wait_s=0.0005, scan_window=8,
+        inflight_depth=2)
+    es = lat["edge_stats"]
+    return {
+        "name": "fig9.sift.edge_http",
+        "us_per_call": lat["p50"] * 1e6,
+        "derived": (f"16 conns x {lat['n']} reqs over HTTP: "
+                    f"p50={lat['p50']*1e3:.2f}ms p99={lat['p99']*1e3:.2f}ms "
+                    f"wall={lat['wall_s']*1e3:.0f}ms "
+                    f"ok={es['edge']['ok']} "
+                    f"coalesced={es['client']['coalesced']} "
+                    f"backend_submits={es['client']['submitted']}"),
+    }
+
+
 def run():
     rows = []
     for ds in ("sift", "spacev", "deep"):
@@ -196,6 +219,7 @@ def run():
             rows.append(srow)
             rows.append(_router_jsq_row(b, thr))
             rows.append(_client_async_row(b))
+            rows.append(_edge_http_row(b))
     return rows
 
 

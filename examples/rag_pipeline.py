@@ -14,6 +14,7 @@ from repro.core.engine import FusionANNSIndex
 from repro.data.synthetic import clustered_vectors
 from repro.models import transformer as tfm
 from repro.serve.engine import LMServer, RAGPipeline, ServeConfig
+from repro.serve.stack import make_serving_stack
 
 
 def main() -> None:
@@ -28,12 +29,16 @@ def main() -> None:
     cfg = get_config("qwen3-0.6b", reduced=True)
     params = tfm.init_lm(jax.random.key(0), cfg)
     server = LMServer(params, cfg, ServeConfig(max_len=64))
-    ragp = RAGPipeline(index, server)
+    # retrieval runs through the SAME serving stack as serve_anns.py
+    # (one constructor, one shape): typed requests into a JSQ router
+    router = make_serving_stack(index, n_replicas=2)
+    ragp = RAGPipeline(index, server, router=router)
 
     query_vec = docs[42] + 0.05 * rng.standard_normal(acfg.dim) \
         .astype(np.float32)
     prompt = rng.integers(0, cfg.vocab_size, (1, 6), dtype=np.int32)
     out = ragp.answer(query_vec, prompt, n_tokens=12)
+    router.stop()
     print(f"retrieved docs: {out['retrieved_ids'].tolist()}")
     print(f"retrieval I/Os: {out['retrieval_stats'].ios}, "
           f"h2d bytes: {out['retrieval_stats'].h2d_bytes}")

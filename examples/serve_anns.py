@@ -3,6 +3,17 @@ and serve batched query traffic, reporting recall / simulated-I/O / modelled
 QPS-vs-threads — the full online pipeline of paper §3.
 
     PYTHONPATH=src python examples/serve_anns.py --n 30000 --queries 64
+
+``--edge PORT`` instead serves the index over HTTP (the PR-7 front door:
+tenant auth, request coalescing, elastic autoscaling) and fires a few demo
+requests at itself; add ``--hold`` to keep serving until Ctrl-C so you can
+drive it yourself:
+
+    PYTHONPATH=src python examples/serve_anns.py --edge 8080 --hold
+    curl -s -X POST http://127.0.0.1:8080/v1/search \\
+      -H 'x-api-key: demo-key' -H 'content-type: application/json' \\
+      -d "{\\"query\\": $(python -c 'print([0.1]*96)'), \\"k\\": 10}"
+    curl -s http://127.0.0.1:8080/v1/stats -H 'x-api-key: demo-key'
 """
 
 import argparse
@@ -32,6 +43,11 @@ def main() -> None:
     ap.add_argument("--policy", default="jsq",
                     choices=("round_robin", "jsq", "deadline"),
                     help="ReplicaRouter routing policy")
+    ap.add_argument("--edge", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on this port instead of running "
+                         "the in-process demos (see module docstring)")
+    ap.add_argument("--hold", action="store_true",
+                    help="with --edge: keep serving until Ctrl-C")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(SIFT_SMALL, n_vectors=args.n, dim=args.dim,
@@ -45,6 +61,9 @@ def main() -> None:
     t0 = time.time()
     index = FusionANNSIndex.build(data, cfg)
     print(f"# build {time.time()-t0:.1f}s")
+    if args.edge is not None:
+        serve_edge(index, queries, args)
+        return
     gt = ground_truth(data, queries, 10)
 
     # futures-first path: host traversal + async dispatch of the first
@@ -104,11 +123,9 @@ def main() -> None:
     # host — launch.mesh.split_mesh; on one device the router is a pure
     # concurrency layer)
     from repro.core.perf_model import sweep_replicas
-    from repro.serve.router import ReplicaRouter
-    router = ReplicaRouter(index, n_replicas=args.replicas,
-                           policy=args.policy, threaded=True, max_batch=16,
-                           max_wait_s=0.0005, scan_window=8,
-                           inflight_depth=2)
+    from repro.serve.stack import make_serving_stack
+    router = make_serving_stack(index, n_replicas=args.replicas,
+                                policy=args.policy)
     drive_producers(router)
 
     # the asyncio front door (DESIGN.md §6): ONE event loop drives the
@@ -175,6 +192,57 @@ def main() -> None:
         "modelled_latency_ms": {f"t{t}": round(v["latency_ms"], 2)
                                 for t, v in sweep.items()},
     }, indent=2))
+
+
+def serve_edge(index, queries, args) -> None:
+    """The PR-7 deployment shape: HTTP edge -> coalescing async client ->
+    elastic JSQ router, with the autoscaler re-carving replicas under
+    load.  Fires a few requests at itself so a bare run shows the whole
+    path; ``--hold`` keeps the server up for external curl traffic."""
+    import asyncio
+
+    from repro.serve.autoscaler import ReplicaAutoscaler
+    from repro.serve.edge import (AnnsEdge, EdgeConfig, HttpConn,
+                                  TenantConfig)
+    from repro.serve.stack import make_serving_stack
+
+    router = make_serving_stack(index, n_replicas=args.replicas,
+                                policy=args.policy)
+    scaler = ReplicaAutoscaler(router, min_replicas=1,
+                               max_replicas=2 * args.replicas).start()
+
+    async def run() -> None:
+        cfg = EdgeConfig(port=args.edge,
+                         tenants=[TenantConfig("demo", "demo-key",
+                                               rate_qps=0.0)],
+                         max_inflight=args.inflight)
+        async with AnnsEdge(router, cfg, own_backend=True) as edge:
+            print(f"# edge serving on http://{cfg.host}:{edge.port} "
+                  f"(x-api-key: demo-key)")
+            conn = await HttpConn.open(cfg.host, edge.port)
+            for i, q in enumerate(queries[:4]):
+                status, doc = await conn.request(
+                    "POST", "/v1/search",
+                    {"query": q.tolist(), "k": 10, "tag": i},
+                    {"x-api-key": "demo-key"})
+                print(f"# HTTP {status} tag={doc['tag']} "
+                      f"ids[:5]={doc['ids'][:5]}")
+            _, stats = await conn.request("GET", "/v1/stats")
+            print(json.dumps(stats, indent=2))
+            await conn.aclose()
+            if args.hold:
+                print("# serving until Ctrl-C ...")
+                try:
+                    await asyncio.Event().wait()
+                except (KeyboardInterrupt, asyncio.CancelledError):
+                    pass
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    finally:
+        scaler.stop()
 
 
 if __name__ == "__main__":

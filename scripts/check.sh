@@ -26,6 +26,20 @@
 #                               persists BENCH_kernels.json and fails on
 #                               rows slower than BENCH_REGRESSION_FACTOR
 #                               (default 1.6) x the previous artifact
+#   scripts/check.sh edge-stress
+#                               HTTP edge + autoscaler: auth/rate-limit/
+#                               error codes over a real socket, coalesced
+#                               burst = one backend submit, 200-connection
+#                               soak, deterministic load-ramp (scale up
+#                               under burst, drain on scale-down, zero
+#                               leaked futures at router AND edge level)
+#   scripts/check.sh fig9       throughput/latency figure as a ratchet:
+#                               persists BENCH_fig9.json (incl. the
+#                               edge_http socket row) and fails on rows
+#                               slower than BENCH_REGRESSION_FACTOR x the
+#                               previous artifact.  Scale pinned via
+#                               REPRO_BENCH_N / REPRO_BENCH_QUERIES so
+#                               the committed artifact and CI agree.
 #   scripts/check.sh full       everything, including @slow system tests
 #
 # CHECK_TIMEOUT overrides the guard (seconds).
@@ -61,6 +75,17 @@ case "$MODE" in
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m benchmarks.run --only kernels --persist
     ;;
+  edge-stress)
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_edge.py \
+        tests/test_autoscaler.py tests/test_coalesce.py
+    ;;
+  fig9)
+    export REPRO_BENCH_N="${REPRO_BENCH_N:-12000}"
+    export REPRO_BENCH_QUERIES="${REPRO_BENCH_QUERIES:-32}"
+    exec timeout "${CHECK_TIMEOUT:-900}" \
+      python -m benchmarks.run --only fig9 --persist
+    ;;
   tier1)
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider
@@ -70,7 +95,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|kernels|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|kernels|edge-stress|fig9|full]" >&2
     exit 2
     ;;
 esac

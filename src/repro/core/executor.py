@@ -686,7 +686,8 @@ class QueryExecutor:
                 out._set_exception(exc)
                 return
             resp = response_from_result(res, latency_s=latency, rid=rid,
-                                        tag=request.tag)
+                                        tag=request.tag,
+                                        tenant=request.tenant)
             with self._backend_lock:
                 self._undrained.append(resp)
                 self._latencies.append(latency)

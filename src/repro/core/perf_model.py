@@ -148,3 +148,22 @@ def sweep_replicas(d: QueryDemand, hw: DeviceModel,
                    threads_per_replica: int = 8) -> Dict[int, float]:
     return {n: qps_at_replicas(d, hw, n, threads_per_replica)
             for n in replicas}
+
+
+def max_useful_replicas(d: QueryDemand, hw: DeviceModel, *,
+                        threads_per_replica: int = 8,
+                        min_gain: float = 1.02, cap: int = 64) -> int:
+    """The autoscaler's sanity bound (serve/autoscaler.py): the largest
+    replica count at which adding one more replica still improves modelled
+    QPS by at least ``min_gain``x.  Past this point a SHARED resource
+    (SSD IOPS/bandwidth in this model) binds, so growing the replica set
+    burns devices without serving more traffic — the autoscaler never
+    scales above it no matter what the load signals say."""
+    n = 1
+    prev = qps_at_replicas(d, hw, 1, threads_per_replica)
+    while n < cap:
+        nxt = qps_at_replicas(d, hw, n + 1, threads_per_replica)
+        if prev <= 0 or nxt < prev * min_gain:
+            break
+        prev, n = nxt, n + 1
+    return n

@@ -58,3 +58,35 @@ def split_mesh(mesh, n_replicas: int) -> List[jax.sharding.Mesh]:
         groups = [g.reshape(shape)
                   for g in np.split(devs.reshape(-1), n_replicas)]
     return [jax.sharding.Mesh(g, mesh.axis_names) for g in groups]
+
+
+def recarve_mesh(mesh, n_groups: int) -> List[jax.sharding.Mesh]:
+    """Re-carve ``mesh`` into ``n_groups`` disjoint sub-meshes for an
+    ELASTIC replica set (serve/autoscaler.py): unlike :func:`split_mesh`,
+    ``n_groups`` need not divide the device count — the flattened device
+    list is cut into contiguous near-equal groups (sizes differ by at
+    most one), so the autoscaler can move 8 devices between 3 and 4
+    replicas without a rebuild.  Equal divisions keep :func:`split_mesh`
+    semantics exactly (same grouping, same axis folding).  Every sub-mesh
+    keeps the parent's axis names, so ``corpus``-axis sharding specs stay
+    valid; an executor re-attached to its new group
+    (``QueryExecutor.attach_mesh``) re-places its HBM shard on the next
+    dispatch."""
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    devs = np.asarray(mesh.devices)
+    total = devs.size
+    if n_groups > total:
+        raise ValueError(
+            f"cannot carve {total} device(s) into {n_groups} groups")
+    if total % n_groups == 0:
+        return split_mesh(mesh, n_groups)
+    flat = devs.reshape(-1)
+    base, extra = divmod(total, n_groups)
+    groups, at = [], 0
+    for gi in range(n_groups):
+        size = base + (1 if gi < extra else 0)
+        shape = (1,) * (devs.ndim - 1) + (size,)
+        groups.append(flat[at:at + size].reshape(shape))
+        at += size
+    return [jax.sharding.Mesh(g, mesh.axis_names) for g in groups]

@@ -80,6 +80,7 @@ class Request:
     deadline: Optional[float] = None      # absolute perf_counter time
     future: Optional[QueryFuture] = None
     tag: object = None                    # caller correlation handle
+    tenant: Optional[str] = None          # multi-tenant attribution (edge)
 
 
 class BatchingANNSService:
@@ -229,7 +230,7 @@ class BatchingANNSService:
             self._queue.append(Request(
                 rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
                 deadline=None if deadline_s is None else now + deadline_s,
-                future=fut, tag=tag))
+                future=fut, tag=tag, tenant=request.tenant))
             self._cv.notify_all()
         return fut
 
@@ -423,7 +424,7 @@ class BatchingANNSService:
                 res = f.result()
                 resp = response_from_result(
                     res, latency_s=t_done - r.t_enqueue, rid=r.rid,
-                    tag=r.tag, t_queue_s=t0 - r.t_enqueue,
+                    tag=r.tag, tenant=r.tenant, t_queue_s=t0 - r.t_enqueue,
                     t_serve_s=t_serve, batch_size=len(batch))
                 for field in QUERY_STATS_FIELDS:
                     self.query_stats[field] += getattr(res.stats, field)

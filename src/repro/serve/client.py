@@ -28,6 +28,14 @@ and a routed-future shim).  This module collapses them into one contract
   drives thousands of in-flight requests over N threaded replicas; the
   bridge is ``QueryFuture.add_done_callback`` +
   ``loop.call_soon_threadsafe`` — no thread per request.
+* :func:`coalesce_key` / :class:`RequestCoalescer` — the PR-7 coalescing
+  hooks (DESIGN.md §8): identical in-flight queries (same query bytes AND
+  same effective plan knobs — k, top_n, deadline_s, fused, lut_int8)
+  share ONE backend submit.  Late arrivals get a fresh *attached* future
+  mirroring the leader's via ``add_done_callback``; cancelling an
+  attached waiter never cancels the shared backend future.  The HTTP
+  edge (``serve/edge.py``) turns this on by default; any
+  ``AsyncANNSClient`` can opt in via ``coalescer=``.
 """
 
 from __future__ import annotations
@@ -46,7 +54,8 @@ from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 QueryFuture)
 
 __all__ = ["SearchRequest", "SearchResponse", "Backend", "ANNSClient",
-           "AsyncANNSClient", "as_request"]
+           "AsyncANNSClient", "as_request", "coalesce_key",
+           "RequestCoalescer"]
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +73,8 @@ class SearchRequest:
     top_n: Optional[int] = None         # re-rank candidate budget
     deadline_s: Optional[float] = None  # relative to submit(); None = never
     tag: Any = None                     # caller correlation handle
+    tenant: Optional[str] = None        # multi-tenant attribution (the HTTP
+    #                                     edge stamps this from the API key)
 
     def __post_init__(self):
         self.query = np.asarray(self.query, np.float32)
@@ -85,6 +96,7 @@ class SearchResponse:
     latency_s: float = 0.0
     rid: int = -1
     tag: Any = None
+    tenant: Optional[str] = None     # rides from the request (edge auth)
     t_queue_s: float = 0.0           # time waiting for the batch window
     t_serve_s: float = 0.0           # batch execution time (shared)
     batch_size: int = 1
@@ -93,7 +105,8 @@ class SearchResponse:
 def as_request(query, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               tag: Any = None) -> SearchRequest:
+               tag: Any = None, tenant: Optional[str] = None
+               ) -> SearchRequest:
     """Normalize a raw query vector + kwargs into a :class:`SearchRequest`
     (the front-door convenience used by :class:`ANNSClient` /
     :class:`AsyncANNSClient`; backend ``submit`` methods take the typed
@@ -103,21 +116,22 @@ def as_request(query, k: Optional[int] = None, *,
     if isinstance(query, SearchRequest):
         over = {name: v for name, v in (
             ("k", k), ("top_n", top_n), ("deadline_s", deadline_s),
-            ("tag", tag)) if v is not None}
+            ("tag", tag), ("tenant", tenant)) if v is not None}
         return dataclasses.replace(query, **over) if over else query
     return SearchRequest(query=query, k=k, top_n=top_n,
-                         deadline_s=deadline_s, tag=tag)
+                         deadline_s=deadline_s, tag=tag, tenant=tenant)
 
 
 def response_from_result(res: QueryResult, *, latency_s: float,
                          rid: int = -1, tag: Any = None,
+                         tenant: Optional[str] = None,
                          t_queue_s: float = 0.0, t_serve_s: float = 0.0,
                          batch_size: int = 1) -> SearchResponse:
     """Wrap an executor :class:`QueryResult` in the uniform response."""
     return SearchResponse(ids=res.ids, dists=res.dists, stats=res.stats,
                           latency_s=latency_s, rid=rid, tag=tag,
-                          t_queue_s=t_queue_s, t_serve_s=t_serve_s,
-                          batch_size=batch_size)
+                          tenant=tenant, t_queue_s=t_queue_s,
+                          t_serve_s=t_serve_s, batch_size=batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +160,141 @@ class Backend(Protocol):
     def latency_percentiles(self) -> Dict[str, float]: ...        # noqa: E704
 
     def stats_rollup(self) -> Dict[str, object]: ...              # noqa: E704
+
+
+# ---------------------------------------------------------------------------
+# Request coalescing (PR 7 — DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def coalesce_key(request: SearchRequest, *, fused: bool = False,
+                 lut_int8: bool = False) -> tuple:
+    """Identity of the backend work a request triggers: the query bytes
+    plus EVERY effective plan knob — ``k``/``top_n``/``deadline_s`` from
+    the request and the serving stack's ``fused``/``lut_int8`` accuracy
+    knobs.  Two requests may share one backend submit iff their keys are
+    equal; anything that could change the returned ids (or the latency
+    contract, for deadlines) keys separately.  ``tag``/``tenant`` are
+    correlation metadata, NOT part of the key — attached waiters get their
+    own tag/tenant stamped onto the shared response."""
+    q = np.ascontiguousarray(np.asarray(request.query, np.float32))
+    return (q.tobytes(), q.shape, request.k, request.top_n,
+            request.deadline_s, bool(fused), bool(lut_int8))
+
+
+class RequestCoalescer:
+    """Share one backend submit among identical in-flight requests.
+
+    The first arrival for a key is the LEADER: ``claim()`` hands back the
+    key, the caller performs the real (possibly awaited) backend submit,
+    then ``publish()`` binds the backend future.  Late arrivals for the
+    same key get an ATTACHED future — a fresh :class:`QueryFuture`
+    mirroring the leader's via ``add_done_callback``, with their own
+    ``tag``/``tenant`` stamped onto the shared :class:`SearchResponse`.
+    Cancelling an attached waiter flips only that waiter; the shared
+    backend future (and every other waiter) is untouched.  When the
+    leader's future resolves the key retires, so a later identical
+    request starts a fresh submit (coalescing is an IN-FLIGHT dedup, not
+    a response cache).
+
+    Thread-safe: the edge's event loop, replica pump threads (resolving
+    leaders), and sync callers may all touch one coalescer."""
+
+    def __init__(self, *, fused: bool = False, lut_int8: bool = False):
+        self.fused = fused
+        self.lut_int8 = lut_int8
+        self._lock = threading.Lock()
+        # key -> [master future or None (leader mid-admission), waiters]
+        self._inflight: Dict[tuple, list] = {}
+        self.stats: Dict[str, int] = {"leaders": 0, "attached": 0}
+
+    def key(self, request: SearchRequest) -> tuple:
+        return coalesce_key(request, fused=self.fused,
+                            lut_int8=self.lut_int8)
+
+    def live(self) -> int:
+        """Keys currently in flight (leader submitted or mid-admission)."""
+        with self._lock:
+            return len(self._inflight)
+
+    def claim(self, request: SearchRequest):
+        """Returns ``(True, key)`` when the caller must perform the real
+        backend submit (leader; follow with ``publish``/``abandon``), or
+        ``(False, attached_future)`` when an identical request is already
+        in flight."""
+        k = self.key(request)
+        with self._lock:
+            entry = self._inflight.get(k)
+            if entry is not None:
+                master = entry[0]
+                if master is None or not master.done():
+                    self.stats["attached"] += 1
+                    fut = self._make_attached(request)
+                    if master is None:       # leader still mid-admission
+                        entry[1].append((fut, request))
+                    else:
+                        self._mirror(master, fut, request)
+                    return False, fut
+                # leader resolved between retire and this claim: recycle
+                del self._inflight[k]
+            self._inflight[k] = [None, []]
+            self.stats["leaders"] += 1
+            return True, k
+
+    def publish(self, key: tuple, master: QueryFuture) -> None:
+        """Leader's backend submit succeeded: bind the shared future and
+        wire every waiter that queued up during admission."""
+        with self._lock:
+            entry = self._inflight.get(key)
+            if entry is None:
+                return
+            entry[0] = master
+            waiters, entry[1] = entry[1], []
+        for fut, req in waiters:
+            self._mirror(master, fut, req)
+        master.add_done_callback(lambda _f: self._retire(key, master))
+
+    def abandon(self, key: tuple, exc: Optional[BaseException]) -> None:
+        """Leader's submit failed (client closed, admission error): fail
+        any queued waiters and free the key for the next arrival."""
+        with self._lock:
+            entry = self._inflight.pop(key, None)
+        if entry is None:
+            return
+        for fut, _req in entry[1]:
+            if exc is not None:
+                fut._set_exception(exc)
+            else:
+                fut.cancel()
+
+    # ------------------------------------------------------------- internal
+    def _retire(self, key: tuple, master: QueryFuture) -> None:
+        with self._lock:
+            entry = self._inflight.get(key)
+            if entry is not None and entry[0] is master:
+                del self._inflight[key]
+
+    @staticmethod
+    def _make_attached(request: SearchRequest) -> QueryFuture:
+        # blocking=True: resolution always comes from the leader's resolver
+        # thread via the mirror callback — there is no driver to run
+        return QueryFuture(tag=request.tag, blocking=True)
+
+    @staticmethod
+    def _mirror(master: QueryFuture, fut: QueryFuture,
+                request: SearchRequest) -> None:
+        def _copy(f: QueryFuture):
+            if fut.done():                  # waiter cancelled on its own
+                return
+            try:
+                resp = f.result()
+            except BaseException as exc:    # noqa: BLE001 — incl. Cancelled
+                fut._set_exception(exc)
+                return
+            if isinstance(resp, SearchResponse):
+                resp = dataclasses.replace(resp, tag=request.tag,
+                                           tenant=request.tenant)
+            fut._set_result(resp)
+        master.add_done_callback(_copy)
 
 
 # ---------------------------------------------------------------------------
@@ -269,16 +418,21 @@ class AsyncANNSClient:
     """
 
     def __init__(self, backend: Backend, *, max_inflight: int = 256,
-                 admission_poll_s: float = 1e-3):
+                 admission_poll_s: float = 1e-3,
+                 coalescer: Optional[RequestCoalescer] = None):
         self.backend = backend
         self.max_inflight = max_inflight
         self.admission_poll_s = admission_poll_s
+        # optional in-flight dedup of identical requests (DESIGN.md §8):
+        # followers attach to the leader's backend future instead of
+        # consuming a backend queue slot
+        self.coalescer = coalescer
         self._sem = asyncio.Semaphore(max_inflight)
         self._inflight: set = set()        # bridged asyncio futures
         self._drive_lock = threading.Lock()  # serializes sync-harness drives
         self.stats: Dict[str, int] = {
             "submitted": 0, "completed": 0, "admission_waits": 0,
-            "deadline_timeouts": 0}
+            "deadline_timeouts": 0, "coalesced": 0}
         self._closed = False
 
     # ------------------------------------------------------------- plumbing
@@ -335,6 +489,26 @@ class AsyncANNSClient:
             self.stats["submitted"] += 1
             return fut
 
+    async def _submit_or_attach(self, req: SearchRequest) -> QueryFuture:
+        """The coalescing hook: a request identical to one already in
+        flight (same :func:`coalesce_key`) attaches to the leader's
+        backend future instead of submitting — ONE backend submit serves
+        the whole duplicate burst.  Cancelling an attached future (the
+        deadline/teardown paths above) never cancels the shared one."""
+        if self.coalescer is None:
+            return await self._admit(req)
+        leader, handle = self.coalescer.claim(req)
+        if not leader:
+            self.stats["coalesced"] += 1
+            return handle
+        try:
+            qfut = await self._admit(req)
+        except BaseException as exc:       # noqa: BLE001 — incl. Cancelled
+            self.coalescer.abandon(handle, exc)
+            raise
+        self.coalescer.publish(handle, qfut)
+        return qfut
+
     # ---------------------------------------------------------------- public
     async def search(self, request, k: Optional[int] = None, *,
                      top_n: Optional[int] = None,
@@ -370,7 +544,7 @@ class AsyncANNSClient:
                             ) -> SearchResponse:
         loop = asyncio.get_running_loop()
         async with self._sem:
-            qfut = await self._admit(req)
+            qfut = await self._submit_or_attach(req)
             if holder is not None:
                 holder["qfut"] = qfut
             afut = self._bridge(qfut, loop)

@@ -6,19 +6,30 @@ a single device group busy.  Serving heavy traffic from one box is then a
 ROUTING problem — saturate the whole device tier with many concurrent
 query streams.  :class:`ReplicaRouter` fronts N such replicas:
 
-* **one mesh, disjoint device groups** — ``launch.mesh.split_mesh`` carves
-  the shared mesh into N sub-meshes; each replica's
+* **one mesh, disjoint device groups** — ``launch.mesh.recarve_mesh``
+  carves the shared mesh into N sub-meshes; each replica's
   :class:`~repro.core.executor.QueryExecutor` row-shards the PQ corpus
   over ITS group only (``core.distributed`` commits every scan operand to
   the sub-mesh), so concurrent per-replica ADC scans never contend for a
   chip.  Without a mesh (tests, 1-device hosts) every replica runs
   unsharded on the default device and the router is a pure concurrency
   layer.
+* **ELASTIC replica set** — ``add_replica()`` / ``remove_replica()`` grow
+  and shrink the set at runtime (the autoscaler's actuators,
+  serve/autoscaler.py).  On every resize the parent mesh is re-carved
+  into near-equal groups and each surviving replica's executor is
+  re-attached to its new group (``QueryExecutor.attach_mesh`` — the HBM
+  shard re-places on the next dispatch).  Removal drains: the victim is
+  popped from the routing set first, then its pump serves every queued
+  request, so zero futures leak.  Each replica ever created owns a stable
+  SLOT id; ``stats["routed"]`` is indexed by slot and only grows, so the
+  accounting invariant ``submitted == sum(routed) + rejected`` survives
+  any scaling history.
 * **same futures-first surface** — ``submit() -> QueryFuture`` with
   ``k``/``top_n``/``deadline_s``, backpressure (a submission rejected by
   every replica raises :class:`BackpressureError`), graceful fan-out
   ``stop()`` drain, aggregated ``latency_percentiles()`` and a
-  ``QueryStats`` rollup.
+  ``QueryStats`` rollup (both include retired replicas' history).
 * **pluggable policies** —
 
   ============= =========================================================
@@ -35,7 +46,8 @@ query streams.  :class:`ReplicaRouter` fronts N such replicas:
 
   Every policy also SPILLS on backpressure: when the chosen replica's
   queue is full the router tries the remaining replicas (least-loaded
-  first) before rejecting.
+  first) before rejecting.  A spill chain that exhausts EVERY replica
+  counts as ``spill_exhausted`` and rejects.
 * **update propagation** — replicas share ONE index object (posting
   lists, tombstones, SSD tier, the ``codes`` binding), so
   ``router.insert()/delete()`` are visible to every replica: an insert
@@ -52,6 +64,7 @@ single-replica ``run()`` under every policy (tests/test_router.py).
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -66,9 +79,14 @@ __all__ = ["ReplicaRouter", "POLICIES"]
 
 POLICIES = ("round_robin", "jsq", "deadline")
 
+# retired-replica latency history kept for percentile aggregation (bounded:
+# removal must not leak memory over a long autoscaling life)
+_RETIRED_LATENCIES_MAX = 4096
+
 
 class ReplicaRouter:
-    """Fronts N serving replicas with one futures-first ``submit()``."""
+    """Fronts an elastic set of serving replicas with one futures-first
+    ``submit()``."""
 
     def __init__(self, index: FusionANNSIndex, *, n_replicas: int = 2,
                  policy: str = "jsq", mesh=None, threaded: bool = True,
@@ -79,17 +97,28 @@ class ReplicaRouter:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         self.index = index
         self.policy = policy
+        self.parent_mesh = mesh
         if mesh is not None:
-            from repro.launch.mesh import split_mesh
-            self.meshes = split_mesh(mesh, n_replicas)
+            from repro.launch.mesh import recarve_mesh
+            self.meshes = recarve_mesh(mesh, n_replicas)
         else:
             self.meshes = [None] * n_replicas
+        # per-replica service knobs, kept so elastically added replicas are
+        # configured identically to the founding set
+        self._svc_kw = dict(svc_kw)
+        # surfaced for coalescing keys (serve/edge.py): these two plan knobs
+        # change result ids, so the edge must fold them into the dedup key
+        self.fused = bool(svc_kw.get("fused", False))
+        self.lut_int8 = bool(svc_kw.get("lut_int8", False))
         # each replica: own executor (own sub-mesh, own dispatch lock, own
         # HBM placement) wrapped by its own pump/ticker service
         self.replicas: List[BatchingANNSService] = [
             BatchingANNSService(index, executor=index.make_executor(m),
                                 threaded=threaded, **svc_kw)
             for m in self.meshes]
+        # stable slot ids, parallel to ``replicas``; slots are never reused
+        self.replica_ids: List[int] = list(range(n_replicas))
+        self._next_slot = n_replicas
         # mirrors the replicas' harness (clients read this to pick their
         # backpressure strategy: sleep-retry vs pump-on-behalf)
         self.threaded = threaded
@@ -97,7 +126,15 @@ class ReplicaRouter:
         self._rr = 0                       # round-robin cursor
         self.stats: Dict[str, object] = {
             "submitted": 0, "rejected": 0, "spills": 0,
-            "deadline_spills": 0, "routed": [0] * n_replicas}
+            "deadline_spills": 0, "spill_exhausted": 0,
+            "scale_ups": 0, "scale_downs": 0,
+            "routed": [0] * n_replicas}
+        # removed replicas' history — percentiles and the QueryStats rollup
+        # must describe the whole traffic stream, not just survivors
+        self._retired_latencies: deque = deque(maxlen=_RETIRED_LATENCIES_MAX)
+        self._retired_query_stats = dict.fromkeys(QUERY_STATS_FIELDS, 0)
+        self._retired = {"requests": 0, "batches": 0, "served": 0,
+                         "replicas": []}
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ReplicaRouter":
@@ -109,7 +146,9 @@ class ReplicaRouter:
     def stop(self) -> "ReplicaRouter":
         """Graceful fan-out drain: every replica's pump thread serves its
         remaining queue (zero pending futures survive), in parallel."""
-        ts = [threading.Thread(target=r.stop) for r in self.replicas]
+        with self._lock:
+            reps = list(self.replicas)
+        ts = [threading.Thread(target=r.stop) for r in reps]
         for t in ts:
             t.start()
         for t in ts:
@@ -123,23 +162,123 @@ class ReplicaRouter:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    # -------------------------------------------------------------- scaling
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def _recarve_locked(self) -> None:
+        """Re-attach every replica's executor to its share of a fresh carve
+        of the parent mesh (no-op without one).  Caller holds ``_lock``."""
+        if self.parent_mesh is None:
+            self.meshes = [None] * len(self.replicas)
+            return
+        from repro.launch.mesh import recarve_mesh
+        self.meshes = recarve_mesh(self.parent_mesh, len(self.replicas))
+        for svc, m in zip(self.replicas, self.meshes):
+            svc.executor.attach_mesh(m)
+
+    def add_replica(self) -> int:
+        """Grow the replica set by one: re-carve the parent mesh over
+        ``n+1`` groups, re-attach the survivors, and start a fresh replica
+        (same service knobs as the founding set) on the last group.
+        Returns the new replica's stable slot id."""
+        new = BatchingANNSService(
+            self.index, executor=self.index.make_executor(None),
+            threaded=False, **self._svc_kw)
+        with self._lock:
+            slot = self._next_slot
+            self._next_slot += 1
+            self.replicas.append(new)
+            self.replica_ids.append(slot)
+            self.stats["routed"].append(0)
+            self.stats["scale_ups"] += 1
+            self._recarve_locked()
+        if self.threaded:
+            new.start()
+        return slot
+
+    def remove_replica(self, slot: Optional[int] = None, *,
+                       drain: bool = True) -> int:
+        """Shrink by one: pop the victim from the routing set (new traffic
+        stops landing on it immediately), re-carve the survivors over the
+        freed devices, then stop the victim — its pump drains every queued
+        request before exiting, so zero futures leak.  ``slot`` picks the
+        victim (default: the least-loaded replica).  Returns the removed
+        slot id.  ``drain=False`` skips the stop (the caller owns it)."""
+        with self._lock:
+            if len(self.replicas) <= 1:
+                raise ValueError("cannot remove the last replica")
+            if slot is None:
+                loads = [r.live_load() for r in self.replicas]
+                i = min(range(len(loads)), key=lambda j: (loads[j], j))
+            else:
+                try:
+                    i = self.replica_ids.index(slot)
+                except ValueError:
+                    raise ValueError(f"no replica with slot id {slot}") \
+                        from None
+            victim = self.replicas.pop(i)
+            slot = self.replica_ids.pop(i)
+            self.stats["scale_downs"] += 1
+            # keep the round-robin cursor in range after the shrink
+            self._rr %= len(self.replicas)
+            self._recarve_locked()
+        if drain:
+            victim.stop()        # pump serves its remaining queue
+        # fold the victim's history into the retired accumulators so
+        # percentiles/rollups keep describing the full traffic stream
+        with victim._lock:
+            lats = list(victim.latencies_s)
+            vstats = dict(victim.stats)
+            vqs = dict(victim.query_stats)
+        with self._lock:
+            self._retired_latencies.extend(lats)
+            self._retired["requests"] += int(vstats["requests"])
+            self._retired["batches"] += int(vstats["batches"])
+            self._retired["served"] += int(vqs["served"])
+            self._retired["replicas"].append({"slot": slot, **vstats})
+            for f in QUERY_STATS_FIELDS:
+                self._retired_query_stats[f] += vqs[f]
+        return slot
+
+    def scaling_signals(self) -> Dict[str, object]:
+        """One coherent sample of everything the autoscaler keys on:
+        aggregate + per-replica live load, the spill/reject counters
+        (demand the current set could not place), and queue-latency
+        percentiles over the whole stream."""
+        with self._lock:
+            reps = list(self.replicas)
+            spills = int(self.stats["spills"])
+            exhausted = int(self.stats["spill_exhausted"])
+            rejected = int(self.stats["rejected"])
+            submitted = int(self.stats["submitted"])
+        loads = [r.live_load() for r in reps]
+        pct = self.latency_percentiles()
+        return {"n_replicas": len(reps), "live_load": sum(loads),
+                "per_replica_load": loads, "submitted": submitted,
+                "spills": spills, "spill_exhausted": exhausted,
+                "rejected": rejected, "p50": pct["p50"], "p99": pct["p99"],
+                "latency_n": pct["n"]}
+
     # --------------------------------------------------------------- routing
-    def _route_order(self, deadline_s: Optional[float]
+    def _route_order(self, replicas: Sequence[BatchingANNSService],
+                     deadline_s: Optional[float]
                      ) -> tuple[Sequence[int], Optional[int]]:
         """Replica indices to try (primary choice first) plus the
         deadline-spill target, if this request jumped the round-robin
         line.  Fallbacks (the backpressure spill path) go least-loaded
         first."""
-        n = len(self.replicas)
+        n = len(replicas)
         if n == 1:
             return (0,), None
-        loads = [r.live_load() for r in self.replicas]
+        loads = [r.live_load() for r in replicas]
         by_load = sorted(range(n), key=lambda i: (loads[i], i))
         if self.policy == "jsq":
             return by_load, None
         with self._lock:
-            start = self._rr
-            self._rr = (self._rr + 1) % n
+            start = self._rr % n
+            self._rr = (start + 1) % n
         if self.policy == "deadline" and deadline_s is not None:
             least = by_load[0]
             if loads[least] < loads[start]:
@@ -158,24 +297,31 @@ class ReplicaRouter:
         to a :class:`~repro.serve.client.SearchResponse` out).  Tries
         the policy's choice first, spills across the remaining replicas on
         backpressure, and raises :class:`BackpressureError` only when
-        EVERY replica's queue is full."""
+        EVERY replica's queue is full.  Every call is counted:
+        ``submitted == sum(routed) + rejected`` always holds."""
         if not isinstance(request, SearchRequest):
             raise TypeError(
                 "submit() takes a SearchRequest; wrap raw query vectors "
                 "with as_request(...) or use ANNSClient "
                 f"(got {type(request).__name__})")
         req = request
-        order, dl_target = self._route_order(req.deadline_s)
+        # snapshot the replica set: a concurrent remove_replica() must not
+        # shift indices under the routing loop (the victim still drains any
+        # request that raced onto it, so nothing leaks either way)
+        with self._lock:
+            replicas = list(self.replicas)
+            slots = list(self.replica_ids)
+            self.stats["submitted"] += 1
+        order, dl_target = self._route_order(replicas, req.deadline_s)
         last: Optional[BackpressureError] = None
         for pos, i in enumerate(order):
             try:
-                fut = self.replicas[i].submit(req)
+                fut = replicas[i].submit(req)
             except BackpressureError as exc:
                 last = exc
                 continue
             with self._lock:
-                self.stats["submitted"] += 1
-                self.stats["routed"][i] += 1
+                self.stats["routed"][slots[i]] += 1
                 if pos:
                     self.stats["spills"] += 1
                 # counted only when the request actually LANDED on the
@@ -185,8 +331,11 @@ class ReplicaRouter:
             return fut
         with self._lock:
             self.stats["rejected"] += 1
+            if len(order) > 1:
+                # the spill chain visited every replica and none had room
+                self.stats["spill_exhausted"] += 1
         raise BackpressureError(
-            f"all {len(self.replicas)} replicas backpressured") from last
+            f"all {len(replicas)} replicas backpressured") from last
 
     def drain(self) -> List["SearchResponse"]:
         """Serve everything currently queued on every replica; returns the
@@ -194,19 +343,26 @@ class ReplicaRouter:
         unified Backend drain contract — pre-PR-5 this returned None while
         the service returned its responses)."""
         out: List[SearchResponse] = []
-        for r in self.replicas:
+        with self._lock:
+            reps = list(self.replicas)
+        for r in reps:
             out.extend(r.drain())
         return out
 
     # ----------------------------------------------------------- aggregates
     def live_load(self) -> int:
-        return sum(r.live_load() for r in self.replicas)
+        with self._lock:
+            reps = list(self.replicas)
+        return sum(r.live_load() for r in reps)
 
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 over ALL replicas' per-request enqueue->resolve
-        latencies (one traffic stream, N servers)."""
-        lats = []
-        for r in self.replicas:
+        latencies (one traffic stream, N servers — retired replicas'
+        recent history included)."""
+        with self._lock:
+            reps = list(self.replicas)
+            lats = list(self._retired_latencies)
+        for r in reps:
             with r._lock:
                 lats.extend(r.latencies_s)
         if not lats:
@@ -217,11 +373,16 @@ class ReplicaRouter:
 
     def stats_rollup(self) -> Dict[str, object]:
         """Router counters + per-replica service stats + the summed
-        ``QueryStats`` counters of every response served anywhere."""
-        totals = dict.fromkeys(QUERY_STATS_FIELDS, 0)
-        per_replica = []
-        requests = batches = served = 0
-        for r in self.replicas:
+        ``QueryStats`` counters of every response served anywhere —
+        including on replicas that have since been removed."""
+        with self._lock:
+            reps = list(self.replicas)
+            totals = dict(self._retired_query_stats)
+            requests = self._retired["requests"]
+            batches = self._retired["batches"]
+            served = self._retired["served"]
+            per_replica = [dict(d) for d in self._retired["replicas"]]
+        for r in reps:
             with r._lock:
                 per_replica.append(dict(r.stats))
                 requests += int(r.stats["requests"])

@@ -1,0 +1,278 @@
+"""Elastic replica autoscaling (PR 7 — serve/autoscaler.py).
+
+Everything here is DETERMINISTIC: the control loop is driven by manual
+``tick()`` calls on an injectable fake clock, and replica serve paths are
+gated on events (the test_router saturation pattern), so load levels and
+cooldown windows are exact, never scheduler luck.
+
+Contract under test:
+* per-replica load above ``high_water`` (or a spill/reject delta, or p99
+  over bound) scales up; cooldowns and ``[min, max]`` bounds are honored;
+* scale-down needs ``down_ticks`` CONSECUTIVE calm samples outside the
+  cooldown window — a single calm tick (or calm right after a resize)
+  never flaps;
+* the analytic model's ``max_useful_replicas`` caps growth once measured
+  demand exists;
+* the full load-ramp: a burst doubles demand -> the autoscaler grows
+  within its cooldown budget and the NEW replica serves traffic while
+  the old one is still wedged; calm traffic -> scale-down drains the
+  victim with zero leaked futures and balanced router books.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.futures import BackpressureError
+from repro.serve.autoscaler import AutoscalerConfig, ReplicaAutoscaler
+from repro.serve.client import SearchRequest
+from repro.serve.router import ReplicaRouter
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _gate(svc):
+    """Wedge one replica's serve path on an event; returns (started,
+    release)."""
+    started, release = threading.Event(), threading.Event()
+    orig = svc._serve_batch_inner
+
+    def gated(batch):
+        started.set()
+        assert release.wait(timeout=60)
+        return orig(batch)
+
+    svc._serve_batch_inner = gated
+    return started, release
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="min_replicas"):
+        AutoscalerConfig(min_replicas=0)
+    with pytest.raises(ValueError, match="max_replicas"):
+        AutoscalerConfig(min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError, match="low_water"):
+        AutoscalerConfig(low_water=8.0, high_water=8.0)
+
+
+def test_scale_up_on_load_with_cooldown_and_max(anns_bundle):
+    """High per-replica load scales up once per cooldown window, never
+    past max_replicas.  Every replica is wedged as it appears, so load
+    numbers are exact at each tick."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=1, policy="jsq",
+                           threaded=True, max_batch=8, max_wait_s=0.001)
+    started, release = _gate(router.replicas[0])
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(min_replicas=1, max_replicas=3,
+                                 high_water=2.0, low_water=0.5,
+                                 scale_up_cooldown_s=5.0,
+                                 scale_down_cooldown_s=5.0),
+        clock=clk)
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries[:4]]
+    releases = [release]
+    assert started.wait(timeout=60)
+    assert router.live_load() == 4               # wedged: load is exact
+    assert asc.tick() == "scale_up"              # 4/1 > 2.0
+    assert router.n_replicas == 2
+    s2, r2 = _gate(router.replicas[1])
+    releases.append(r2)
+    clk.t = 1.0
+    assert asc.tick() is None                    # inside the cooldown
+    # wedge 3 more onto the fresh replica: 7/2 = 3.5 > 2.0
+    futs += [router.submit(SearchRequest(query=q)) for q in b.queries[4:7]]
+    assert s2.wait(timeout=60)
+    clk.t = 6.0
+    assert asc.tick() == "scale_up"
+    assert router.n_replicas == 3
+    s3, r3 = _gate(router.replicas[2])
+    releases.append(r3)
+    futs += [router.submit(SearchRequest(query=q))
+             for q in b.queries[7:14]]
+    assert s3.wait(timeout=60)
+    clk.t = 30.0                                 # at max: capped, no growth
+    assert asc.tick() is None
+    assert asc.stats["capped_by_max"] >= 1
+    assert router.n_replicas == 3
+    for r in releases:
+        r.set()
+    for f in futs:
+        f.result(timeout=120)
+    router.stop()
+
+
+def test_spill_delta_triggers_scale_up(anns_bundle):
+    """Rejected/spilled demand scales up even when live load looks calm
+    (the queue was FULL, not busy)."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=1, policy="round_robin",
+                           threaded=False, max_batch=8, max_wait_s=10.0,
+                           max_queue=1)
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(max_replicas=2, high_water=8.0,
+                                 low_water=0.5), clock=clk)
+    router.submit(SearchRequest(query=b.queries[0]))
+    with pytest.raises(BackpressureError):
+        router.submit(SearchRequest(query=b.queries[1]))
+    assert asc.tick() == "scale_up"              # reject delta, load calm
+    assert router.n_replicas == 2
+    # the SAME counters do not re-trigger: deltas, not absolutes
+    clk.t = 100.0
+    assert asc.tick() is None
+    router.drain()
+    router.stop()
+
+
+def test_scale_down_needs_consecutive_calm_ticks(anns_bundle):
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=2, policy="jsq",
+                           threaded=False, max_batch=4, max_wait_s=0.0)
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                 high_water=4.0, low_water=1.0,
+                                 down_ticks=3, scale_down_cooldown_s=2.0),
+        clock=clk)
+    for i in range(2):
+        clk.t = float(i)
+        assert asc.tick() is None                # calm ticks 1, 2
+    clk.t = 2.5
+    assert asc.tick() == "scale_down"            # 3rd consecutive calm
+    assert router.n_replicas == 1
+    clk.t = 2.6
+    for _ in range(3):
+        assert asc.tick() is None                # at min_replicas: floor
+    assert router.n_replicas == 1
+    router.stop()
+
+
+def test_no_flap_after_scale_up(anns_bundle):
+    """Calm ticks right after a scale-up sit inside the down-cooldown, so
+    the fresh replica is never immediately torn back down."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=1, policy="jsq",
+                           threaded=True, max_batch=4, max_wait_s=0.001)
+    started, release = _gate(router.replicas[0])
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(min_replicas=1, max_replicas=2,
+                                 high_water=1.5, low_water=1.0,
+                                 down_ticks=1, scale_down_cooldown_s=50.0),
+        clock=clk)
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries[:3]]
+    assert started.wait(timeout=60)
+    assert asc.tick() == "scale_up"
+    release.set()
+    for f in futs:
+        f.result(timeout=120)
+    for t in (1.0, 2.0, 3.0):                    # calm, but inside cooldown
+        clk.t = t
+        assert asc.tick() is None
+    assert router.n_replicas == 2
+    clk.t = 60.0                                  # cooldown over: now shrink
+    assert asc.tick() == "scale_down"
+    router.stop()
+
+
+def test_model_cap_blocks_useless_growth(anns_bundle):
+    """With measured demand and an impossible min_gain, the analytic model
+    says extra replicas buy nothing — overload stops scaling."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=1, policy="jsq",
+                           threaded=False, max_batch=4, max_wait_s=0.0)
+    # serve real traffic first so measured_demand() exists
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries[:4]]
+    router.drain()
+    for f in futs:
+        f.result()
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(max_replicas=4, high_water=0.5,
+                                 low_water=0.1, model_min_gain=1e9),
+        clock=clk)
+    router.submit(SearchRequest(query=b.queries[4]))   # load 1 > 0.5
+    assert asc.tick() is None
+    assert asc.stats["capped_by_model"] == 1
+    assert router.n_replicas == 1
+    router.drain()
+    router.stop()
+
+
+def test_background_thread_start_stop(anns_bundle):
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=1, policy="jsq",
+                           threaded=False, max_batch=4, max_wait_s=0.0)
+    asc = ReplicaAutoscaler(router, AutoscalerConfig(interval_s=0.005))
+    with asc:
+        deadline = threading.Event()
+        deadline.wait(0.1)
+    assert asc.stats["ticks"] >= 2
+    assert asc._thread is None
+    router.stop()
+
+
+# ------------------------------------------------------- the full ramp
+
+def test_load_ramp_grows_then_drains_deterministically(anns_bundle):
+    """The PR-7 acceptance ramp at router level: a wedged replica + a
+    doubled burst -> scale-up within one cooldown window; the NEW replica
+    serves the second burst while the old one is still wedged; calm ->
+    scale-down drains the victim with zero leaked futures and balanced
+    books."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = ReplicaRouter(b.index, n_replicas=1, policy="jsq",
+                           threaded=True, max_batch=4, max_wait_s=0.001)
+    started, release = _gate(router.replicas[0])
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(min_replicas=1, max_replicas=2,
+                                 high_water=3.0, low_water=1.0,
+                                 down_ticks=2, scale_up_cooldown_s=5.0,
+                                 scale_down_cooldown_s=5.0,
+                                 p99_bound_s=120.0),
+        clock=clk)
+    # burst 1: wedge the only replica under 4 live requests
+    burst1 = [router.submit(SearchRequest(query=q)) for q in b.queries[:4]]
+    assert started.wait(timeout=60)
+    assert asc.tick() == "scale_up"              # 4 > 3.0 high water
+    assert router.n_replicas == 2
+    # burst 2 (QPS doubled): JSQ routes every new request onto the fresh
+    # replica (load 0 vs 4) — capacity grew where the traffic goes
+    burst2 = [router.submit(SearchRequest(query=q))
+              for q in b.queries[4:8]]
+    for q, f in zip(b.queries[4:8], burst2):
+        np.testing.assert_array_equal(f.result(timeout=120).ids,
+                                      b.index.query(q).ids)
+    roll = router.stats_rollup()
+    assert roll["routed"][1] == 4                # all of burst 2, new slot
+    # un-wedge; burst 1 resolves on the old replica
+    release.set()
+    for q, f in zip(b.queries[:4], burst1):
+        np.testing.assert_array_equal(f.result(timeout=120).ids,
+                                      b.index.query(q).ids)
+    # calm: two consecutive calm ticks outside the cooldown -> scale-down
+    clk.t = 10.0
+    assert asc.tick() is None
+    clk.t = 11.0
+    assert asc.tick() == "scale_down"
+    assert router.n_replicas == 1
+    # zero leaks: every future done, the victim's threads joined, books
+    # balanced across the whole scaling history
+    assert all(f.done() for f in burst1 + burst2)
+    roll = router.stats_rollup()
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"] == 8
+    pct = router.latency_percentiles()
+    assert pct["n"] == 8 and pct["p99"] < 120.0
+    assert len(asc.events) == 2
+    router.stop()
+    for svc in router.replicas:
+        assert not svc._queue and svc._pump_thread is None

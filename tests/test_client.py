@@ -127,12 +127,13 @@ def test_executor_backend_async_and_cancel(anns_bundle):
     assert ex.live_load() == 0
 
 
-# ----------------------------------------------------------- 4-path parity
+# ----------------------------------------------------------- 6-path parity
 
-def test_four_path_id_parity(anns_bundle, ref_ids):
+def test_six_path_id_parity(anns_bundle, ref_ids):
     """Bit-identical ids across index.query, legacy executor.run(), the
-    sync ANNSClient over the service, and the AsyncANNSClient over a
-    2-replica router."""
+    sync ANNSClient over the service, the AsyncANNSClient over a
+    2-replica router, the fused scan pipeline, and the HTTP edge over a
+    real socket."""
     b = anns_bundle
     # path 2: legacy executor.run (per-query windows, like index.query)
     run_res = b.index.executor.run(b.queries, b.index.plan(window=1))
@@ -170,6 +171,26 @@ def test_four_path_id_parity(anns_bundle, ref_ids):
         [SearchRequest(query=q, tag=i) for i, q in enumerate(b.queries)])
     for ref, resp in zip(ref_ids, fused_resps):
         np.testing.assert_array_equal(ref, resp.ids)
+    # path 6: the HTTP edge (PR-7 tentpole) — the same ids through a real
+    # socket: JSON in, JSON out, bit-identical to index.query
+    from repro.serve.edge import AnnsEdge, EdgeConfig, HttpConn
+
+    async def drive_http():
+        svc = BatchingANNSService(b.index, threaded=True, max_batch=8,
+                                  max_wait_s=0.0005)
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            out = []
+            for q in b.queries:
+                status, payload = await conn.request(
+                    "POST", "/v1/search", {"query": q.tolist()})
+                assert status == 200
+                out.append(payload["ids"])
+            await conn.aclose()
+            return out
+
+    for ref, ids in zip(ref_ids, asyncio.run(drive_http())):
+        np.testing.assert_array_equal(ref, np.asarray(ids))
 
 
 # ------------------------------------------------------------ asyncio doors

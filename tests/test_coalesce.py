@@ -1,0 +1,200 @@
+"""Request coalescing (PR 7 satellite S3 — DESIGN.md §8).
+
+Contract under test:
+* the coalescing key distinguishes EVERY effective plan knob — ``k``,
+  ``top_n``, ``deadline_s``, ``fused``, ``lut_int8`` — and the query
+  bytes; only metadata (``tag``/``tenant``) is excluded (property test
+  via tests/_propshim.py);
+* a concurrent burst of N identical requests through a coalescing
+  ``AsyncANNSClient`` costs exactly ONE backend submit (the serve path is
+  event-gated so the overlap is deterministic, not scheduler luck), and
+  every waiter resolves to bit-identical ids with its own tag;
+* cancelling one attached waiter never cancels the shared backend future
+  or any other waiter; the leader's resolution still fans out;
+* a leader whose admission fails releases the key (followers fail with
+  the same error, the next arrival becomes a fresh leader).
+"""
+
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+from _propshim import given, settings, strategies as st
+
+from repro.core.executor import QueryStats
+from repro.core.futures import QueryFuture
+from repro.serve.client import (AsyncANNSClient, RequestCoalescer,
+                                SearchRequest, SearchResponse, coalesce_key)
+
+# every draw below is one knob assignment; two draws collide iff equal
+_KS = (None, 5, 10)
+_TOP_NS = (None, 64, 128)
+_DEADLINES = (None, 0.5, 2.0)
+_BOOLS = (False, True)
+
+
+def _key(q, k, top_n, deadline_s, fused, lut_int8):
+    return coalesce_key(
+        SearchRequest(query=q, k=k, top_n=top_n, deadline_s=deadline_s),
+        fused=fused, lut_int8=lut_int8)
+
+
+@settings(max_examples=25)
+@given(ka=st.integers(0, 2), kb=st.integers(0, 2),
+       na=st.integers(0, 2), nb=st.integers(0, 2),
+       da=st.integers(0, 2), db=st.integers(0, 2),
+       fa=st.integers(0, 1), fb=st.integers(0, 1),
+       la=st.integers(0, 1), lb=st.integers(0, 1))
+def test_key_distinguishes_every_plan_knob(ka, kb, na, nb, da, db,
+                                           fa, fb, la, lb):
+    """Keys are equal iff every result-affecting knob is equal."""
+    q = np.arange(8, dtype=np.float32)
+    knobs_a = (_KS[ka], _TOP_NS[na], _DEADLINES[da],
+               _BOOLS[fa], _BOOLS[la])
+    knobs_b = (_KS[kb], _TOP_NS[nb], _DEADLINES[db],
+               _BOOLS[fb], _BOOLS[lb])
+    assert (_key(q, *knobs_a) == _key(q, *knobs_b)) \
+        == (knobs_a == knobs_b)
+
+
+def test_key_separates_query_bytes_not_metadata():
+    qa = np.arange(8, dtype=np.float32)
+    qb = qa.copy()
+    qb[3] += 1e-3
+    assert _key(qa, 5, None, None, False, False) \
+        != _key(qb, 5, None, None, False, False)
+    # tag/tenant are correlation metadata, never part of work identity
+    assert coalesce_key(SearchRequest(query=qa, k=5, tag="a", tenant="x")) \
+        == coalesce_key(SearchRequest(query=qa, k=5, tag="b", tenant="y"))
+
+
+# ------------------------------------------------------- attached waiters
+
+def _resp(tag=None) -> SearchResponse:
+    stats = QueryStats(*([0] * len(QueryStats.__dataclass_fields__)))
+    return SearchResponse(ids=np.arange(5), dists=np.zeros(5),
+                          stats=stats, tag=tag)
+
+
+def test_cancelling_attached_waiter_never_touches_master():
+    co = RequestCoalescer()
+    req = SearchRequest(query=np.ones(4, np.float32), k=5, tag="leader")
+    leader, key = co.claim(req)
+    assert leader
+    master = QueryFuture(tag="master", blocking=True)
+    co.publish(key, master)
+    w1 = co.claim(SearchRequest(query=np.ones(4, np.float32), k=5,
+                                tag="w1"))[1]
+    w2 = co.claim(SearchRequest(query=np.ones(4, np.float32), k=5,
+                                tag="w2"))[1]
+    assert co.stats == {"leaders": 1, "attached": 2}
+    assert w1.cancel()
+    assert not master.cancelled() and not master.done()
+    assert not w2.done()
+    master._set_result(_resp(tag="master"))
+    # the cancelled waiter stays cancelled; the live one gets its OWN tag
+    assert w1.cancelled()
+    assert w2.result().tag == "w2"
+    assert master.result().tag == "master"
+    assert co.live() == 0                     # key retired with the master
+
+
+def test_waiters_queued_during_admission_are_wired_at_publish():
+    """Followers arriving while the leader is still mid-admission (no
+    master future yet) park on the entry and get wired by publish()."""
+    co = RequestCoalescer()
+    req = SearchRequest(query=np.ones(4, np.float32))
+    leader, key = co.claim(req)
+    assert leader
+    early = co.claim(SearchRequest(query=np.ones(4, np.float32),
+                                   tag="early"))[1]
+    assert not early.done()
+    master = QueryFuture(blocking=True)
+    co.publish(key, master)
+    master._set_result(_resp())
+    assert early.result().tag == "early"
+
+
+def test_abandoned_leader_fails_waiters_and_frees_key():
+    co = RequestCoalescer()
+    req = SearchRequest(query=np.ones(4, np.float32))
+    _, key = co.claim(req)
+    w = co.claim(SearchRequest(query=np.ones(4, np.float32)))[1]
+    co.abandon(key, RuntimeError("admission failed"))
+    with pytest.raises(RuntimeError, match="admission failed"):
+        w.result()
+    # the key is free: the next identical request is a fresh leader
+    leader, _key2 = co.claim(req)
+    assert leader and co.live() == 1
+
+
+# ------------------------------------------ one backend submit per burst
+
+def test_coalesced_burst_is_one_backend_submit(anns_bundle):
+    """12 identical concurrent requests through a coalescing async client
+    over a GATED threaded service: exactly one backend submit, twelve
+    bit-identical responses, each with its own tag."""
+    b = anns_bundle
+    from repro.serve.anns_service import BatchingANNSService
+    svc = BatchingANNSService(b.index, threaded=True, max_batch=4,
+                              max_wait_s=0.001)
+    started, release = threading.Event(), threading.Event()
+    orig = svc._serve_batch_inner
+
+    def gated(batch):
+        started.set()
+        assert release.wait(timeout=60)
+        return orig(batch)
+
+    svc._serve_batch_inner = gated
+    n_burst = 12
+    ref = b.index.query(b.queries[0], k=10).ids
+
+    async def drive():
+        client = AsyncANNSClient(svc, coalescer=RequestCoalescer())
+        tasks = [asyncio.ensure_future(client.search(
+            SearchRequest(query=b.queries[0], k=10, tag=i)))
+            for i in range(n_burst)]
+        # the leader's submit lands synchronously at task start; the gate
+        # holds the batch open so every follower attaches to it
+        await asyncio.sleep(0)
+        release.set()
+        resps = await asyncio.gather(*tasks)
+        await client.aclose()
+        return resps, dict(client.stats)
+
+    try:
+        resps, cstats = asyncio.run(drive())
+    finally:
+        release.set()
+        svc.stop()
+    assert cstats["submitted"] == 1
+    assert cstats["coalesced"] == n_burst - 1
+    assert int(svc.stats["requests"]) == 1
+    assert sorted(r.tag for r in resps) == list(range(n_burst))
+    for r in resps:
+        np.testing.assert_array_equal(r.ids, ref)
+
+
+def test_sequential_identical_requests_do_not_coalesce(anns_bundle):
+    """Coalescing is an in-flight dedup, not a cache: the same query
+    re-submitted after resolution is a fresh backend submit."""
+    b = anns_bundle
+    from repro.serve.anns_service import BatchingANNSService
+    svc = BatchingANNSService(b.index, threaded=True, max_batch=4,
+                              max_wait_s=0.0005)
+
+    async def drive():
+        client = AsyncANNSClient(svc, coalescer=RequestCoalescer())
+        a = await client.search(SearchRequest(query=b.queries[1], k=5))
+        bb = await client.search(SearchRequest(query=b.queries[1], k=5))
+        await client.aclose()
+        return a, bb, dict(client.stats)
+
+    try:
+        a, bb, cstats = asyncio.run(drive())
+    finally:
+        svc.stop()
+    assert cstats["submitted"] == 2 and cstats["coalesced"] == 0
+    np.testing.assert_array_equal(a.ids, bb.ids)

@@ -1,0 +1,577 @@
+"""The HTTP edge (PR 7 tentpole — serve/edge.py over a REAL socket).
+
+Every test drives ``AnnsEdge`` through ``asyncio.open_connection`` — no
+in-process shortcuts — so routing, auth, rate limiting, coalescing,
+drain, and the autoscaler ramp are all measured through actual HTTP
+bytes.  Deterministic backend timing uses the event-gated serve path
+(``_gate``) and an injectable ``FakeClock`` for the rate limiters and
+the autoscaler.
+
+Contract under test:
+* structured errors with stable codes: 401 unauthorized, 429
+  rate_limited (+ Retry-After), 400 bad_request, 404/405, 413
+  body_too_large, 503 overloaded / draining, 504 deadline_exceeded;
+* tenant auth stamps the tenant on the response and keeps per-tenant
+  books; no tenants configured = an open edge;
+* a burst of N identical HTTP requests costs exactly ONE backend
+  submit, every response bit-identical with its own tag;
+* ``aclose()`` drains gracefully: the in-flight response still flows,
+  then the listener refuses new connections, zero futures leak at the
+  edge OR router level;
+* the acceptance ramp: doubled QPS grows the stack within one cooldown
+  window (the fresh replica serves the second burst through HTTP while
+  the old one is wedged), calm traffic shrinks it, books stay balanced.
+"""
+
+import asyncio
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve.anns_service import BatchingANNSService
+from repro.serve.autoscaler import AutoscalerConfig, ReplicaAutoscaler
+from repro.serve.edge import (AnnsEdge, EdgeConfig, HttpConn, TenantConfig,
+                              TokenBucket)
+from repro.serve.stack import make_serving_stack
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _gate(svc):
+    """Wedge one replica's serve path on an event; returns (started,
+    release) — the test_autoscaler pattern."""
+    started, release = threading.Event(), threading.Event()
+    orig = svc._serve_batch_inner
+
+    def gated(batch):
+        started.set()
+        assert release.wait(timeout=60)
+        return orig(batch)
+
+    svc._serve_batch_inner = gated
+    return started, release
+
+
+def _svc(b, **kw):
+    kw.setdefault("threaded", True)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.001)
+    return BatchingANNSService(b.index, **kw)
+
+
+async def _raw_request(host, port, raw: bytes):
+    """Fire raw bytes at the edge and parse one response — for requests
+    HttpConn itself refuses to produce (malformed line, oversized body)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(raw)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    n = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        if h.lower().startswith(b"content-length"):
+            n = int(h.split(b":")[1].decode())
+    payload = json.loads((await reader.readexactly(n)).decode()) if n else None
+    writer.close()
+    return status, payload
+
+
+# ------------------------------------------------------------- token bucket
+
+def test_token_bucket_refill_and_retry_after():
+    clk = FakeClock()
+    bucket = TokenBucket(rate=2.0, burst=1, clock=clk)
+    assert bucket.try_acquire()
+    assert not bucket.try_acquire()              # burst spent
+    assert bucket.retry_after() == pytest.approx(0.5)   # 1 token / 2 qps
+    clk.t = 0.5
+    assert bucket.try_acquire()                  # refilled exactly
+    # rate <= 0 means unlimited: never blocks, never asks for a wait
+    free = TokenBucket(rate=0.0, burst=1, clock=clk)
+    assert all(free.try_acquire() for _ in range(100))
+    assert free.retry_after() == 0.0
+
+
+# ---------------------------------------------------------------- auth
+
+def test_auth_unknown_key_401_and_tenant_stamp(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+    tenants = [TenantConfig("alice", "key-a"), TenantConfig("bob", "key-b")]
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(tenants=tenants),
+                            own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            body = {"query": b.queries[0].tolist(), "k": 10, "tag": "t0"}
+            status, payload = await conn.request("POST", "/v1/search", body)
+            assert status == 401
+            assert payload["error"]["code"] == "unauthorized"
+            status, _ = await conn.request("POST", "/v1/search", body,
+                                           headers={"x-api-key": "wrong"})
+            assert status == 401
+            status, payload = await conn.request("POST", "/v1/search", body,
+                                                 headers={"x-api-key": "key-a"})
+            assert status == 200
+            assert payload["tenant"] == "alice" and payload["tag"] == "t0"
+            np.testing.assert_array_equal(
+                np.asarray(payload["ids"]),
+                b.index.query(b.queries[0], k=10).ids)
+            status, payload = await conn.request("POST", "/v1/search", body,
+                                                 headers={"x-api-key": "key-b"})
+            assert status == 200 and payload["tenant"] == "bob"
+            assert edge.stats["auth_failures"] == 2
+            assert edge.tenant_stats["alice"] == {
+                "requests": 1, "ok": 1, "rate_limited": 0, "errors": 0}
+            assert edge.tenant_stats["bob"]["ok"] == 1
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+def test_open_edge_needs_no_key(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            status, payload = await conn.request(
+                "POST", "/v1/search", {"query": b.queries[1].tolist()})
+            assert status == 200 and payload["tenant"] is None
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+def test_rate_limit_429_with_deterministic_refill(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+    clk = FakeClock()
+    tenants = [TenantConfig("metered", "key-m", rate_qps=5.0, burst=2)]
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(tenants=tenants),
+                            own_backend=True, clock=clk) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            body = {"query": b.queries[2].tolist()}
+            hdr = {"x-api-key": "key-m"}
+            for _ in range(2):                   # the burst allowance
+                status, _ = await conn.request("POST", "/v1/search", body,
+                                               headers=hdr)
+                assert status == 200
+            status, payload = await conn.request("POST", "/v1/search", body,
+                                                 headers=hdr)
+            assert status == 429
+            assert payload["error"]["code"] == "rate_limited"
+            clk.t = 0.25                         # 5 qps -> a token each 0.2s
+            status, _ = await conn.request("POST", "/v1/search", body,
+                                           headers=hdr)
+            assert status == 200
+            assert edge.stats["rate_limited"] == 1
+            ts = edge.tenant_stats["metered"]
+            assert ts["requests"] == 4 and ts["ok"] == 3
+            assert ts["rate_limited"] == 1
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+# ------------------------------------------------------------ error surface
+
+def test_structured_error_codes_over_one_keepalive_conn(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            # 404 / 405 / 400s all ride ONE keep-alive connection
+            status, payload = await conn.request("GET", "/nope")
+            assert status == 404 and payload["error"]["code"] == "not_found"
+            status, payload = await conn.request("GET", "/v1/search")
+            assert (status, payload["error"]["code"]) \
+                == (405, "method_not_allowed")
+            status, payload = await conn.request("POST", "/v1/search",
+                                                 {"k": 5})
+            assert (status, payload["error"]["code"]) == (400, "bad_request")
+            status, payload = await conn.request(
+                "POST", "/v1/search", {"query": [[1.0, 2.0], [3.0, 4.0]]})
+            assert status == 400 and "1-D" in payload["error"]["message"]
+            status, payload = await conn.request(
+                "POST", "/v1/search",
+                {"query": b.queries[0].tolist(), "k": "lots"})
+            assert status == 400
+            # ... and the connection still serves a good request after
+            status, payload = await conn.request(
+                "POST", "/v1/search", {"query": b.queries[0].tolist()})
+            assert status == 200
+            assert edge.stats["bad_requests"] == 3
+            assert edge.stats["not_found"] == 1
+            await conn.aclose()
+            # invalid JSON body: structured 400, connection survives
+            body = b"{oops"
+            raw = (b"POST /v1/search HTTP/1.1\r\nHost: e\r\n"
+                   + b"Content-Length: %d\r\n\r\n" % len(body) + body)
+            status, payload = await _raw_request("127.0.0.1", edge.port, raw)
+            assert status == 400 and "JSON" in payload["error"]["message"]
+            # malformed request LINE: answered 400, then the conn is dropped
+            status, payload = await _raw_request("127.0.0.1", edge.port,
+                                                 b"GARBAGE\r\n\r\n")
+            assert (status, payload["error"]["code"]) == (400, "bad_request")
+
+    asyncio.run(drive())
+
+
+def test_body_too_large_413_drops_conn(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(max_body_bytes=64),
+                            own_backend=True) as edge:
+            body = json.dumps(
+                {"query": b.queries[0].tolist()}).encode()
+            assert len(body) > 64
+            raw = (b"POST /v1/search HTTP/1.1\r\nHost: e\r\n"
+                   + b"Content-Length: %d\r\n\r\n" % len(body) + body)
+            status, payload = await _raw_request("127.0.0.1", edge.port, raw)
+            assert status == 413
+            assert payload["error"]["code"] == "body_too_large"
+
+    asyncio.run(drive())
+
+
+def test_max_pending_guard_503(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+
+    async def drive():
+        # max_pending=0: the request itself trips the admission guard
+        async with AnnsEdge(svc, EdgeConfig(max_pending=0),
+                            own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            status, payload = await conn.request(
+                "POST", "/v1/search", {"query": b.queries[0].tolist()})
+            assert (status, payload["error"]["code"]) == (503, "overloaded")
+            assert edge.stats["overloaded"] == 1
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+def test_healthz_and_stats_routes(anns_bundle):
+    b = anns_bundle
+    router = make_serving_stack(b.index, n_replicas=2, max_batch=4,
+                                max_wait_s=0.001)
+
+    async def drive():
+        async with AnnsEdge(router, EdgeConfig(
+                tenants=[TenantConfig("t", "k")]), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            status, payload = await conn.request("GET", "/healthz")
+            assert (status, payload["status"]) == (200, "serving")
+            status, _ = await conn.request(
+                "POST", "/v1/search", {"query": b.queries[0].tolist()},
+                headers={"x-api-key": "k"})
+            assert status == 200
+            status, stats = await conn.request("GET", "/v1/stats")
+            assert status == 200
+            assert stats["edge"]["ok"] == 1
+            assert stats["tenants"]["t"]["ok"] == 1
+            assert stats["client"]["completed"] == 1
+            assert stats["coalescer"]["live"] == 0
+            # a router backend surfaces its scaling signals through /v1/stats
+            assert stats["backend"]["n_replicas"] == 2
+            assert stats["backend"]["submitted"] == 1
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+# ----------------------------------------------------------- deadline / 504
+
+def test_deadline_maps_to_504_and_edge_stays_up(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+    started, release = _gate(svc)
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            status, payload = await conn.request(
+                "POST", "/v1/search",
+                {"query": b.queries[0].tolist(), "deadline_s": 0.05})
+            assert status == 504
+            assert payload["error"]["code"] == "deadline_exceeded"
+            assert edge.stats["deadline_expired"] == 1
+            release.set()                        # un-wedge the backend ...
+            status, payload = await conn.request(
+                "POST", "/v1/search", {"query": b.queries[1].tolist()})
+            assert status == 200                 # ... the edge never died
+            np.testing.assert_array_equal(
+                np.asarray(payload["ids"]), b.index.query(b.queries[1]).ids)
+            await conn.aclose()
+
+    try:
+        asyncio.run(drive())
+    finally:
+        release.set()
+
+
+# --------------------------------------------------------------- coalescing
+
+def test_http_burst_coalesces_to_one_backend_submit(anns_bundle):
+    """8 concurrent HTTP connections firing the SAME query: exactly one
+    backend submit, 8 bit-identical responses each with its own tag —
+    the serve path is gated so the overlap is deterministic."""
+    b = anns_bundle
+    svc = _svc(b)
+    started, release = _gate(svc)
+    n_burst = 8
+    ref = b.index.query(b.queries[0], k=10).ids
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conns = [await HttpConn.open("127.0.0.1", edge.port)
+                     for _ in range(n_burst)]
+            tasks = [asyncio.ensure_future(c.request(
+                "POST", "/v1/search",
+                {"query": b.queries[0].tolist(), "k": 10, "tag": i}))
+                for i, c in enumerate(conns)]
+            # wait until every request has claimed the key (the gate keeps
+            # the master future unresolved), then let the batch through
+            cs = edge.client.stats
+            while cs["submitted"] + cs["coalesced"] < n_burst:
+                await asyncio.sleep(0.002)
+            release.set()
+            out = await asyncio.gather(*tasks)
+            probe = await HttpConn.open("127.0.0.1", edge.port)
+            _, stats = await probe.request("GET", "/v1/stats")
+            await probe.aclose()
+            for c in conns:
+                await c.aclose()
+            return out, stats
+
+    try:
+        out, stats = asyncio.run(drive())
+    finally:
+        release.set()
+    assert stats["client"]["submitted"] == 1
+    assert stats["client"]["coalesced"] == n_burst - 1
+    assert stats["coalescer"] == {"leaders": 1, "attached": n_burst - 1,
+                                  "live": 0}
+    assert int(svc.stats["requests"]) == 1       # ONE scan for the burst
+    assert sorted(p["tag"] for _, p in out) == list(range(n_burst))
+    for status, payload in out:
+        assert status == 200
+        np.testing.assert_array_equal(np.asarray(payload["ids"]), ref)
+
+
+# ------------------------------------------------------------ drain / close
+
+def test_draining_rejects_new_searches_with_503(anns_bundle):
+    b = anns_bundle
+    svc = _svc(b)
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(), own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            status, payload = await conn.request("GET", "/healthz")
+            assert payload["status"] == "serving"
+            # park a second keep-alive conn in the read loop BEFORE the
+            # drain flips — conns opened after it are simply closed
+            conn2 = await HttpConn.open("127.0.0.1", edge.port)
+            await conn2.request("GET", "/healthz")
+            edge._draining = True                # the aclose() first step
+            status, payload = await conn.request("GET", "/healthz")
+            assert payload["status"] == "draining"
+            # an in-the-pipe search during the drain gets a structured 503
+            status, payload = await conn2.request(
+                "POST", "/v1/search", {"query": b.queries[0].tolist()})
+            assert (status, payload["error"]["code"]) == (503, "draining")
+            assert edge.stats["draining_rejects"] == 1
+            await conn.aclose()
+            await conn2.aclose()
+
+    asyncio.run(drive())
+
+
+def test_graceful_drain_finishes_inflight_then_refuses(anns_bundle):
+    """aclose() ordering: the wedged in-flight request still gets its 200
+    over the socket, THEN the listener refuses connections, and nothing
+    leaks at the edge or the service."""
+    b = anns_bundle
+    svc = _svc(b)
+    started, release = _gate(svc)
+
+    async def drive():
+        edge = await AnnsEdge(svc, EdgeConfig(), own_backend=True).start()
+        port = edge.port
+        conn = await HttpConn.open("127.0.0.1", port)
+        fut = asyncio.ensure_future(conn.request(
+            "POST", "/v1/search", {"query": b.queries[0].tolist()}))
+        await asyncio.to_thread(started.wait, 60)     # request is wedged
+        closer = asyncio.ensure_future(edge.aclose())
+        await asyncio.sleep(0.05)
+        assert not closer.done()        # blocked on the in-flight request
+        assert not fut.done()
+        release.set()
+        status, payload = await fut     # the response still flowed out
+        assert status == 200
+        np.testing.assert_array_equal(np.asarray(payload["ids"]),
+                                      b.index.query(b.queries[0]).ids)
+        await closer
+        with pytest.raises((ConnectionError, OSError)):
+            await HttpConn.open("127.0.0.1", port)
+        assert edge._live_requests == 0
+        assert not edge.client._inflight
+        await conn.aclose()
+
+    try:
+        asyncio.run(drive())
+    finally:
+        release.set()
+    assert svc._pump_thread is None and not svc._queue   # zero leaks
+
+
+# ---------------------------------------------------------------- the soak
+
+def test_soak_200_connections_zero_leaks(anns_bundle):
+    b = anns_bundle
+    router = make_serving_stack(b.index, n_replicas=2, policy="jsq",
+                                max_batch=16, max_wait_s=0.0005,
+                                scan_window=8, inflight_depth=2)
+    n_conns, per_conn = 200, 2
+
+    async def drive():
+        async with AnnsEdge(router, EdgeConfig(max_inflight=128),
+                            own_backend=True) as edge:
+            async def one(ci):
+                conn = await HttpConn.open("127.0.0.1", edge.port)
+                out = []
+                for r in range(per_conn):
+                    qi = (ci + r * 7) % len(b.queries)
+                    status, payload = await conn.request(
+                        "POST", "/v1/search",
+                        {"query": b.queries[qi].tolist(), "tag": qi})
+                    assert status == 200
+                    out.append((qi, payload["ids"]))
+                await conn.aclose()
+                return out
+
+            res = await asyncio.gather(*[one(i) for i in range(n_conns)])
+            assert edge.stats["conns"] >= n_conns
+            assert edge.stats["ok"] == n_conns * per_conn
+            assert edge._live_requests == 0
+            assert not edge.client._inflight
+            cs = dict(edge.client.stats)
+            return res, cs
+
+    res, cs = asyncio.run(drive())
+    flat = [x for sub in res for x in sub]
+    assert len(flat) == n_conns * per_conn
+    # identical in-flight queries coalesce; every request still answered
+    assert cs["submitted"] + cs["coalesced"] == n_conns * per_conn
+    for qi, ids in flat[::17]:                   # sampled id parity
+        np.testing.assert_array_equal(np.asarray(ids),
+                                      b.index.query(b.queries[qi]).ids)
+    assert router.live_load() == 0
+    roll = router.stats_rollup()
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"]
+    for svc in router.replicas:
+        assert not svc._queue and svc._pump_thread is None
+
+
+# ----------------------------------------------------- the acceptance ramp
+
+def test_edge_load_ramp_autoscales_through_http(anns_bundle):
+    """PR-7 acceptance, measured END TO END through the socket: a wedged
+    replica under a 4-request burst trips the autoscaler; the doubled
+    burst is served by the NEW replica (HTTP 200s with bit-identical
+    ids) while the old one is still stuck; calm ticks shrink the stack
+    back, the victim drains, and zero futures leak at the edge or the
+    router."""
+    b = anns_bundle
+    clk = FakeClock()
+    router = make_serving_stack(b.index, n_replicas=1, policy="jsq",
+                                max_batch=4, max_wait_s=0.001)
+    started, release = _gate(router.replicas[0])
+    asc = ReplicaAutoscaler(
+        router, AutoscalerConfig(min_replicas=1, max_replicas=2,
+                                 high_water=3.0, low_water=1.0,
+                                 down_ticks=2, scale_up_cooldown_s=5.0,
+                                 scale_down_cooldown_s=5.0,
+                                 p99_bound_s=120.0),
+        clock=clk)
+
+    async def drive():
+        async with AnnsEdge(router, EdgeConfig(), own_backend=True) as edge:
+            conns = [await HttpConn.open("127.0.0.1", edge.port)
+                     for _ in range(8)]
+            burst1 = [asyncio.ensure_future(conns[i].request(
+                "POST", "/v1/search",
+                {"query": b.queries[i].tolist(), "tag": i}))
+                for i in range(4)]
+            await asyncio.to_thread(started.wait, 60)
+            while router.live_load() < 4:        # all 4 admitted + wedged
+                await asyncio.sleep(0.002)
+            assert asc.tick() == "scale_up"      # 4 > 3.0 high water
+            assert router.n_replicas == 2
+            # burst 2 (QPS doubled): JSQ lands every request on the fresh
+            # replica — grown capacity serves traffic during the wedge
+            burst2 = [asyncio.ensure_future(conns[4 + j].request(
+                "POST", "/v1/search",
+                {"query": b.queries[4 + j].tolist(), "tag": 4 + j}))
+                for j in range(4)]
+            for j, fut in enumerate(burst2):
+                status, payload = await fut
+                assert status == 200
+                np.testing.assert_array_equal(
+                    np.asarray(payload["ids"]),
+                    b.index.query(b.queries[4 + j]).ids)
+            assert router.stats_rollup()["routed"][1] == 4
+            release.set()                        # burst 1 completes too
+            for i, fut in enumerate(burst1):
+                status, payload = await fut
+                assert status == 200
+                np.testing.assert_array_equal(
+                    np.asarray(payload["ids"]),
+                    b.index.query(b.queries[i]).ids)
+            # calm: consecutive calm ticks outside the cooldown -> shrink,
+            # and the victim drains while the edge is still serving
+            clk.t = 10.0
+            assert asc.tick() is None
+            clk.t = 11.0
+            assert asc.tick() == "scale_down"
+            assert router.n_replicas == 1
+            status, _ = await conns[0].request("GET", "/healthz")
+            assert status == 200                 # edge alive across resize
+            assert edge._live_requests == 0
+            assert not edge.client._inflight
+            for c in conns:
+                await c.aclose()
+            return dict(edge.stats)
+
+    try:
+        stats = asyncio.run(drive())
+    finally:
+        release.set()
+    assert stats["ok"] == 8
+    assert len(asc.events) == 2                  # one up, one down
+    roll = router.stats_rollup()
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"] == 8
+    pct = router.latency_percentiles()
+    assert pct["n"] == 8 and pct["p99"] < 120.0
+    for svc in router.replicas:                  # stopped by aclose()
+        assert not svc._queue and svc._pump_thread is None

@@ -212,6 +212,113 @@ def test_router_spills_on_backpressure_then_rejects(anns_bundle):
                                   b.index.query(b.queries[2]).ids)
 
 
+def test_spill_exhausted_counter_and_accounting_invariant(anns_bundle):
+    """A spill chain that exhausts EVERY replica counts as
+    ``spill_exhausted``, and the router's books always balance:
+    ``submitted == sum(routed) + rejected`` — every submit() call is
+    accounted exactly once, landed or rejected."""
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
+                           threaded=False, max_batch=8, max_wait_s=10.0,
+                           max_queue=1)
+    router.submit(SearchRequest(query=b.queries[0]))
+    router.submit(SearchRequest(query=b.queries[1]))
+    for _ in range(3):                       # every replica full: reject
+        with pytest.raises(BackpressureError):
+            router.submit(SearchRequest(query=b.queries[2]))
+    roll = router.stats_rollup()
+    assert roll["rejected"] == 3
+    assert roll["spill_exhausted"] == 3
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"]
+    router.drain()
+    router.submit(SearchRequest(query=b.queries[2]))
+    router.drain()
+    roll = router.stats_rollup()
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"] == 6
+
+
+# ------------------------------------------------------------- elastic set
+
+def test_add_and_remove_replica_round_trip(anns_bundle):
+    """Grow 2 -> 3, serve on all three, shrink back: stable slot ids,
+    growing routed ledger, drained victim, and the accounting invariant
+    across the whole scaling history."""
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
+                           threaded=False, max_batch=4, max_wait_s=0.0)
+    slot = router.add_replica()
+    assert slot == 2 and router.n_replicas == 3
+    assert router.replica_ids == [0, 1, 2]
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries[:9]]
+    router.drain()
+    assert router.stats_rollup()["routed"] == [3, 3, 3]
+    removed = router.remove_replica()         # least-loaded: all idle -> 0
+    assert removed == 0 and router.n_replicas == 2
+    assert router.replica_ids == [1, 2]
+    more = [router.submit(SearchRequest(query=q)) for q in b.queries[9:13]]
+    router.drain()
+    roll = router.stats_rollup()
+    assert roll["routed"] == [3, 5, 5]        # slot 0 frozen, 1/2 grew
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"]
+    assert roll["scale_ups"] == 1 and roll["scale_downs"] == 1
+    # percentiles still describe the whole stream (retired history kept)
+    assert roll["requests"] == 13
+    for q, f in zip(b.queries, futs + more):
+        np.testing.assert_array_equal(f.result().ids,
+                                      b.index.query(q).ids)
+    with pytest.raises(ValueError, match="no replica with slot id"):
+        router.remove_replica(0)              # already gone
+    router.remove_replica(1)
+    with pytest.raises(ValueError, match="last replica"):
+        router.remove_replica()
+
+
+def test_remove_replica_drains_victim_zero_leaks(anns_bundle):
+    """Removal under live traffic: requests parked on the victim resolve
+    (its pump drains them before exit) and no future leaks anywhere."""
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, policy="round_robin",
+                           threaded=True, max_batch=4, max_wait_s=0.001)
+    futs = [router.submit(SearchRequest(query=q)) for q in b.queries[:8]]
+    victim_slot = router.remove_replica(0)
+    assert victim_slot == 0 and router.n_replicas == 1
+    for q, f in zip(b.queries[:8], futs):
+        np.testing.assert_array_equal(f.result(timeout=120).ids,
+                                      b.index.query(q).ids)
+    assert all(f.done() for f in futs)
+    router.stop()
+    roll = router.stats_rollup()
+    assert roll["requests"] == 8              # retired history folded in
+    assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"]
+    assert router.latency_percentiles()["n"] == 8
+
+
+def test_scaling_signals_snapshot(anns_bundle):
+    b = anns_bundle
+    router = ReplicaRouter(b.index, n_replicas=2, policy="jsq",
+                           threaded=False, max_batch=8, max_wait_s=10.0)
+    router.submit(SearchRequest(query=b.queries[0]))
+    sig = router.scaling_signals()
+    assert sig["n_replicas"] == 2 and sig["live_load"] == 1
+    assert len(sig["per_replica_load"]) == 2
+    assert sig["submitted"] == 1 and sig["rejected"] == 0
+    router.drain()
+    sig = router.scaling_signals()
+    assert sig["live_load"] == 0 and sig["latency_n"] == 1
+
+
+def test_recarve_mesh_unequal_groups():
+    """recarve_mesh relaxes split_mesh's divisibility: 1 device still
+    carves only into 1 group, and bad counts raise."""
+    from repro.launch.mesh import make_test_mesh, recarve_mesh
+    mesh = make_test_mesh(1)
+    assert recarve_mesh(mesh, 1) == [mesh]
+    with pytest.raises(ValueError, match="cannot carve"):
+        recarve_mesh(mesh, 2)
+    with pytest.raises(ValueError, match="n_groups"):
+        recarve_mesh(mesh, 0)
+
+
 # ------------------------------------------------------ fig9 replica model
 
 def test_router_jsq_qps_model_monotonic_in_replicas(anns_bundle):
