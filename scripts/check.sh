@@ -33,6 +33,11 @@
 #                               soak, deterministic load-ramp (scale up
 #                               under burst, drain on scale-down, zero
 #                               leaked futures at router AND edge level)
+#   scripts/check.sh lint       concurrency static analysis over src/:
+#                               guarded-by checker (GB*), lock-order
+#                               deadlock detector (LO*), jit/hot-path
+#                               purity lints (PU*).  Zero findings or
+#                               non-zero exit.  See DESIGN.md §9.
 #   scripts/check.sh fig9       throughput/latency figure as a ratchet:
 #                               persists BENCH_fig9.json (incl. the
 #                               edge_http socket row) and fails on rows
@@ -55,7 +60,14 @@ case "$MODE" in
         tests/test_executor.py tests/test_futures.py tests/test_engine.py \
         tests/test_updates.py tests/test_threaded.py tests/test_client.py
     ;;
+  lint)
+    exec timeout "${CHECK_TIMEOUT:-120}" \
+      python -m repro.analysis.concurrency --check src/
+    ;;
   threaded-stress)
+    # LINT_LOCKS=1: serving-stack locks become OrderedLock witnesses —
+    # any runtime lock-order inversion fails the offending test
+    export LINT_LOCKS="${LINT_LOCKS:-1}"
     exec timeout "${CHECK_TIMEOUT:-300}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_threaded.py
     ;;
@@ -64,6 +76,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider tests/test_client.py
     ;;
   router-stress)
+    export LINT_LOCKS="${LINT_LOCKS:-1}"
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_router.py \
         tests/test_faults.py
@@ -76,6 +89,7 @@ case "$MODE" in
       python -m benchmarks.run --only kernels --persist
     ;;
   edge-stress)
+    export LINT_LOCKS="${LINT_LOCKS:-1}"
     exec timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_edge.py \
         tests/test_autoscaler.py tests/test_coalesce.py
@@ -95,7 +109,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|threaded-stress|router-stress|async-stress|kernels|edge-stress|fig9|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|lint|threaded-stress|router-stress|async-stress|kernels|edge-stress|fig9|full]" >&2
     exit 2
     ;;
 esac

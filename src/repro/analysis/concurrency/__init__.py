@@ -1,0 +1,122 @@
+"""Concurrency static-analysis suite (DESIGN.md §9).
+
+The serving stack is a real threaded runtime — pump + ticker threads,
+per-future condition variables, dispatch/backend/router/autoscaler locks —
+whose discipline was previously enforced only by code review.  This
+package turns that discipline into checked invariants:
+
+* :mod:`.guarded` — the **guarded-by checker**: fields annotated
+  ``# guarded-by: _lock`` on their declaration are verified to be read and
+  written only inside a ``with self._lock:`` scope (or in a method the
+  caller annotates ``# holds: _lock``).
+* :mod:`.lockorder` — the **lock-order analyzer**: a static pass that
+  extracts the cross-module lock-acquisition graph (lexical ``with``
+  nesting, same-class call resolution, unambiguous cross-class method
+  names, and ``# acquires: <rank>`` annotations) and fails on cycles or
+  on any edge that contradicts the declared hierarchy in
+  :data:`.witness.HIERARCHY`.
+* :mod:`.purity` — the **hot-path purity lints**: no device sync or host
+  materialisation (``block_until_ready``, ``np.asarray``, ``.item()``,
+  ``float()``) while holding a lock; no lock acquisition or Python side
+  effects inside ``jax.jit``/Pallas-traced functions; no bare
+  ``threading.Lock()`` outside the instrumented :mod:`.witness` wrapper.
+* :mod:`.witness` — the **runtime witness**: ``make_lock``/``make_rlock``/
+  ``make_condition`` factories every serving-stack lock goes through.
+  Plain ``threading`` primitives by default; under ``LINT_LOCKS=1`` they
+  return instrumented :class:`~.witness.OrderedLock` objects that record
+  actual nested-acquisition edges and flag order inversions against the
+  declared hierarchy (the stress gates run with the witness on).
+
+Entry point::
+
+    python -m repro.analysis.concurrency --check src/
+
+Diagnostics come back as ``file:line: [CODE] message``.  Suppress a single
+finding with a trailing ``# lint-ok: CODE reason`` comment (on the flagged
+line or the line above); a suppression without a reason is itself a
+finding (LT00).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis.concurrency.diagnostics import Diagnostic, SourceFile
+from repro.analysis.concurrency import guarded, lockorder, purity
+from repro.analysis.concurrency.witness import (HIERARCHY, LEVEL,
+                                                LockOrderViolation,
+                                                OrderedLock, Witness,
+                                                make_condition, make_lock,
+                                                make_rlock)
+
+__all__ = ["run_checks", "collect_files", "Diagnostic", "SourceFile",
+           "HIERARCHY", "LEVEL", "LockOrderViolation", "OrderedLock",
+           "Witness", "make_lock", "make_rlock", "make_condition"]
+
+# files the purity pass treats as jit/Pallas-traced scope (PU02): every
+# kernel module plus the shard_map bodies in core/distributed.py
+_JIT_SCOPE_MARKERS = (os.sep + os.path.join("repro", "kernels") + os.sep,
+                      os.path.join("core", "distributed.py"))
+
+
+def _in_jit_scope(path: str) -> bool:
+    return any(m in path for m in _JIT_SCOPE_MARKERS)
+
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into the sorted .py file set to analyze."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs if d != "__pycache__"]
+            out.extend(os.path.join(root, f) for f in files
+                       if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def run_checks(paths: Sequence[str],
+               checks: Optional[Sequence[str]] = None) -> List[Diagnostic]:
+    """Run the requested pass families (default: all three) over ``paths``
+    and return the surviving diagnostics, sorted by file/line.
+
+    ``checks`` selects from ``{"guarded", "lockorder", "purity"}``.
+    Suppressions (``# lint-ok: CODE reason``) are applied here so every
+    family shares one grammar; reasonless suppressions surface as LT00.
+    """
+    want = set(checks) if checks is not None else \
+        {"guarded", "lockorder", "purity"}
+    sources = [SourceFile.load(f) for f in collect_files(paths)]
+    diags: List[Diagnostic] = []
+    for sf in sources:
+        if sf.parse_error is not None:
+            diags.append(sf.parse_error)
+            continue
+        if "guarded" in want:
+            diags.extend(guarded.check_file(sf))
+        if "purity" in want:
+            diags.extend(purity.check_file(sf,
+                                           jit_scope=_in_jit_scope(sf.path)))
+    if "lockorder" in want:
+        diags.extend(lockorder.check_files(
+            [sf for sf in sources if sf.parse_error is None]))
+    out: List[Diagnostic] = []
+    for d in diags:
+        sf = next((s for s in sources if s.path == d.path), None)
+        if sf is None:
+            out.append(d)
+            continue
+        sup = sf.suppression_at(d.line)
+        if sup is not None and sup.code == d.code:
+            if not sup.reason:
+                out.append(Diagnostic(
+                    d.path, sup.line, "LT00",
+                    f"suppression of {d.code} without a reason "
+                    f"(grammar: '# lint-ok: {d.code} <why>')"))
+            continue
+        out.append(d)
+    out.sort(key=lambda d: (d.path, d.line, d.code))
+    return out

@@ -1,0 +1,40 @@
+"""CLI: ``python -m repro.analysis.concurrency --check src/``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.concurrency import collect_files, run_checks
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.concurrency",
+        description="Concurrency static analysis: guarded-by (GB*), "
+                    "lock-order (LO*), and hot-path purity (PU*) lints.")
+    ap.add_argument("--check", nargs="+", metavar="PATH", required=True,
+                    help="files or directories to analyze")
+    ap.add_argument("--only", nargs="*", metavar="FAMILY",
+                    choices=("guarded", "lockorder", "purity"),
+                    help="restrict to the named pass families")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+
+    diags = run_checks(args.check, checks=args.only or None)
+    for d in diags:
+        print(d)
+    if not args.quiet:
+        n_files = len(collect_files(args.check))
+        if diags:
+            print(f"{len(diags)} finding(s) in {n_files} file(s)",
+                  file=sys.stderr)
+        else:
+            print(f"concurrency lint clean: {n_files} file(s)",
+                  file=sys.stderr)
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

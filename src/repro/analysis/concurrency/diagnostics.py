@@ -1,0 +1,119 @@
+"""Shared diagnostic/annotation plumbing for the concurrency lints.
+
+Annotation grammar (DESIGN.md §9)
+---------------------------------
+All annotations are line comments; the key phrase may be followed by free
+prose::
+
+    self._queue = deque()        # guarded-by: _lock
+    def _compact_locked(self):   # holds: _lock
+        ...
+    r.live_load()                # acquires: service
+    return self._state != _PENDING  # lint-ok: GB01 lock-free fast path
+
+* ``guarded-by: <attr>`` — on a ``self.<field> = ...`` declaration: the
+  field may only be touched while ``self.<attr>`` is held.
+* ``holds: <attr>[, <attr>]`` — on a ``def`` line: the caller guarantees
+  these locks are held for the whole body.
+* ``acquires: <rank>[, <rank>]`` — on any statement: it may acquire locks
+  of the named rank(s) (for cross-object calls / local-alias ``with``
+  blocks the AST pass cannot resolve).
+* ``lint-ok: CODE reason`` — suppress one diagnostic of ``CODE`` on this
+  line (or the line below, when written alone on its own line).  The
+  reason is mandatory: a bare ``lint-ok: CODE`` surfaces as LT00.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.code}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    code: str
+    reason: str
+
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_]\w*)")
+_HOLDS_RE = re.compile(r"holds:\s*([A-Za-z_]\w*(?:\s*,\s*[A-Za-z_]\w*)*)")
+_ACQUIRES_RE = re.compile(
+    r"acquires:\s*([A-Za-z_]\w*(?:\s*,\s*[A-Za-z_]\w*)*)")
+_LINT_OK_RE = re.compile(r"lint-ok:\s*([A-Z]{2}\d{2})\s*(.*)")
+
+
+class SourceFile:
+    """One parsed module: AST + per-line comment map + annotation lookup."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.parse_error: Optional[Diagnostic] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(text, filename=path)
+        except SyntaxError as exc:
+            self.tree = None
+            self.parse_error = Diagnostic(
+                path, exc.lineno or 1, "LT01", f"syntax error: {exc.msg}")
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except (tokenize.TokenError, IndentationError):
+            pass
+
+    @classmethod
+    def load(cls, path: str) -> "SourceFile":
+        with open(path, encoding="utf-8") as fh:
+            return cls(path, fh.read())
+
+    # ----------------------------------------------------------- annotations
+    def comment_at(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def guarded_by(self, line: int) -> Optional[str]:
+        m = _GUARDED_RE.search(self.comment_at(line))
+        return m.group(1) if m else None
+
+    def holds(self, line: int) -> List[str]:
+        m = _HOLDS_RE.search(self.comment_at(line))
+        return [s.strip() for s in m.group(1).split(",")] if m else []
+
+    def acquires(self, line: int) -> List[str]:
+        m = _ACQUIRES_RE.search(self.comment_at(line))
+        return [s.strip() for s in m.group(1).split(",")] if m else []
+
+    def suppression_at(self, line: int) -> Optional[Suppression]:
+        """A ``lint-ok`` matching ``line``: trailing on the line itself, or
+        written alone on the line above."""
+        for ln in (line, line - 1):
+            m = _LINT_OK_RE.search(self.comment_at(ln))
+            if m is None:
+                continue
+            if ln == line - 1:
+                # the preceding line must be comment-only, or its
+                # suppression belongs to that line's own code
+                stripped = self.lines[ln - 1].strip() \
+                    if 0 < ln <= len(self.lines) else ""
+                if not stripped.startswith("#"):
+                    continue
+            return Suppression(ln, m.group(1), m.group(2).strip())
+        return None

@@ -1,0 +1,226 @@
+"""Guarded-by checker (GB01/GB02).
+
+Fields declared with a trailing ``# guarded-by: <lockattr>`` comment may
+only be read or written while ``self.<lockattr>`` is held — either inside
+a lexical ``with self.<lockattr>:`` block, or in a method whose ``def``
+line carries ``# holds: <lockattr>``.
+
+Lock attributes are recognised from their construction site: the witness
+factories (``make_lock``/``make_rlock``/``make_condition``) or bare
+``threading.Lock/RLock/Condition`` calls (the latter are PU03 findings,
+but the guard analysis still honours them).  A condition built over an
+existing lock — ``make_condition(rank, self._lock)`` or
+``threading.Condition(self._lock)`` — aliases that lock: holding either
+name satisfies a guard on the other.
+
+``__init__``, ``__getstate__``, and ``__setstate__`` are exempt: the
+object is thread-confined during construction and (un)pickling.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.concurrency.diagnostics import Diagnostic, SourceFile
+
+_EXEMPT_METHODS = {"__init__", "__getstate__", "__setstate__", "__del__",
+                   "__repr__"}
+
+_FACTORIES = {"make_lock", "make_rlock", "make_condition"}
+_THREADING_CTORS = {"Lock", "RLock", "Condition"}
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _is_lock_ctor(call: ast.Call) -> bool:
+    name = _call_name(call)
+    if name in _FACTORIES:
+        return True
+    if name in _THREADING_CTORS and isinstance(call.func, ast.Attribute) \
+            and isinstance(call.func.value, ast.Name) \
+            and call.func.value.id == "threading":
+        return True
+    return False
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class ClassLocks:
+    """Lock attributes of one class, with condition-over-lock aliasing."""
+
+    def __init__(self) -> None:
+        self.locks: Set[str] = set()
+        self.rank: Dict[str, str] = {}         # attr -> declared rank
+        self._alias: Dict[str, str] = {}       # attr -> canonical attr
+
+    def add(self, attr: str, call: ast.Call) -> None:
+        self.locks.add(attr)
+        name = _call_name(call)
+        if name in _FACTORIES and call.args \
+                and isinstance(call.args[0], ast.Constant) \
+                and isinstance(call.args[0].value, str):
+            self.rank[attr] = call.args[0].value
+        # make_condition(rank, self._lock) / threading.Condition(self._lock)
+        base = None
+        if name == "make_condition" and len(call.args) >= 2:
+            base = _self_attr(call.args[1])
+        elif name == "Condition" and call.args:
+            base = _self_attr(call.args[0])
+        if base is not None:
+            self._alias[attr] = base
+
+    def canonical(self, attr: str) -> str:
+        seen = set()
+        while attr in self._alias and attr not in seen:
+            seen.add(attr)
+            attr = self._alias[attr]
+        return attr
+
+
+def collect_class_locks(cls: ast.ClassDef) -> ClassLocks:
+    locks = ClassLocks()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.value, ast.Call) \
+                and _is_lock_ctor(node.value):
+            attr = _self_attr(node.targets[0])
+            if attr is not None:
+                locks.add(attr, node.value)
+    return locks
+
+
+def _guarded_fields(cls: ast.ClassDef, sf: SourceFile,
+                    locks: ClassLocks) -> Tuple[Dict[str, str],
+                                                List[Diagnostic]]:
+    """``# guarded-by:`` annotated field declarations -> lock attr."""
+    fields: Dict[str, str] = {}
+    diags: List[Diagnostic] = []
+    for node in ast.walk(cls):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        else:
+            continue
+        # the annotation may trail any line of a multi-line declaration
+        guard = None
+        for ln in range(node.lineno, (node.end_lineno or node.lineno) + 1):
+            guard = sf.guarded_by(ln)
+            if guard is not None:
+                break
+        if guard is None:
+            continue
+        if locks.canonical(guard) not in locks.locks:
+            diags.append(Diagnostic(
+                sf.path, node.lineno, "GB02",
+                f"guarded-by names unknown lock {guard!r} "
+                f"(class declares: {sorted(locks.locks) or 'none'})"))
+            continue
+        for t in targets:
+            attr = _self_attr(t)
+            if attr is not None:
+                fields[attr] = locks.canonical(guard)
+    return fields, diags
+
+
+class _MethodChecker(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, locks: ClassLocks,
+                 fields: Dict[str, str], method: str):
+        self.sf = sf
+        self.locks = locks
+        self.fields = fields
+        self.method = method
+        self.held: Set[str] = set()
+        self.diags: List[Diagnostic] = []
+
+    # -------------------------------------------------------------- scopes
+    def _with_locks(self, node: ast.With) -> Set[str]:
+        got: Set[str] = set()
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr is not None and attr in self.locks.locks:
+                got.add(self.locks.canonical(attr))
+        return got
+
+    def visit_With(self, node: ast.With) -> None:
+        got = self._with_locks(node)
+        added = got - self.held
+        self.held |= added
+        self.generic_visit(node)
+        self.held -= added
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # nested def: runs later, possibly on another thread — its body
+        # starts from its own ``# holds:`` annotation, not our held set
+        saved = self.held
+        self.held = {self.locks.canonical(a)
+                     for a in self.sf.holds(node.lineno)}
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        saved, self.held = self.held, set()
+        self.visit(node.body)
+        self.held = saved
+
+    # ------------------------------------------------------------- accesses
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr is not None and attr in self.fields:
+            need = self.fields[attr]
+            if need not in self.held:
+                kind = "write" if isinstance(node.ctx,
+                                             (ast.Store, ast.Del)) else "read"
+                self.diags.append(Diagnostic(
+                    self.sf.path, node.lineno, "GB01",
+                    f"{kind} of self.{attr} (guarded-by {need}) in "
+                    f"{self.method}() without holding it — wrap in "
+                    f"'with self.{need}:' or annotate the def "
+                    f"'# holds: {need}'"))
+        self.generic_visit(node)
+
+
+def check_file(sf: SourceFile) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    if sf.tree is None:
+        return diags
+    for cls in [n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)]:
+        locks = collect_class_locks(cls)
+        fields, fdiags = _guarded_fields(cls, sf, locks)
+        diags.extend(fdiags)
+        if not fields:
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if meth.name in _EXEMPT_METHODS:
+                continue
+            chk = _MethodChecker(sf, locks, fields, meth.name)
+            chk.held = {locks.canonical(a) for a in sf.holds(meth.lineno)}
+            unknown = [a for a in sf.holds(meth.lineno)
+                       if locks.canonical(a) not in locks.locks]
+            for a in unknown:
+                diags.append(Diagnostic(
+                    sf.path, meth.lineno, "GB02",
+                    f"holds names unknown lock {a!r}"))
+            for stmt in meth.body:
+                chk.visit(stmt)
+            diags.extend(chk.diags)
+    return diags

@@ -1,0 +1,343 @@
+"""Static lock-order analyzer (LO01/LO02/LO03).
+
+Extracts the cross-module lock-acquisition graph and checks every edge
+against the declared hierarchy in :mod:`.witness` (outer locks rank
+higher; acquisition must strictly descend).
+
+Resolution strategy, in order of preference:
+
+1. **Lexical nesting** — ``with self._inner:`` inside ``with self._outer:``
+   yields edge ``(outer_rank, inner_rank)``.  Ranks come from the witness
+   factory call on the attribute's declaration
+   (``self._lock = make_lock("router")``).
+2. **Same-class summaries** — a call ``self.m()`` under a held lock
+   contributes every rank ``m`` may transitively acquire.
+3. **Unique-name cross-class resolution** — ``obj.m()`` resolves when
+   exactly one class in the analyzed fileset defines ``m`` (e.g.
+   ``_set_result`` only exists on ``QueryFuture``).  Ambiguous names are
+   skipped rather than guessed.
+4. **Annotations** — ``# acquires: <rank>`` on a statement declares what
+   an unresolvable call or local-variable ``with`` may take.
+
+Codes: LO01 — an edge that contradicts the hierarchy; LO02 — a cycle in
+the acquisition graph; LO03 — a rank name the hierarchy doesn't declare.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.concurrency.diagnostics import Diagnostic, SourceFile
+from repro.analysis.concurrency.guarded import (ClassLocks, _self_attr,
+                                                collect_class_locks)
+from repro.analysis.concurrency.witness import HIERARCHY, LEVEL
+
+# (outer_rank, inner_rank, path, line)
+Edge = Tuple[str, str, str, int]
+
+_MODULE = "<module>"
+
+
+def _lock_primitive_receiver(fn: ast.AST, locks: ClassLocks) -> bool:
+    """True for ``self.<lockattr>.wait()`` etc. — methods ON a lock/cond
+    object are threading primitives, never repo methods, so unique-name
+    resolution must not fire on them (``self._cond.wait`` is
+    ``Condition.wait``, not ``BatchTicket.wait``)."""
+    if isinstance(fn, ast.Attribute):
+        attr = _self_attr(fn.value)
+        return attr is not None and attr in locks.locks
+    return False
+
+
+class _Method:
+    def __init__(self, path: str, cls: str, name: str,
+                 node: ast.AST, locks: ClassLocks, sf: SourceFile):
+        self.path = path
+        self.cls = cls
+        self.name = name
+        self.node = node
+        self.locks = locks
+        self.sf = sf
+        self.key = (path, cls, name)
+        self.direct: Set[str] = set()     # ranks acquired in this body
+        self.callees: Set[Tuple[str, str, str]] = set()
+        self.summary: Set[str] = set()    # transitive closure (fixpoint)
+
+
+def _rank_of(locks: ClassLocks, attr: str) -> Optional[str]:
+    return locks.rank.get(locks.canonical(attr))
+
+
+class _BodyScanner(ast.NodeVisitor):
+    """First pass per method: direct rank acquisitions + resolvable callees."""
+
+    def __init__(self, m: _Method, registry: Dict[str, List[_Method]],
+                 diags: List[Diagnostic]):
+        self.m = m
+        self.registry = registry
+        self.diags = diags
+
+    def _annotated(self, line: int) -> List[str]:
+        ranks = self.m.sf.acquires(line)
+        for r in ranks:
+            if r not in LEVEL:
+                self.diags.append(Diagnostic(
+                    self.m.path, line, "LO03",
+                    f"acquires names unknown rank {r!r}; "
+                    f"hierarchy: {' < '.join(HIERARCHY)}"))
+        return [r for r in ranks if r in LEVEL]
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr is not None:
+                rank = _rank_of(self.m.locks, attr)
+                if rank is not None:
+                    self.m.direct.add(rank)
+        self.m.direct.update(self._annotated(node.lineno))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.m.direct.update(self._annotated(node.lineno))
+        fn = node.func
+        name: Optional[str] = None
+        same_class = False
+        if _lock_primitive_receiver(fn, self.m.locks):
+            name = None
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+            same_class = isinstance(fn.value, ast.Name) \
+                and fn.value.id == "self"
+        elif isinstance(fn, ast.Name):
+            name = fn.id
+        if name is not None:
+            target = self._resolve(name, same_class)
+            if target is not None:
+                self.m.callees.add(target.key)
+        self.generic_visit(node)
+
+    def visit_Expr(self, node: ast.Expr) -> None:
+        self.m.direct.update(self._annotated(node.lineno))
+        self.generic_visit(node)
+
+    def _resolve(self, name: str, same_class: bool) -> Optional[_Method]:
+        if same_class:
+            for cand in self.registry.get(name, []):
+                if cand.path == self.m.path and cand.cls == self.m.cls:
+                    return cand
+            return None
+        cands = self.registry.get(name, [])
+        return cands[0] if len(cands) == 1 else None
+
+
+class _EdgeExtractor(ast.NodeVisitor):
+    """Second pass: walk with a held-rank stack, emitting graph edges."""
+
+    def __init__(self, m: _Method, summaries: Dict[Tuple, Set[str]],
+                 registry: Dict[str, List[_Method]], edges: List[Edge]):
+        self.m = m
+        self.summaries = summaries
+        self.registry = registry
+        self.edges = edges
+        self.held: List[str] = []
+
+    def _emit(self, ranks: Set[str], line: int) -> None:
+        for outer in self.held:
+            for inner in ranks:
+                if inner != outer:
+                    self.edges.append((outer, inner, self.m.path, line))
+
+    def _annotated(self, line: int) -> Set[str]:
+        return {r for r in self.m.sf.acquires(line) if r in LEVEL}
+
+    def visit_With(self, node: ast.With) -> None:
+        got: List[str] = []
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr is not None:
+                rank = _rank_of(self.m.locks, attr)
+                if rank is not None:
+                    got.append(rank)
+        ann = self._annotated(node.lineno)
+        self._emit(set(got) | ann, node.lineno)
+        self.held.extend(got)
+        # annotated ranks on a with-line describe the context manager's own
+        # acquisitions (held for the body)
+        self.held.extend(sorted(ann))
+        self.generic_visit(node)
+        del self.held[len(self.held) - len(got) - len(ann):]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        acquired = set(self._annotated(node.lineno))
+        fn = node.func
+        name: Optional[str] = None
+        same_class = False
+        if _lock_primitive_receiver(fn, self.m.locks):
+            name = None
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+            same_class = isinstance(fn.value, ast.Name) \
+                and fn.value.id == "self"
+        elif isinstance(fn, ast.Name):
+            name = fn.id
+        if name is not None:
+            target = None
+            if same_class:
+                for cand in self.registry.get(name, []):
+                    if cand.path == self.m.path and cand.cls == self.m.cls:
+                        target = cand
+                        break
+            else:
+                cands = self.registry.get(name, [])
+                target = cands[0] if len(cands) == 1 else None
+            if target is not None:
+                acquired |= self.summaries.get(target.key, set())
+        if acquired:
+            self._emit(acquired, node.lineno)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        saved = self.held
+        self.held = []
+        for attr in self.m.sf.holds(node.lineno):
+            rank = _rank_of(self.m.locks, attr)
+            if rank is not None:
+                self.held.append(rank)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        saved, self.held = self.held, []
+        self.visit(node.body)
+        self.held = saved
+
+
+def _collect_methods(sources: Sequence[SourceFile],
+                     diags: List[Diagnostic]) -> List[_Method]:
+    methods: List[_Method] = []
+    for sf in sources:
+        if sf.tree is None:
+            continue
+        for cls in [n for n in ast.walk(sf.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            locks = collect_class_locks(cls)
+            for attr, rank in locks.rank.items():
+                if rank not in LEVEL:
+                    line = next((n.lineno for n in ast.walk(cls)
+                                 if isinstance(n, ast.Assign)
+                                 and _self_attr(n.targets[0]) == attr), 1)
+                    diags.append(Diagnostic(
+                        sf.path, line, "LO03",
+                        f"lock self.{attr} declares unknown rank {rank!r}; "
+                        f"hierarchy: {' < '.join(HIERARCHY)}"))
+            for meth in cls.body:
+                if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    methods.append(_Method(sf.path, cls.name, meth.name,
+                                           meth, locks, sf))
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                methods.append(_Method(sf.path, _MODULE, node.name, node,
+                                       ClassLocks(), sf))
+    return methods
+
+
+def extract_edges(sources: Sequence[SourceFile],
+                  diags: List[Diagnostic]) -> List[Edge]:
+    methods = _collect_methods(sources, diags)
+    registry: Dict[str, List[_Method]] = {}
+    for m in methods:
+        registry.setdefault(m.name, []).append(m)
+
+    for m in methods:
+        scanner = _BodyScanner(m, registry, diags)
+        for stmt in m.node.body:
+            scanner.visit(stmt)
+
+    # fixpoint: propagate acquired ranks through resolved calls
+    summaries = {m.key: set(m.direct) for m in methods}
+    by_key = {m.key: m for m in methods}
+    changed = True
+    while changed:
+        changed = False
+        for m in methods:
+            s = summaries[m.key]
+            before = len(s)
+            for callee in m.callees:
+                s |= summaries.get(callee, set())
+            if len(s) != before:
+                changed = True
+    for m in methods:
+        m.summary = summaries[m.key]
+
+    edges: List[Edge] = []
+    for m in methods:
+        ex = _EdgeExtractor(m, summaries, registry, edges)
+        for attr in m.sf.holds(m.node.lineno):
+            rank = _rank_of(m.locks, attr)
+            if rank is not None:
+                ex.held.append(rank)
+        for stmt in m.node.body:
+            ex.visit(stmt)
+    return edges
+
+
+def _find_cycle(graph: Dict[str, Set[str]]) -> Optional[List[str]]:
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    path: List[str] = []
+
+    def dfs(n: str) -> Optional[List[str]]:
+        color[n] = GREY
+        path.append(n)
+        for nxt in sorted(graph.get(n, ())):
+            if color.get(nxt, WHITE) == GREY:
+                return path[path.index(nxt):] + [nxt]
+            if color.get(nxt, WHITE) == WHITE:
+                found = dfs(nxt)
+                if found:
+                    return found
+        path.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            found = dfs(n)
+            if found:
+                return found
+    return None
+
+
+def check_files(sources: Sequence[SourceFile]) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    edges = extract_edges(sources, diags)
+
+    seen: Set[Tuple[str, str, str, int]] = set()
+    graph: Dict[str, Set[str]] = {}
+    site: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    for outer, inner, path, line in edges:
+        graph.setdefault(outer, set()).add(inner)
+        graph.setdefault(inner, set())
+        site.setdefault((outer, inner), (path, line))
+        if LEVEL[inner] >= LEVEL[outer]:
+            key = (outer, inner, path, line)
+            if key not in seen:
+                seen.add(key)
+                diags.append(Diagnostic(
+                    path, line, "LO01",
+                    f"acquires {inner!r} (level {LEVEL[inner]}) while "
+                    f"holding {outer!r} (level {LEVEL[outer]}); hierarchy "
+                    f"requires strictly descending acquisition "
+                    f"({' < '.join(HIERARCHY)})"))
+
+    cycle = _find_cycle(graph)
+    if cycle is not None:
+        path, line = site[(cycle[0], cycle[1])]
+        diags.append(Diagnostic(
+            path, line, "LO02",
+            f"lock-acquisition cycle: {' -> '.join(cycle)}"))
+    return diags

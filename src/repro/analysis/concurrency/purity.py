@@ -1,0 +1,275 @@
+"""Hot-path purity lints (PU01/PU02/PU03).
+
+* **PU01 — device sync under a lock.**  Inside a held-lock scope
+  (``with self._lock:`` or a ``# holds:``-annotated method) a call that
+  synchronises with the device or materialises an array on the host —
+  ``block_until_ready()``, ``.item()``, ``np.asarray``/``np.array``,
+  ``jax.device_get``, ``float()`` on a non-constant — stalls every thread
+  queued on that lock for a device round-trip.  Snapshot under the lock,
+  materialise outside.
+* **PU02 — Python side effects in traced code.**  Functions traced by
+  ``jax.jit`` or Pallas run their Python bodies once, at trace time: a
+  lock acquisition, ``print``, ``time.*``, ``open`` or ``.item()`` there
+  is at best dead code and at worst a deadlock baked into the trace.
+  Scope: ``kernels/`` and ``core/distributed.py``.  Traced functions are
+  found by decorator (``jax.jit``, ``functools.partial(jax.jit, ...)``),
+  by ``jax.jit(fn)`` assignment, by being handed to ``pallas_call``, by
+  naming convention (``*_kernel``, ``_local_*``), and transitively
+  through same-module calls and nested defs.
+* **PU03 — bare lock construction.**  ``threading.Lock/RLock/Condition``
+  anywhere outside :mod:`.witness` bypasses the rank factories, making
+  the lock invisible to both the static order analysis and the runtime
+  witness.  Use ``make_lock(rank)`` / ``make_rlock`` / ``make_condition``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Set
+
+from repro.analysis.concurrency.diagnostics import Diagnostic, SourceFile
+from repro.analysis.concurrency.guarded import (_self_attr,
+                                                collect_class_locks)
+
+_WITNESS_SUFFIX = os.path.join("analysis", "concurrency", "witness.py")
+
+_SYNC_ATTR_CALLS = {"block_until_ready", "item"}
+_SYNC_QUALIFIED = {("np", "asarray"), ("np", "array"),
+                   ("numpy", "asarray"), ("numpy", "array"),
+                   ("jax", "device_get")}
+_EFFECT_NAME_CALLS = {"print", "open", "input"}
+_EFFECT_MODULES = {"threading", "time"}
+_LOCKISH_FRAGMENTS = ("lock", "cond", "_cv", "mutex")
+
+
+def _qualified(call: ast.Call) -> Optional[tuple]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+        return (fn.value.id, fn.attr)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# PU01 — sync/materialisation under a held lock
+# ---------------------------------------------------------------------------
+
+class _SyncUnderLock(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, lock_attrs: Set[str]):
+        self.sf = sf
+        self.lock_attrs = lock_attrs
+        self.depth = 0          # held-lock nesting depth
+        self.diags: List[Diagnostic] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        got = sum(1 for item in node.items
+                  if (_self_attr(item.context_expr) or "") in self.lock_attrs)
+        self.depth += got
+        self.generic_visit(node)
+        self.depth -= got
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        saved = self.depth
+        self.depth = 1 if any(a in self.lock_attrs
+                              for a in self.sf.holds(node.lineno)) else 0
+        for stmt in node.body:
+            self.visit(stmt)
+        self.depth = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.depth > 0:
+            what = self._sync_kind(node)
+            if what is not None:
+                self.diags.append(Diagnostic(
+                    self.sf.path, node.lineno, "PU01",
+                    f"{what} while holding a lock — every thread queued on "
+                    f"it stalls for the device round-trip; snapshot under "
+                    f"the lock and materialise outside"))
+        self.generic_visit(node)
+
+    def _sync_kind(self, node: ast.Call) -> Optional[str]:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_ATTR_CALLS:
+            return f".{fn.attr}()"
+        q = _qualified(node)
+        if q in _SYNC_QUALIFIED:
+            return f"{q[0]}.{q[1]}()"
+        if isinstance(fn, ast.Name) and fn.id == "float" and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            return "float() on a non-constant"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# PU02 — side effects inside traced functions
+# ---------------------------------------------------------------------------
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Attribute) and dec.attr == "jit":
+        return True
+    if isinstance(dec, ast.Name) and dec.id == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dec.func
+        is_partial = (isinstance(fn, ast.Attribute) and fn.attr == "partial")\
+            or (isinstance(fn, ast.Name) and fn.id == "partial")
+        if is_partial and dec.args:
+            return _is_jit_decorator(dec.args[0])
+        return _is_jit_decorator(fn)
+    return False
+
+
+def _traced_roots(tree: ast.Module) -> Set[str]:
+    roots: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                roots.add(node.name)
+            if node.name.endswith("_kernel") or \
+                    node.name.startswith("_local_"):
+                roots.add(node.name)
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                fn.id if isinstance(fn, ast.Name) else None
+            if name == "pallas_call" and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                roots.add(node.args[0].id)
+            if name == "jit":
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        roots.add(arg.id)
+    return roots
+
+
+def _callees(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            out.add(node.func.id)
+    return out
+
+
+class _TracedEffects(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, fname: str):
+        self.sf = sf
+        self.fname = fname
+        self.diags: List[Diagnostic] = []
+
+    def visit_Call(self, node: ast.Call) -> None:
+        what: Optional[str] = None
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _EFFECT_NAME_CALLS:
+            what = f"{fn.id}()"
+        q = _qualified(node)
+        if q is not None and q[0] in _EFFECT_MODULES:
+            what = f"{q[0]}.{q[1]}()"
+        if q in _SYNC_QUALIFIED:
+            what = f"{q[0]}.{q[1]}()"
+        if isinstance(fn, ast.Attribute) and \
+                fn.attr in ("item", "block_until_ready", "acquire"):
+            what = f".{fn.attr}()"
+        if what is not None:
+            self.diags.append(Diagnostic(
+                self.sf.path, node.lineno, "PU02",
+                f"{what} inside jit/Pallas-traced {self.fname}() — traced "
+                f"bodies run once at trace time; side effects and host "
+                f"syncs don't belong in them"))
+        self.generic_visit(node)
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            expr = item.context_expr
+            name = expr.attr if isinstance(expr, ast.Attribute) else \
+                expr.id if isinstance(expr, ast.Name) else ""
+            if any(f in name.lower() for f in _LOCKISH_FRAGMENTS):
+                self.diags.append(Diagnostic(
+                    self.sf.path, node.lineno, "PU02",
+                    f"lock acquisition ('with {name}') inside jit/Pallas-"
+                    f"traced {self.fname}()"))
+        self.generic_visit(node)
+
+
+def _check_traced(sf: SourceFile) -> List[Diagnostic]:
+    assert sf.tree is not None
+    funcs = {node.name: node for node in sf.tree.body
+             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    traced = {n for n in _traced_roots(sf.tree) if n in funcs}
+    # transitive same-module callees join the traced set
+    changed = True
+    while changed:
+        changed = False
+        for name in list(traced):
+            for callee in _callees(funcs[name]):
+                if callee in funcs and callee not in traced:
+                    traced.add(callee)
+                    changed = True
+    diags: List[Diagnostic] = []
+    for name in sorted(traced):
+        chk = _TracedEffects(sf, name)
+        for stmt in funcs[name].body:    # nested defs visited implicitly
+            chk.visit(stmt)
+        diags.extend(chk.diags)
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# PU03 — bare threading lock constructors
+# ---------------------------------------------------------------------------
+
+def _check_bare_locks(sf: SourceFile) -> List[Diagnostic]:
+    assert sf.tree is not None
+    diags: List[Diagnostic] = []
+    if sf.path.endswith(_WITNESS_SUFFIX):
+        return diags
+    from_imports: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "threading":
+            from_imports.update(a.asname or a.name for a in node.names)
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = _qualified(node)
+        name = None
+        if q is not None and q[0] == "threading" and \
+                q[1] in ("Lock", "RLock", "Condition"):
+            name = f"threading.{q[1]}"
+        elif isinstance(node.func, ast.Name) and \
+                node.func.id in ("Lock", "RLock", "Condition") and \
+                node.func.id in from_imports:
+            name = node.func.id
+        if name is not None:
+            diags.append(Diagnostic(
+                sf.path, node.lineno, "PU03",
+                f"bare {name}() bypasses the lock-rank factories; use "
+                f"make_lock/make_rlock/make_condition from "
+                f"repro.analysis.concurrency.witness"))
+    return diags
+
+
+# ---------------------------------------------------------------------------
+
+def check_file(sf: SourceFile, jit_scope: bool = False) -> List[Diagnostic]:
+    if sf.tree is None:
+        return []
+    diags: List[Diagnostic] = []
+    # PU01: per class, using its recognised lock attributes
+    for cls in [n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)]:
+        locks = collect_class_locks(cls)
+        if not locks.locks:
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            chk = _SyncUnderLock(sf, locks.locks)
+            chk.depth = 1 if any(a in locks.locks
+                                 for a in sf.holds(meth.lineno)) else 0
+            for stmt in meth.body:
+                chk.visit(stmt)
+            diags.extend(chk.diags)
+    if jit_scope:
+        diags.extend(_check_traced(sf))
+    diags.extend(_check_bare_locks(sf))
+    return diags

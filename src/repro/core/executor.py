@@ -54,7 +54,6 @@ schema.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from collections import deque
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
@@ -63,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.concurrency.witness import make_lock
 from repro.core import pq
 from repro.core.futures import BatchTicket, DeadlineExceeded, QueryFuture
 from repro.core.rerank import heuristic_rerank
@@ -255,28 +255,29 @@ class QueryExecutor:
     def __init__(self, index: "FusionANNSIndex",
                  ctx: Optional[ShardCtx] = None, *, mesh=None):
         self.index = index
-        self.ctx = ctx if ctx is not None else ShardCtx()
-        self._placed: Optional[jax.Array] = None
-        self._placed_src = None
-        if mesh is not None:
-            self.attach_mesh(mesh)
         # serializes stage ①-⑥ host work (traversal + LUT + device dispatch)
         # across threads: a pump thread and a ticker may both refill depth
-        # slots, and the placement cache write must not race
-        self._dispatch_lock = threading.Lock()
+        # slots, and the placement cache write must not race.  Created
+        # before attach_mesh below, which takes it.
+        self._dispatch_lock = make_lock("executor")
         # Backend-protocol state (DESIGN.md §6): the executor is the
         # queueless backend — submit dispatches immediately, retirement is
         # caller-driven — but it reports through the same rollup schema as
         # the service and the router
-        self._backend_lock = threading.Lock()
-        self._request_tickets: List[BatchTicket] = []
-        self._next_rid = 0
+        self._backend_lock = make_lock("executor")
+        self.ctx = ctx if ctx is not None else ShardCtx()
+        self._placed: Optional[jax.Array] = None    # guarded-by: _dispatch_lock
+        self._placed_src = None                     # guarded-by: _dispatch_lock
+        if mesh is not None:
+            self.attach_mesh(mesh)
+        self._request_tickets: List[BatchTicket] = []   # guarded-by: _backend_lock
+        self._next_rid = 0                          # guarded-by: _backend_lock
         # responses served since the last drain(); bounded like the
         # latency window so a long-lived caller that only ever reads
         # futures (never drains) stays O(1) memory
-        self._undrained: deque = deque(maxlen=8192)
-        self._latencies: deque = deque(maxlen=8192)
-        self.query_stats = dict.fromkeys(QUERY_STATS_FIELDS, 0)
+        self._undrained: deque = deque(maxlen=8192)     # guarded-by: _backend_lock
+        self._latencies: deque = deque(maxlen=8192)     # guarded-by: _backend_lock
+        self.query_stats = dict.fromkeys(QUERY_STATS_FIELDS, 0)  # guarded-by: _backend_lock
         self.query_stats["served"] = 0
 
     # locks are not deepcopy/pickle-able (``fresh_index`` deep-copies the
@@ -291,8 +292,8 @@ class QueryExecutor:
 
     def __setstate__(self, state):
         self.__dict__.update(state)
-        self._dispatch_lock = threading.Lock()
-        self._backend_lock = threading.Lock()
+        self._dispatch_lock = make_lock("executor")
+        self._backend_lock = make_lock("executor")
         self._request_tickets = []
 
     # ------------------------------------------------------------- sharding
@@ -306,12 +307,17 @@ class QueryExecutor:
         committed to the mesh at dispatch, so nothing leaks onto devices
         outside the group."""
         from repro.sharding.spec import rules_for_mesh
-        self.ctx = ShardCtx(mesh=mesh, rules=rules_for_mesh(mesh))
-        self._placed = None          # free the previous mesh's placement
-        self._placed_src = None
+        rules = rules_for_mesh(mesh)
+        # a router recarve may retarget this executor while a pump thread
+        # is mid-dispatch: the ctx + placement-cache swap must not
+        # interleave with a _device_codes() read of the old placement
+        with self._dispatch_lock:
+            self.ctx = ShardCtx(mesh=mesh, rules=rules)
+            self._placed = None      # free the previous mesh's placement
+            self._placed_src = None
         return self
 
-    def _n_shards(self) -> int:
+    def _n_shards(self) -> int:      # holds: _dispatch_lock
         if self.ctx.mesh is None:
             return 1
         axes = self.ctx.rules.corpus
@@ -321,7 +327,7 @@ class QueryExecutor:
             n *= self.ctx.mesh.shape[a]
         return n
 
-    def _device_codes(self) -> jax.Array:
+    def _device_codes(self) -> jax.Array:        # holds: _dispatch_lock
         """HBM-tier codes; placed row-sharded once per codes version (insert
         invalidates the placement by rebinding ``index.codes``)."""
         codes = self.index.codes
@@ -341,7 +347,7 @@ class QueryExecutor:
 
     # --------------------------------------------------------------- stages
     def _dispatch(self, queries: np.ndarray,
-                  plans: Sequence[QueryPlan]) -> _Window:
+                  plans: Sequence[QueryPlan]) -> _Window:  # holds: _dispatch_lock
         """Stages ①-⑥: host traversal + async device scan for one window.
 
         Heterogeneous per-query plans share the window's scan: traversal
@@ -398,7 +404,7 @@ class QueryExecutor:
 
     def _dispatch_fused(self, queries: np.ndarray,
                         plans: Sequence[QueryPlan], per_q, union,
-                        t_graph: float) -> _Window:
+                        t_graph: float) -> _Window:    # holds: _dispatch_lock
         """Fused form of stages ④⑤⑥ (``plan.fused``): one LUT→ADC→top-k
         pipeline per shard over per-query candidate ROW LISTS.  No union
         bucket, membership mask, or candidate gather ever materialises —
@@ -555,13 +561,13 @@ class QueryExecutor:
             except BaseException as exc:
                 for qi in range(s, min(s + W, n)):
                     futures[qi]._set_exception(exc)
-                with cond:
+                with cond:                     # acquires: ticket
                     inflight.cancel_reservation()
                     busy[0] -= 1
                     cond.notify_all()
                 raise
             w.start, w.wi = s, wi
-            with cond:
+            with cond:                             # acquires: ticket
                 inflight.commit(w)
                 ticket.events.append(("dispatch", wi))
                 busy[0] -= 1
@@ -579,7 +585,7 @@ class QueryExecutor:
                     futures[w.start + qi]._set_exception(exc)
                 raise
             finally:
-                with cond:
+                with cond:                         # acquires: ticket
                     ticket.events.append(("finish", w.wi))
                     busy[0] -= 1
                     cond.notify_all()
@@ -589,7 +595,7 @@ class QueryExecutor:
             blocking on window t's scan (the paper's CPU/GPU overlap);
             retirement is FIFO from this path."""
             w = None
-            with lock:
+            with lock:                             # acquires: ticket
                 wi = _claim_dispatch()
                 if wi is None and len(inflight):
                     w = inflight.pop()
@@ -609,7 +615,7 @@ class QueryExecutor:
             from repro.core.distributed import window_scan_ready
             progressed = False
             while True:
-                with lock:
+                with lock:                         # acquires: ticket
                     w = inflight.pop_ready(
                         lambda x: window_scan_ready(x.vals, x.pos))
                     if w is not None:
@@ -618,7 +624,7 @@ class QueryExecutor:
                     _retire(w)
                     progressed = True
                     continue
-                with lock:
+                with lock:                         # acquires: ticket
                     wi = _claim_dispatch()
                 if wi is None:
                     return progressed
@@ -631,7 +637,7 @@ class QueryExecutor:
             f._driver = _pump
         # eager phase: fill the in-flight depth before handing back
         while True:
-            with lock:
+            with lock:                             # acquires: ticket
                 wi = _claim_dispatch()
             if wi is None:
                 break
@@ -732,7 +738,8 @@ class QueryExecutor:
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 of submit->resolve latency over request-path serves."""
         with self._backend_lock:
-            lat = np.asarray(self._latencies)
+            snap = list(self._latencies)
+        lat = np.asarray(snap)       # materialise OUTSIDE the lock (PU01)
         if not len(lat):
             return {"p50": 0.0, "p99": 0.0, "n": 0}
         return {"p50": float(np.percentile(lat, 50)),

@@ -39,9 +39,10 @@ query's re-rank would start, never mid-kernel.
 
 from __future__ import annotations
 
-import threading
 import time
 from typing import Any, Callable, List, Optional, Tuple
+
+from repro.analysis.concurrency.witness import make_condition, make_rlock
 
 __all__ = [
     "QueryFuture", "BatchTicket",
@@ -87,21 +88,25 @@ class QueryFuture:
     def __init__(self, tag: Any = None,
                  driver: Optional[Callable[[], bool]] = None,
                  blocking: bool = False):
-        self._state = _PENDING
-        self._result: Any = None
-        self._exc: Optional[BaseException] = None
+        self._cond = make_condition("future")
+        self._state = _PENDING                   # guarded-by: _cond
+        self._result: Any = None                 # guarded-by: _cond
+        self._exc: Optional[BaseException] = None   # guarded-by: _cond
         self._driver = driver
         self._blocking = blocking
-        self._cond = threading.Condition()
-        self._callbacks: List[Callable[["QueryFuture"], None]] = []
+        self._callbacks: List[Callable[["QueryFuture"], None]] = []  # guarded-by: _cond
         self.tag = tag
 
     # -------------------------------------------------------------- queries
     def done(self) -> bool:
         """True once resolved — with a result, an exception, or cancelled."""
+        # _state transitions are monotonic (pending -> terminal) and an
+        # int read is atomic in CPython: a stale False means "poll again"
+        # lint-ok: GB01 lock-free fast path on a monotonic state word
         return self._state != _PENDING
 
     def cancelled(self) -> bool:
+        # lint-ok: GB01 lock-free fast path, same monotonicity as done()
         return self._state == _CANCELLED
 
     # ------------------------------------------------------------- commands
@@ -188,20 +193,22 @@ class QueryFuture:
 
     def result(self, timeout: Optional[float] = None) -> Any:
         self._await(timeout, "result")
-        if self._state == _CANCELLED:
-            raise CancelledError("query was cancelled")
-        if self._state == _ERROR:
-            raise self._exc
-        return self._result
+        with self._cond:
+            if self._state == _CANCELLED:
+                raise CancelledError("query was cancelled")
+            if self._state == _ERROR:
+                raise self._exc
+            return self._result
 
     def exception(self, timeout: Optional[float] = None
                   ) -> Optional[BaseException]:
         """The stored exception (None if the future holds a result).
         Waits/drives like ``result()``; raises on cancellation."""
         self._await(timeout, "exception")
-        if self._state == _CANCELLED:
-            raise CancelledError("query was cancelled")
-        return self._exc
+        with self._cond:
+            if self._state == _CANCELLED:
+                raise CancelledError("query was cancelled")
+            return self._exc
 
     # ------------------------------------------------- producer-side setters
     def _set_result(self, value: Any) -> None:
@@ -243,13 +250,14 @@ class BatchTicket:
     def __init__(self, futures: List[QueryFuture],
                  events: Optional[List[Tuple[str, int]]] = None):
         self.futures = futures
+        self._lock = make_rlock("ticket")
+        self._cond = make_condition("ticket", self._lock)
         self.events: List[Tuple[str, int]] = events if events is not None \
-            else []
+            else []                              # guarded-by: _lock
         self._pump: Callable[[], bool] = lambda: False
         self._poll: Callable[[], bool] = lambda: False
-        self._lock = threading.RLock()
-        self._cond = threading.Condition(self._lock)
-        self._busy = [0]          # windows mid-dispatch/mid-retire, any thread
+        # windows mid-dispatch/mid-retire, any thread
+        self._busy = [0]                         # guarded-by: _lock
 
     def __len__(self) -> int:
         return len(self.futures)
@@ -265,7 +273,7 @@ class BatchTicket:
         anything advanced."""
         return self._poll()
 
-    def _stall_message(self) -> str:
+    def _stall_message(self) -> str:             # holds: _lock
         pending = [f.tag for f in self.futures if not f.done()]
         disp = {wi for kind, wi in self.events if kind == "dispatch"}
         fin = {wi for kind, wi in self.events if kind == "finish"}
@@ -296,7 +304,9 @@ class BatchTicket:
                     continue
             if self.done():
                 break
-            raise FutureError(self._stall_message())
+            with self._cond:
+                msg = self._stall_message()
+            raise FutureError(msg)
         # barrier: let concurrent retirements finish their bookkeeping
         # (the finish event is appended before _busy drops to 0)
         with self._cond:

@@ -56,6 +56,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.concurrency.witness import make_condition, make_rlock
 from repro.core.engine import FusionANNSIndex
 # QUERY_STATS_FIELDS' canonical home moved to core.executor (next to the
 # QueryStats schema) in PR 5; re-exported here for existing importers
@@ -108,39 +109,42 @@ class BatchingANNSService:
         self.lut_int8 = lut_int8
         self.max_queue = max_queue
         self.tick_interval_s = tick_interval_s
-        self._queue: Deque[Request] = deque()
-        self._next_rid = 0
         # one lock guards queue + stats + latencies; the condition wakes
         # the pump thread on submissions and shutdown
-        self._lock = threading.RLock()
-        self._cv = threading.Condition(self._lock)
+        self._lock = make_rlock("service")
+        self._cv = make_condition("service", self._lock)
+        self._queue: Deque[Request] = deque()     # guarded-by: _lock
+        self._next_rid = 0                        # guarded-by: _lock
         self.stats: Dict[str, float] = {
             "batches": 0, "requests": 0, "mean_batch": 0.0,
-            "rejected": 0, "expired": 0, "cancelled": 0}
+            "rejected": 0, "expired": 0, "cancelled": 0}  # guarded-by: _lock
         # summed QueryStats counters of every response this replica served
         # (the router's cross-replica rollup reads these); "served" counts
         # only the responses that actually contributed — cancelled/expired
         # requests appear in ``stats`` but never here
         self.query_stats: Dict[str, int] = dict.fromkeys(
-            QUERY_STATS_FIELDS, 0)
+            QUERY_STATS_FIELDS, 0)                # guarded-by: _lock
         self.query_stats["served"] = 0
         # enqueue -> resolve per request; bounded so a long-lived replica's
         # percentile window stays O(1) memory (sliding, newest-wins)
-        self.latencies_s: Deque[float] = deque(maxlen=8192)
+        self.latencies_s: Deque[float] = deque(maxlen=8192)  # guarded-by: _lock
         # responses served since the last drain() — the Backend-protocol
         # drain contract; bounded like the latency window so a long-lived
         # replica that is never drained stays O(1) memory
-        self._undrained: Deque[SearchResponse] = deque(maxlen=8192)
+        self._undrained: Deque[SearchResponse] = deque(maxlen=8192)  # guarded-by: _lock
         # per-batch executor event logs (the out-of-order retirement probe)
-        self.ticket_events: Deque[List[Tuple[str, int]]] = deque(maxlen=256)
+        self.ticket_events: Deque[List[Tuple[str, int]]] = deque(maxlen=256)  # guarded-by: _lock
         # threaded runtime
         self.threaded = False
-        self._running = False
+        self._running = False                     # guarded-by: _lock
         self._ticker_stop = False
-        self._serving = 0                  # batches between formation+resolve
-        self._in_flight = 0                # requests inside a forming batch
+        self._serving = 0   # batches between formation+resolve; guarded-by: _lock
+        self._in_flight = 0  # requests inside a forming batch; guarded-by: _lock
+        # lock-free single-writer handoff: only _serve_batch_inner (pump
+        # thread) writes it; the ticker reads a snapshot and tolerates
+        # staleness, so it is deliberately NOT guarded
         self._active_ticket = None
-        self._ticker_cv = threading.Condition()   # parks the idle ticker
+        self._ticker_cv = make_condition("service")   # parks the idle ticker
         self._pump_thread: Optional[threading.Thread] = None
         self._ticker_thread: Optional[threading.Thread] = None
         if threaded:
@@ -208,6 +212,9 @@ class BatchingANNSService:
                 f"(got {type(request).__name__})")
         query, k, top_n = request.query, request.k, request.top_n
         deadline_s, tag = request.deadline_s, request.tag
+        # materialise the query BEFORE taking the lock: np.asarray on a
+        # device array is a host sync every other submitter would stall on
+        q_arr = np.asarray(query, np.float32)
         with self._cv:
             if len(self._queue) >= self.max_queue:
                 self._compact_locked()
@@ -228,13 +235,13 @@ class BatchingANNSService:
                               driver=None if threaded else self._drive,
                               blocking=threaded)  # fut.tag == rid (no tag)
             self._queue.append(Request(
-                rid, np.asarray(query, np.float32), now, k=k, top_n=top_n,
+                rid, q_arr, now, k=k, top_n=top_n,
                 deadline=None if deadline_s is None else now + deadline_s,
                 future=fut, tag=tag, tenant=request.tenant))
             self._cv.notify_all()
         return fut
 
-    def _compact_locked(self) -> None:
+    def _compact_locked(self) -> None:            # holds: _lock
         """Eager-drop cancelled requests (must hold ``_lock``)."""
         live = deque()
         for r in self._queue:
@@ -247,7 +254,9 @@ class BatchingANNSService:
     def _drive(self) -> bool:
         """Future-side driver (synchronous harness): a pending future
         forces a pump."""
-        if not self._queue:
+        with self._lock:
+            empty = not self._queue
+        if empty:
             return False
         self.pump(force=True)
         return True
@@ -276,8 +285,9 @@ class BatchingANNSService:
                             self._cv.wait()
                     if not self._running and not self._queue:
                         return
+                    force = not self._running   # read under _cv, used after
                 try:
-                    self.pump(force=not self._running)
+                    self.pump(force=force)
                 except Exception:             # noqa: BLE001 — poison batch
                     with self._lock:
                         self.stats["pump_errors"] = \
@@ -318,7 +328,7 @@ class BatchingANNSService:
                         FutureError(f"serving pump failed: {exc!r}"))
 
     # ----------------------------------------------------------------- pump
-    def _window_ready(self, now: float) -> bool:
+    def _window_ready(self, now: float) -> bool:  # holds: _lock
         if not self._queue:
             return False
         if len(self._queue) >= self.max_batch:
@@ -400,7 +410,9 @@ class BatchingANNSService:
             ticket.wait()                     # exceptions stay on the futures
         finally:
             self._active_ticket = None
-            self.ticket_events.append(list(ticket.events))
+            events = list(ticket.events)      # stable: wait() barriered
+            with self._lock:
+                self.ticket_events.append(events)
         t_serve = time.perf_counter() - t0
         # per-request attribution: shared wall-clock + the executor's
         # per-query stage timings (res.stats.t_graph/t_scan/t_rerank)
@@ -450,7 +462,11 @@ class BatchingANNSService:
                 if idle:
                     return self._pop_undrained()
                 time.sleep(1e-3)
-        while self._queue:
+        while True:
+            with self._lock:
+                empty = not self._queue
+            if empty:
+                break
             self.pump(force=True)
         return self._pop_undrained()
 
@@ -475,7 +491,8 @@ class BatchingANNSService:
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 of per-request enqueue->resolve latency (seconds)."""
         with self._lock:
-            lat = np.asarray(self.latencies_s)
+            snap = list(self.latencies_s)
+        lat = np.asarray(snap)       # materialise OUTSIDE the lock (PU01)
         if not len(lat):
             return {"p50": 0.0, "p99": 0.0, "n": 0}
         return {"p50": float(np.percentile(lat, 50)),

@@ -39,6 +39,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.analysis.concurrency.witness import make_lock
 from repro.serve.router import ReplicaRouter
 
 __all__ = ["AutoscalerConfig", "ReplicaAutoscaler"]
@@ -78,8 +79,11 @@ class ReplicaAutoscaler:
         self.router = router
         self.cfg = config or AutoscalerConfig(**kw)
         self.clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("autoscaler")
         self._thread: Optional[threading.Thread] = None
+        # _last_resize_t/_calm_ticks/_seen are control-thread-confined
+        # (only tick() touches them, and ticks never overlap), so they are
+        # deliberately unguarded
         self._stop_evt = threading.Event()
         self._last_resize_t: Optional[float] = None
         self._last_resize_was_up = False
@@ -87,10 +91,10 @@ class ReplicaAutoscaler:
         # spill/reject deltas are what signal "couldn't place demand";
         # absolute counters only ever grow
         self._seen = {"spills": 0, "spill_exhausted": 0, "rejected": 0}
-        self.events: List[Dict[str, object]] = []
+        self.events: List[Dict[str, object]] = []  # guarded-by: _lock
         self.stats: Dict[str, int] = {
             "ticks": 0, "scale_ups": 0, "scale_downs": 0,
-            "capped_by_model": 0, "capped_by_max": 0}
+            "capped_by_model": 0, "capped_by_max": 0}  # guarded-by: _lock
 
     # ------------------------------------------------------------- signals
     def _model_cap(self) -> Optional[int]:
@@ -174,9 +178,12 @@ class ReplicaAutoscaler:
 
     def _record(self, now: float, action: str, sig: Dict[str, object],
                 **extra) -> None:
+        # sample the router BEFORE taking our lock: n_replicas takes the
+        # router's lock, and nested acquisition here buys nothing
+        n = self.router.n_replicas
         with self._lock:
             self.events.append({"t": now, "action": action,
-                                "n_replicas": self.router.n_replicas,
+                                "n_replicas": n,
                                 "live_load": sig["live_load"],
                                 "p99": sig["p99"], **extra})
 

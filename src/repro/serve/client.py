@@ -49,6 +49,7 @@ from typing import (Any, AsyncIterator, Dict, Iterable, List, Optional,
 
 import numpy as np
 
+from repro.analysis.concurrency.witness import make_lock
 from repro.core.executor import QueryResult, QueryStats
 from repro.core.futures import (BackpressureError, DeadlineExceeded,
                                 QueryFuture)
@@ -202,10 +203,11 @@ class RequestCoalescer:
     def __init__(self, *, fused: bool = False, lut_int8: bool = False):
         self.fused = fused
         self.lut_int8 = lut_int8
-        self._lock = threading.Lock()
+        self._lock = make_lock("coalescer")
         # key -> [master future or None (leader mid-admission), waiters]
-        self._inflight: Dict[tuple, list] = {}
-        self.stats: Dict[str, int] = {"leaders": 0, "attached": 0}
+        self._inflight: Dict[tuple, list] = {}    # guarded-by: _lock
+        self.stats: Dict[str, int] = {
+            "leaders": 0, "attached": 0}          # guarded-by: _lock
 
     def key(self, request: SearchRequest) -> tuple:
         return coalesce_key(request, fused=self.fused,
@@ -317,12 +319,13 @@ class ANNSClient:
         # a sync client is routinely shared by N producer threads (the
         # examples' drive_producers shape): counters and the stray buffer
         # are lock-guarded so none of them undercount under contention
-        self._lock = threading.Lock()
-        self.stats: Dict[str, int] = {"submitted": 0, "admission_waits": 0}
+        self._lock = make_lock("client")
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "admission_waits": 0}  # guarded-by: _lock
         # responses a caller-driven backend served while WE drained it to
         # free admission slots: the drain contract owes them to whoever
         # calls drain(), so they stay reachable here instead of vanishing
-        self.stray_responses: List[SearchResponse] = []
+        self.stray_responses: List[SearchResponse] = []  # guarded-by: _lock
 
     def submit(self, request, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
@@ -429,7 +432,10 @@ class AsyncANNSClient:
         self.coalescer = coalescer
         self._sem = asyncio.Semaphore(max_inflight)
         self._inflight: set = set()        # bridged asyncio futures
-        self._drive_lock = threading.Lock()  # serializes sync-harness drives
+        # serializes sync-harness drives; ranked "client" because driving
+        # qfut.result() pumps the service (and its ticket/future locks)
+        # underneath — client must sit above service in the hierarchy
+        self._drive_lock = make_lock("client")
         self.stats: Dict[str, int] = {
             "submitted": 0, "completed": 0, "admission_waits": 0,
             "deadline_timeouts": 0, "coalesced": 0}

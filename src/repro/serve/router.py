@@ -69,6 +69,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis.concurrency.witness import make_lock
 from repro.core.engine import FusionANNSIndex
 from repro.core.executor import QUERY_STATS_FIELDS
 from repro.core.futures import BackpressureError, QueryFuture
@@ -98,11 +99,12 @@ class ReplicaRouter:
         self.index = index
         self.policy = policy
         self.parent_mesh = mesh
+        self._lock = make_lock("router")
         if mesh is not None:
             from repro.launch.mesh import recarve_mesh
-            self.meshes = recarve_mesh(mesh, n_replicas)
+            self.meshes = recarve_mesh(mesh, n_replicas)  # guarded-by: _lock
         else:
-            self.meshes = [None] * n_replicas
+            self.meshes = [None] * n_replicas         # guarded-by: _lock
         # per-replica service knobs, kept so elastically added replicas are
         # configured identically to the founding set
         self._svc_kw = dict(svc_kw)
@@ -115,30 +117,34 @@ class ReplicaRouter:
         self.replicas: List[BatchingANNSService] = [
             BatchingANNSService(index, executor=index.make_executor(m),
                                 threaded=threaded, **svc_kw)
-            for m in self.meshes]
+            for m in self.meshes]              # guarded-by: _lock
         # stable slot ids, parallel to ``replicas``; slots are never reused
-        self.replica_ids: List[int] = list(range(n_replicas))
-        self._next_slot = n_replicas
+        self.replica_ids: List[int] = list(range(n_replicas))  # guarded-by: _lock
+        self._next_slot = n_replicas           # guarded-by: _lock
         # mirrors the replicas' harness (clients read this to pick their
         # backpressure strategy: sleep-retry vs pump-on-behalf)
         self.threaded = threaded
-        self._lock = threading.Lock()
-        self._rr = 0                       # round-robin cursor
+        self._rr = 0       # round-robin cursor; guarded-by: _lock
         self.stats: Dict[str, object] = {
             "submitted": 0, "rejected": 0, "spills": 0,
             "deadline_spills": 0, "spill_exhausted": 0,
             "scale_ups": 0, "scale_downs": 0,
-            "routed": [0] * n_replicas}
+            "routed": [0] * n_replicas}        # guarded-by: _lock
         # removed replicas' history — percentiles and the QueryStats rollup
         # must describe the whole traffic stream, not just survivors
-        self._retired_latencies: deque = deque(maxlen=_RETIRED_LATENCIES_MAX)
-        self._retired_query_stats = dict.fromkeys(QUERY_STATS_FIELDS, 0)
+        self._retired_latencies: deque = deque(
+            maxlen=_RETIRED_LATENCIES_MAX)     # guarded-by: _lock
+        self._retired_query_stats = dict.fromkeys(
+            QUERY_STATS_FIELDS, 0)             # guarded-by: _lock
         self._retired = {"requests": 0, "batches": 0, "served": 0,
-                         "replicas": []}
+                         "replicas": []}       # guarded-by: _lock
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ReplicaRouter":
-        for r in self.replicas:
+        # snapshot: a concurrent add/remove must not mutate mid-iteration
+        with self._lock:
+            reps = list(self.replicas)
+        for r in reps:
             r.start()
         self.threaded = True
         return self
@@ -165,9 +171,10 @@ class ReplicaRouter:
     # -------------------------------------------------------------- scaling
     @property
     def n_replicas(self) -> int:
-        return len(self.replicas)
+        with self._lock:
+            return len(self.replicas)
 
-    def _recarve_locked(self) -> None:
+    def _recarve_locked(self) -> None:            # holds: _lock
         """Re-attach every replica's executor to its share of a fresh carve
         of the parent mesh (no-op without one).  Caller holds ``_lock``."""
         if self.parent_mesh is None:
@@ -210,7 +217,8 @@ class ReplicaRouter:
             if len(self.replicas) <= 1:
                 raise ValueError("cannot remove the last replica")
             if slot is None:
-                loads = [r.live_load() for r in self.replicas]
+                loads = [r.live_load()            # acquires: service
+                         for r in self.replicas]
                 i = min(range(len(loads)), key=lambda j: (loads[j], j))
             else:
                 try:
@@ -228,7 +236,7 @@ class ReplicaRouter:
             victim.stop()        # pump serves its remaining queue
         # fold the victim's history into the retired accumulators so
         # percentiles/rollups keep describing the full traffic stream
-        with victim._lock:
+        with victim._lock:                        # acquires: service
             lats = list(victim.latencies_s)
             vstats = dict(victim.stats)
             vqs = dict(victim.query_stats)
@@ -363,7 +371,7 @@ class ReplicaRouter:
             reps = list(self.replicas)
             lats = list(self._retired_latencies)
         for r in reps:
-            with r._lock:
+            with r._lock:                         # acquires: service
                 lats.extend(r.latencies_s)
         if not lats:
             return {"p50": 0.0, "p99": 0.0, "n": 0}
@@ -383,7 +391,7 @@ class ReplicaRouter:
             served = self._retired["served"]
             per_replica = [dict(d) for d in self._retired["replicas"]]
         for r in reps:
-            with r._lock:
+            with r._lock:                         # acquires: service
                 per_replica.append(dict(r.stats))
                 requests += int(r.stats["requests"])
                 batches += int(r.stats["batches"])

@@ -36,6 +36,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _witness_guard():
+    """When LINT_LOCKS is set, the serving stack's locks are OrderedLock
+    witnesses recording nested acquisitions.  Fail any test whose body
+    produced a hierarchy inversion (record mode collects instead of
+    raising so the offending test — not a later one — gets the blame)."""
+    from repro.analysis.concurrency import witness
+    if not witness.enabled():
+        yield
+        return
+    witness.WITNESS.drain_violations()
+    yield
+    bad = witness.WITNESS.drain_violations()
+    assert not bad, ("lock-order violations witnessed:\n"
+                     + "\n".join(map(str, bad)))
+
+
 @dataclasses.dataclass
 class ANNSBundle:
     """One built index + held-out data shared across test modules."""

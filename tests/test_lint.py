@@ -1,0 +1,640 @@
+"""Tests for the concurrency static-analysis suite and runtime witness.
+
+Each pass family is exercised against a seeded fixture violation:
+
+* guarded-by (GB01/GB02) — good/bad field access under a declared lock;
+* lock-order (LO01/LO02/LO03) — an edge against the hierarchy and a
+  deliberately seeded acquisition cycle;
+* purity (PU01/PU02/PU03) — device sync under a lock, side effects in a
+  traced function, bare ``threading.Lock()``;
+* suppressions (LT00) — a ``# lint-ok`` without a reason is itself a
+  finding;
+
+plus runtime tests of :class:`OrderedLock` (strict inversion raises,
+re-entrancy allowed, Condition integration keeps the held-stack honest)
+and a repo-clean test pinning ``run_checks(["src"])`` to zero findings.
+"""
+
+import os
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis.concurrency import run_checks
+from repro.analysis.concurrency import guarded, lockorder, purity
+from repro.analysis.concurrency.diagnostics import SourceFile
+from repro.analysis.concurrency.witness import (HIERARCHY, LEVEL,
+                                                LockOrderViolation,
+                                                OrderedLock, Witness)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def sf(code: str, path: str = "fixture.py") -> SourceFile:
+    return SourceFile(path, textwrap.dedent(code))
+
+
+def codes(diags):
+    return [d.code for d in diags]
+
+
+# ---------------------------------------------------------------------------
+# guarded-by (GB01 / GB02)
+# ---------------------------------------------------------------------------
+
+GOOD_GUARDED = """
+    from repro.analysis.concurrency.witness import make_lock
+
+    class Box:
+        def __init__(self):
+            self._lock = make_lock("service")
+            self.items = []          # guarded-by: _lock
+
+        def add(self, x):
+            with self._lock:
+                self.items.append(x)
+
+        def _drain_locked(self):     # holds: _lock
+            out, self.items = self.items, []
+            return out
+    """
+
+BAD_GUARDED = """
+    from repro.analysis.concurrency.witness import make_lock
+
+    class Box:
+        def __init__(self):
+            self._lock = make_lock("service")
+            self.items = []          # guarded-by: _lock
+
+        def racy(self):
+            return len(self.items)
+    """
+
+
+class TestGuardedBy:
+    def test_clean_access_under_with_and_holds(self):
+        assert guarded.check_file(sf(GOOD_GUARDED)) == []
+
+    def test_unguarded_read_flagged(self):
+        diags = guarded.check_file(sf(BAD_GUARDED))
+        assert codes(diags) == ["GB01"]
+        assert diags[0].line == 10
+        assert "self.items" in diags[0].message
+        assert "racy()" in diags[0].message
+
+    def test_unguarded_write_reports_write(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Box:
+                def __init__(self):
+                    self._lock = make_lock("service")
+                    self.items = []          # guarded-by: _lock
+
+                def smash(self):
+                    self.items = []
+            """
+        diags = guarded.check_file(sf(code))
+        assert codes(diags) == ["GB01"]
+        assert "write" in diags[0].message
+
+    def test_unknown_lock_is_gb02(self):
+        code = """
+            class Box:
+                def __init__(self):
+                    self.items = []   # guarded-by: _mutex
+            """
+        diags = guarded.check_file(sf(code))
+        assert codes(diags) == ["GB02"]
+        assert "_mutex" in diags[0].message
+
+    def test_condition_aliases_its_lock(self):
+        code = """
+            from repro.analysis.concurrency.witness import (make_condition,
+                                                            make_rlock)
+
+            class Svc:
+                def __init__(self):
+                    self._lock = make_rlock("service")
+                    self._cv = make_condition("service", self._lock)
+                    self.queue = []          # guarded-by: _lock
+
+                def put(self, x):
+                    with self._cv:           # cv wraps _lock: same guard
+                        self.queue.append(x)
+            """
+        assert guarded.check_file(sf(code)) == []
+
+    def test_nested_def_does_not_inherit_held(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Box:
+                def __init__(self):
+                    self._lock = make_lock("service")
+                    self.items = []          # guarded-by: _lock
+
+                def schedule(self):
+                    with self._lock:
+                        def later():         # runs on another thread
+                            return self.items
+                        return later
+            """
+        diags = guarded.check_file(sf(code))
+        assert codes(diags) == ["GB01"]
+
+    def test_multiline_declaration_annotation(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Box:
+                def __init__(self):
+                    self._lock = make_lock("service")
+                    self.stats = {"a": 0,
+                                  "b": 0}    # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        self.stats["a"] += 1
+            """
+        assert guarded.check_file(sf(code)) == []
+
+
+# ---------------------------------------------------------------------------
+# lock-order (LO01 / LO02 / LO03)
+# ---------------------------------------------------------------------------
+
+LO_INVERSION = """
+    from repro.analysis.concurrency.witness import make_lock
+
+    class Upside:
+        def __init__(self):
+            self._svc = make_lock("service")
+            self._rtr = make_lock("router")
+
+        def wrong(self):
+            with self._svc:          # level 5
+                with self._rtr:      # level 6: ascending — illegal
+                    pass
+    """
+
+
+class TestLockOrder:
+    def test_descending_nesting_clean(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Fine:
+                def __init__(self):
+                    self._rtr = make_lock("router")
+                    self._svc = make_lock("service")
+
+                def ok(self):
+                    with self._rtr:
+                        with self._svc:
+                            pass
+            """
+        assert lockorder.check_files([sf(code)]) == []
+
+    def test_ascending_nesting_is_lo01(self):
+        diags = lockorder.check_files([sf(LO_INVERSION)])
+        assert "LO01" in codes(diags)
+        lo01 = next(d for d in diags if d.code == "LO01")
+        assert "'router'" in lo01.message and "'service'" in lo01.message
+
+    def test_seeded_cycle_is_lo02(self):
+        # service -> executor in one class, executor -> service in another:
+        # both edges are individually checked, and together they cycle.
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class A:
+                def __init__(self):
+                    self._svc = make_lock("service")
+                    self._exe = make_lock("executor")
+
+                def down(self):
+                    with self._svc:
+                        with self._exe:
+                            pass
+
+            class B:
+                def __init__(self):
+                    self._svc = make_lock("service")
+                    self._exe = make_lock("executor")
+
+                def up(self):
+                    with self._exe:
+                        with self._svc:
+                            pass
+            """
+        diags = lockorder.check_files([sf(code)])
+        assert "LO02" in codes(diags)
+        lo02 = next(d for d in diags if d.code == "LO02")
+        assert "->" in lo02.message
+        # the ascending half of the cycle is also an LO01 in its own right
+        assert "LO01" in codes(diags)
+
+    def test_unknown_rank_is_lo03(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Off:
+                def __init__(self):
+                    self._l = make_lock("warp-core")
+            """
+        diags = lockorder.check_files([sf(code)])
+        assert codes(diags) == ["LO03"]
+        assert "warp-core" in diags[0].message
+
+    def test_cross_method_summary_edge(self):
+        # helper() takes the service lock; outer() calls it under the
+        # executor lock -> ascending executor->service edge via summary.
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Chain:
+                def __init__(self):
+                    self._exe = make_lock("executor")
+                    self._svc = make_lock("service")
+
+                def helper(self):
+                    with self._svc:
+                        pass
+
+                def outer(self):
+                    with self._exe:
+                        self.helper()
+            """
+        diags = lockorder.check_files([sf(code)])
+        assert "LO01" in codes(diags)
+
+    def test_acquires_annotation_resolves_opaque_call(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Ann:
+                def __init__(self):
+                    self._svc = make_lock("service")
+
+                def wrong(self, other):
+                    with self._svc:
+                        other.poke()         # acquires: router
+            """
+        diags = lockorder.check_files([sf(code)])
+        assert "LO01" in codes(diags)
+
+    def test_lock_primitive_methods_not_resolved(self):
+        # self._cond.wait() is Condition.wait, not some repo method named
+        # "wait" — must not produce a spurious edge.
+        code = """
+            from repro.analysis.concurrency.witness import make_condition
+
+            class Waiter:
+                def __init__(self):
+                    self._cond = make_condition("future")
+
+                def park(self):
+                    with self._cond:
+                        self._cond.wait(0.01)
+
+            class Decoy:
+                def __init__(self):
+                    self._l = make_condition("router")
+
+                def wait(self):
+                    with self._l:
+                        pass
+            """
+        assert lockorder.check_files([sf(code)]) == []
+
+
+# ---------------------------------------------------------------------------
+# purity (PU01 / PU02 / PU03)
+# ---------------------------------------------------------------------------
+
+SYNC_UNDER_LOCK = """
+    import numpy as np
+    from repro.analysis.concurrency.witness import make_lock
+
+    class Stats:
+        def __init__(self):
+            self._lock = make_lock("service")
+            self.lat = []
+
+        def percentile(self):
+            with self._lock:
+                arr = np.asarray(self.lat)
+            return arr
+    """
+
+
+class TestPurity:
+    def test_sync_under_lock_is_pu01(self):
+        diags = purity.check_file(sf(SYNC_UNDER_LOCK))
+        assert codes(diags) == ["PU01"]
+        assert diags[0].line == 12
+
+    def test_snapshot_then_materialize_clean(self):
+        code = """
+            import numpy as np
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Stats:
+                def __init__(self):
+                    self._lock = make_lock("service")
+                    self.lat = []
+
+                def percentile(self):
+                    with self._lock:
+                        snap = list(self.lat)
+                    return np.asarray(snap)
+            """
+        assert purity.check_file(sf(code)) == []
+
+    def test_item_under_holds_is_pu01(self):
+        code = """
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Stats:
+                def __init__(self):
+                    self._lock = make_lock("service")
+
+                def peek(self, x):           # holds: _lock
+                    return x.item()
+            """
+        assert codes(purity.check_file(sf(code))) == ["PU01"]
+
+    def test_traced_side_effect_is_pu02(self):
+        code = """
+            import jax
+
+            @jax.jit
+            def _distance_kernel(q, base):
+                print("tracing")
+                return q @ base.T
+            """
+        diags = purity.check_file(sf(code, "src/repro/kernels/fx.py"),
+                                  jit_scope=True)
+        assert codes(diags) == ["PU02"]
+        assert "print" in diags[0].message
+
+    def test_lock_in_traced_fn_is_pu02(self):
+        code = """
+            import jax
+
+            @jax.jit
+            def _scan_kernel(q, lut, lock):
+                with lock:
+                    return q + lut
+            """
+        # "lock" matches the lock-ish name fragments
+        diags = purity.check_file(sf(code, "src/repro/kernels/fx.py"),
+                                  jit_scope=True)
+        assert codes(diags) == ["PU02"]
+
+    def test_pure_kernel_clean(self):
+        code = """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def _adc_kernel(lut, codes):
+                return jnp.take_along_axis(lut, codes, axis=0).sum(0)
+            """
+        assert purity.check_file(sf(code, "src/repro/kernels/fx.py"),
+                                 jit_scope=True) == []
+
+    def test_bare_threading_lock_is_pu03(self):
+        code = """
+            import threading
+
+            class Old:
+                def __init__(self):
+                    self._lock = threading.Lock()
+            """
+        diags = purity.check_file(sf(code))
+        assert codes(diags) == ["PU03"]
+        assert "make_lock" in diags[0].message
+
+    def test_witness_module_exempt_from_pu03(self):
+        code = """
+            import threading
+
+            def make_lock(rank):
+                return threading.Lock()
+            """
+        path = os.path.join("src", "repro", "analysis", "concurrency",
+                            "witness.py")
+        assert purity.check_file(sf(code, path)) == []
+
+    def test_threading_event_not_flagged(self):
+        code = """
+            import threading
+
+            class Loop:
+                def __init__(self):
+                    self._stop = threading.Event()
+            """
+        assert purity.check_file(sf(code)) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions (LT00)
+# ---------------------------------------------------------------------------
+
+class TestSuppressions:
+    def _box(self, tmp_path, lint_ok: str):
+        code = textwrap.dedent(f"""
+            from repro.analysis.concurrency.witness import make_lock
+
+            class Box:
+                def __init__(self):
+                    self._lock = make_lock("service")
+                    self.state = 0           # guarded-by: _lock
+
+                def fast(self):
+                    {lint_ok}
+                    return self.state
+            """)
+        p = tmp_path / "box.py"
+        p.write_text(code)
+        return str(p)
+
+    def test_reasoned_suppression_silences(self, tmp_path):
+        path = self._box(tmp_path,
+                         "# lint-ok: GB01 monotonic word, torn read benign")
+        assert run_checks([path]) == []
+
+    def test_reasonless_suppression_is_lt00(self, tmp_path):
+        path = self._box(tmp_path, "# lint-ok: GB01")
+        diags = run_checks([path])
+        assert codes(diags) == ["LT00"]
+        assert "reason" in diags[0].message
+
+    def test_wrong_code_does_not_suppress(self, tmp_path):
+        path = self._box(tmp_path, "# lint-ok: PU01 not the right code")
+        diags = run_checks([path])
+        assert "GB01" in codes(diags)
+
+    def test_syntax_error_is_lt01(self, tmp_path):
+        p = tmp_path / "broken.py"
+        p.write_text("def nope(:\n")
+        diags = run_checks([str(p)])
+        assert codes(diags) == ["LT01"]
+
+
+# ---------------------------------------------------------------------------
+# runtime witness
+# ---------------------------------------------------------------------------
+
+class TestOrderedLock:
+    def test_strict_inversion_raises(self):
+        w = Witness(strict=True)
+        svc = OrderedLock("service", w)
+        rtr = OrderedLock("router", w)
+        with rtr:            # descending: fine
+            with svc:
+                pass
+        with svc:
+            with pytest.raises(LockOrderViolation):
+                rtr.acquire()
+
+    def test_record_mode_collects_and_drains(self):
+        w = Witness(strict=False)
+        svc = OrderedLock("service", w)
+        rtr = OrderedLock("router", w)
+        with svc:
+            with rtr:        # ascending, recorded not raised
+                pass
+        bad = w.drain_violations()
+        assert len(bad) == 1
+        assert bad[0]["acquiring"] == "router"
+        assert bad[0]["held"] == ["service"]
+        assert w.drain_violations() == []
+        assert ("service", "router") in w.witnessed_edges()
+
+    def test_same_rank_nesting_violates(self):
+        w = Witness(strict=True)
+        a = OrderedLock("service", w)
+        b = OrderedLock("service", w)
+        with a:
+            with pytest.raises(LockOrderViolation):
+                b.acquire()
+
+    def test_rlock_reentrancy_allowed(self):
+        w = Witness(strict=True)
+        lk = OrderedLock("ticket", w, reentrant=True)
+        with lk:
+            with lk:         # same object: re-entrant, never an inversion
+                assert w.held_count(lk) == 2
+        assert w.held_count(lk) == 0
+        assert w.drain_violations() == []
+
+    def test_condition_wait_releases_held_stack(self):
+        w = Witness(strict=True)
+        lk = OrderedLock("service", w, reentrant=True)
+        cond = threading.Condition(lk)
+        hits = []
+
+        def waiter():
+            with cond:
+                while not hits:
+                    cond.wait(1.0)
+                # after wake the lock must be re-held at full depth
+                hits.append(w.held_count(lk))
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        # while the waiter is parked, this thread can take the lock
+        with cond:
+            hits.append(1)
+            cond.notify_all()
+        t.join(5.0)
+        assert not t.is_alive()
+        assert hits == [1, 1]
+        assert w.drain_violations() == []
+
+    def test_unknown_rank_rejected(self):
+        with pytest.raises(ValueError):
+            OrderedLock("warp-core")
+
+    def test_hierarchy_shape(self):
+        assert HIERARCHY[0] == "future" and HIERARCHY[-1] == "autoscaler"
+        assert LEVEL["ticket"] < LEVEL["executor"] < LEVEL["service"] \
+            < LEVEL["router"] < LEVEL["autoscaler"]
+
+
+class TestFactories:
+    def test_plain_primitives_when_disabled(self, monkeypatch):
+        monkeypatch.delenv("LINT_LOCKS", raising=False)
+        from repro.analysis.concurrency.witness import (make_condition,
+                                                        make_lock,
+                                                        make_rlock)
+        assert not isinstance(make_lock("service"), OrderedLock)
+        assert isinstance(make_condition("service"), threading.Condition)
+        rl = make_rlock("ticket")
+        rl.acquire(); rl.acquire(); rl.release(); rl.release()
+
+    def test_ordered_when_enabled(self, monkeypatch):
+        monkeypatch.setenv("LINT_LOCKS", "1")
+        from repro.analysis.concurrency.witness import (make_condition,
+                                                        make_lock)
+        lk = make_lock("service")
+        assert isinstance(lk, OrderedLock) and not lk._reentrant
+        cond = make_condition("service")
+        assert isinstance(cond, threading.Condition)
+
+    def test_unknown_rank_rejected_even_disabled(self, monkeypatch):
+        monkeypatch.delenv("LINT_LOCKS", raising=False)
+        from repro.analysis.concurrency.witness import make_lock
+        with pytest.raises(ValueError):
+            make_lock("warp-core")
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+# ---------------------------------------------------------------------------
+
+class TestRepoClean:
+    def test_src_tree_is_clean(self):
+        diags = run_checks([os.path.join(REPO, "src")])
+        assert diags == [], "\n".join(map(str, diags))
+
+    def test_serving_stack_is_annotated(self):
+        """Non-vacuity: the passes must actually SEE the serving stack —
+        guarded fields on every stateful class and real descending edges."""
+        from repro.analysis.concurrency import collect_files
+        from repro.analysis.concurrency.guarded import (_guarded_fields,
+                                                        collect_class_locks)
+        import ast
+        n_fields = 0
+        classes = set()
+        for path in collect_files([os.path.join(REPO, "src", "repro")]):
+            sf_ = SourceFile.load(path)
+            if sf_.tree is None:
+                continue
+            for cls in [n for n in ast.walk(sf_.tree)
+                        if isinstance(n, ast.ClassDef)]:
+                locks = collect_class_locks(cls)
+                fields, _ = _guarded_fields(cls, sf_, locks)
+                if fields:
+                    n_fields += len(fields)
+                    classes.add(cls.name)
+        assert n_fields >= 30
+        assert {"QueryFuture", "BatchTicket", "QueryExecutor",
+                "BatchingANNSService", "ReplicaRouter",
+                "ReplicaAutoscaler"} <= classes
+
+    def test_real_edges_descend(self):
+        from repro.analysis.concurrency import collect_files
+        files = collect_files([os.path.join(REPO, "src", "repro")])
+        sources = [SourceFile.load(p) for p in files]
+        diags = []
+        edges = lockorder.extract_edges(sources, diags)
+        pairs = {(o, i) for o, i, _, _ in edges if o != i}
+        assert ("service", "future") in pairs
+        assert ("router", "service") in pairs
+        assert all(LEVEL[i] < LEVEL[o] for o, i in pairs)
