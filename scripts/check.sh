@@ -33,6 +33,15 @@
 #                               soak, deterministic load-ramp (scale up
 #                               under burst, drain on scale-down, zero
 #                               leaked futures at router AND edge level)
+#   scripts/check.sh mutate-stress
+#                               updates-while-serving: insert/delete
+#                               bursts + background compaction against
+#                               the threaded service and a 2-replica
+#                               router with a snapshot-hydrated newcomer;
+#                               bit-identical ids vs a quiesced serial
+#                               replay, snapshot->restore parity, zero
+#                               leaked futures, zero witnessed lock-order
+#                               violations (LINT_LOCKS=1)
 #   scripts/check.sh lint       concurrency static analysis over src/:
 #                               guarded-by checker (GB*), lock-order
 #                               deadlock detector (LO*), jit/hot-path
@@ -81,6 +90,13 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider tests/test_router.py \
         tests/test_faults.py
     ;;
+  mutate-stress)
+    export LINT_LOCKS="${LINT_LOCKS:-1}"
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider \
+        tests/test_mutate_stress.py tests/test_segments.py \
+        tests/test_updates.py
+    ;;
   kernels)
     timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_kernels.py \
@@ -109,7 +125,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|lint|threaded-stress|router-stress|async-stress|kernels|edge-stress|fig9|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|lint|threaded-stress|router-stress|async-stress|mutate-stress|kernels|edge-stress|fig9|full]" >&2
     exit 2
     ;;
 esac

@@ -9,12 +9,18 @@ Outer locks rank HIGHER; a thread may acquire a lock only while every
 lock it already holds ranks strictly above it.  Acquisition therefore
 always descends::
 
-    autoscaler > client > router > service > coalescer
+    autoscaler > client > router > service > compaction > coalescer
                > executor > inflight > ticket > future
 
-``inflight`` is reserved: the executor's ``_InflightQueue`` runs entirely
-under the owning ticket's lock today, but background compaction
-(ROADMAP: streaming mutations) will give it a lock of its own.
+``compaction`` guards index mutation (the segmented index's delta append
+/ tombstone / seal-publish critical sections, ``core/segments.py``); it
+sits below ``service``/``router`` so a serving layer may mutate its index
+while holding its own lock, and above ``coalescer``/``executor`` so the
+mutation path can never invert against a dispatch.  ``inflight`` is the
+executor's ``_InflightQueue`` lock: it is acquired first when claiming or
+retiring a depth slot, with the owning ticket's bookkeeping lock nested
+inside it (descending), so a stall-checking ``BatchTicket.wait()`` can
+never observe a claimed-but-uncounted window.
 
 Factories
 ---------
@@ -45,8 +51,8 @@ __all__ = ["HIERARCHY", "LEVEL", "LockOrderViolation", "OrderedLock",
 
 # innermost first: LEVEL[x] < LEVEL[y] means x must be acquired inside y
 HIERARCHY: Tuple[str, ...] = ("future", "ticket", "inflight", "executor",
-                              "coalescer", "service", "router", "client",
-                              "autoscaler")
+                              "coalescer", "compaction", "service",
+                              "router", "client", "autoscaler")
 LEVEL: Dict[str, int] = {name: i for i, name in enumerate(HIERARCHY)}
 
 

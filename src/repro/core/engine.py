@@ -6,17 +6,30 @@ Tier placement in this build (DESIGN.md §2):
   * PQ codes + codebooks                        -> jax arrays ("HBM";
     sharded via core.distributed on a mesh)
   * raw vectors                                 -> SSDSim (4 KB page model)
+
+Updates (DESIGN.md §10): the index is SEGMENTED.  The built tiers are
+immutable sealed segments described by one epoch-stamped
+:class:`~repro.core.segments.IndexView`; inserts land in a small mutable
+delta segment (scanned exactly, merged after the PQ scan + re-rank),
+deletes tombstone in the owning segment, and :meth:`compact` — usually
+driven by the background :class:`~repro.core.segments.SegmentCompactor`
+— seals the delta into the immutable tiers under the ``compaction``-
+ranked witness lock.  Readers never lock: they pin ``index.view()`` once
+per scan window.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.concurrency.witness import make_condition, make_lock
 from repro.configs.base import ANNSConfig
 from repro.core import clustering, navgraph as ng, pq
 # QueryStats / QueryResult live in executor.py now; re-exported here so
@@ -25,20 +38,101 @@ from repro.core.executor import (PlanOverrides, QueryExecutor,  # noqa: F401
                                  QueryPlan, QueryResult, QueryStats)
 from repro.core.futures import BatchTicket, QueryFuture  # noqa: F401
 from repro.core.io_sim import IOStats, SSDSim, StorageLayout
+from repro.core.segments import DeltaSegment, IndexView, SegmentCompactor
+
+SNAPSHOT_FORMAT_VERSION = 1
+_SNAPSHOT_MANIFEST = "manifest.json"
+_SNAPSHOT_ARRAYS = "arrays.npz"
 
 
-@dataclasses.dataclass
 class FusionANNSIndex:
-    cfg: ANNSConfig
-    codebook: pq.PQCodebook          # HBM tier
-    codes: jax.Array                 # (N, M) uint8, HBM tier
-    posting: clustering.PostingLists  # DRAM tier: IDs only
-    graph: ng.NavGraph               # DRAM tier
-    ssd: SSDSim                      # SSD tier: raw vectors
-    use_kernel: bool = False         # Pallas interpret is slow on CPU hosts
-    # beyond-paper: OPQ rotation (core/opq.py); applied to queries before
-    # the LUT build only — clustering/graph/re-rank stay in raw space.
-    rotation: Optional[np.ndarray] = None
+    """The four-tier index with segmented streaming updates.
+
+    Immutable-per-epoch state (codes, posting lists, sealed tombstones,
+    nav graph, delta segment) lives in ``self._view`` — an
+    :class:`IndexView` published by one atomic reference assignment under
+    ``_mut_lock`` (rank ``compaction``).  Readers access it lock-free via
+    :meth:`view` / the compatibility properties below; mutators
+    (:meth:`insert`, :meth:`delete`, :meth:`compact`) never let a reader
+    observe torn multi-tier state because every published view's tiers
+    describe exactly the same id range.
+    """
+
+    def __init__(self, cfg: ANNSConfig, codebook: pq.PQCodebook,
+                 codes: jax.Array, posting: clustering.PostingLists,
+                 graph: ng.NavGraph, ssd: SSDSim,
+                 use_kernel: bool = False,
+                 rotation: Optional[np.ndarray] = None,
+                 tombstones: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        self.codebook = codebook                 # HBM tier
+        self.ssd = ssd                           # SSD tier: raw vectors
+        self.use_kernel = use_kernel             # Pallas interpret is slow on CPU
+        # beyond-paper: OPQ rotation (core/opq.py); applied to queries
+        # before the LUT build only — clustering/graph/re-rank raw space.
+        self.rotation = rotation
+        n_sealed = int(codes.shape[0])
+        tomb = (np.zeros(n_sealed, bool) if tombstones is None
+                else np.asarray(tombstones, bool))
+        self._mut_lock = make_lock("compaction")
+        self._mut_cond = make_condition("compaction", self._mut_lock)
+        self._compacting = False                 # guarded-by: _mut_lock
+        self._compactor: Optional[SegmentCompactor] = None
+        dim = int(ssd.vectors.shape[1])
+        self._view = IndexView(
+            epoch=0, codes=codes, posting=posting, tombstones=tomb,
+            graph=graph, delta=DeltaSegment.empty(n_sealed, dim))
+
+    # deepcopy/pickle: locks and threads are per-process; a copy starts
+    # with fresh ones (and no background compactor)
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        for key in ("_mut_lock", "_mut_cond", "_compactor", "_executor"):
+            state.pop(key, None)
+        state["_compacting"] = False
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._mut_lock = make_lock("compaction")
+        self._mut_cond = make_condition("compaction", self._mut_lock)
+        self._compactor = None
+
+    # ------------------------------------------------------ view plumbing
+    def view(self) -> IndexView:
+        """Pin the current epoch's consistent binding of every tier.
+        Lock-free: one attribute read of an atomically-published ref."""
+        return self._view
+
+    @property
+    def epoch(self) -> int:
+        """Bumped by every successful insert/delete/compact publish; the
+        coalescer keys on it so waiters never attach across a mutation."""
+        return self._view.epoch
+
+    @property
+    def codes(self) -> jax.Array:
+        return self._view.codes
+
+    @property
+    def posting(self) -> clustering.PostingLists:
+        return self._view.posting
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        return self._view.tombstones
+
+    @property
+    def graph(self) -> ng.NavGraph:
+        return self._view.graph
+
+    @property
+    def n_total(self) -> int:
+        return self._view.n_total
+
+    @property
+    def delta_size(self) -> int:
+        return len(self._view.delta)
 
     def _lut_query(self, q: np.ndarray) -> np.ndarray:
         return q @ self.rotation if self.rotation is not None else q
@@ -85,68 +179,272 @@ class FusionANNSIndex:
                                rotation=rotation)
 
     # --------------------------------------------------------------- updates
-    # SPFresh-style incremental maintenance (the paper's cited sibling,
-    # SOSP'23): appends go to fresh SSD pages bucketed by their primary
-    # centroid; deletes are tombstoned and filtered at candidate collection.
-    tombstones: Optional[np.ndarray] = None
-
     def insert(self, vectors: np.ndarray) -> np.ndarray:
-        """Append vectors to all three tiers.  Returns their new ids."""
-        from repro.core.clustering import assign_with_replication
-        n_old = len(self.ssd.vectors)
-        new_pl = assign_with_replication(
-            vectors.astype(np.float32), self.posting.centroids,
-            eps=self.cfg.replication_eps, max_replicas=self.cfg.max_replicas)
-        new_ids = np.arange(n_old, n_old + len(vectors), dtype=np.int64)
-        # DRAM tier: extend the ID metadata
-        for c in range(self.posting.n_clusters):
-            mem = new_pl.members[c]
-            if len(mem):
-                self.posting.members[c] = np.concatenate(
-                    [self.posting.members[c],
-                     (mem + n_old).astype(np.int32)])
-        self.posting.primary = np.concatenate(
-            [self.posting.primary, new_pl.primary])
-        # HBM tier: encode + append PQ codes (rotated if OPQ)
-        enc_in = vectors.astype(np.float32)
-        if self.rotation is not None:
-            enc_in = enc_in @ self.rotation
-        new_codes = pq.encode(self.codebook, jnp.asarray(enc_in))
-        self.codes = jnp.concatenate([self.codes, new_codes], axis=0)
-        # SSD tier: fresh pages, bucketed by primary centroid
-        lay = self.ssd.layout
-        order = np.argsort(new_pl.primary, kind="stable")
-        new_pages = lay.n_pages + (np.arange(len(vectors))
-                                   // lay.per_page)
-        page_of = np.empty(len(vectors), np.int64)
-        page_of[order] = new_pages
-        lay.page_of = np.concatenate([lay.page_of, page_of])
-        lay.n_pages = int(lay.page_of.max()) + 1
-        self.ssd.vectors = np.concatenate(
-            [self.ssd.vectors, vectors.astype(self.ssd.vectors.dtype)])
-        if self.tombstones is not None:
-            self.tombstones = np.concatenate(
-                [self.tombstones, np.zeros(len(vectors), bool)])
+        """Append vectors to the delta segment; returns their new ids.
+
+        O(rows) — no clustering, PQ encode, or SSD traffic here; sealing
+        is compaction's job.  The ids are published atomically WITH the
+        rows (one view swap), so a concurrent query either sees none of
+        the batch or a fully-consistent binding of all of it — never ids
+        pointing past the end of any tier (the pre-segmentation race).
+        """
+        vecs = np.atleast_2d(np.asarray(vectors, np.float32))
+        with self._mut_cond:  # acquires: compaction
+            cur = self._view
+            new_ids = np.arange(cur.n_total, cur.n_total + len(vecs),
+                                dtype=np.int64)
+            self._view = dataclasses.replace(
+                cur, epoch=cur.epoch + 1, delta=cur.delta.append(vecs))
+            self._mut_cond.notify_all()          # wake the compactor
         return new_ids
 
     def delete(self, ids: np.ndarray) -> None:
-        """Tombstone ids (compaction is an offline rebuild, as in SPFresh)."""
-        if self.tombstones is None:
-            self.tombstones = np.zeros(len(self.ssd.vectors), bool)
-        self.tombstones[np.asarray(ids, np.int64)] = True
+        """Tombstone ids in their owning segment (sealed array copy-on-
+        write, or a functional delta update).  Deleting an id that was
+        never published (``>= n_total``) raises ``ValueError`` instead of
+        silently corrupting a tombstone array that does not cover it."""
+        idarr = np.atleast_1d(np.asarray(ids, np.int64))
+        with self._mut_cond:  # acquires: compaction
+            cur = self._view
+            if len(idarr) and (int(idarr.min()) < 0
+                               or int(idarr.max()) >= cur.n_total):
+                bad = idarr[(idarr < 0) | (idarr >= cur.n_total)]
+                raise ValueError(
+                    f"delete: id(s) {bad[:8].tolist()} not published — "
+                    f"index currently holds ids [0, {cur.n_total})")
+            sealed = idarr[idarr < cur.n_sealed]
+            local = idarr[idarr >= cur.n_sealed] - cur.delta.base
+            tomb = cur.tombstones
+            if len(sealed):
+                tomb = tomb.copy()
+                tomb[sealed] = True
+            delta = cur.delta.tombstone(local) if len(local) else cur.delta
+            self._view = dataclasses.replace(
+                cur, epoch=cur.epoch + 1, tombstones=tomb, delta=delta)
+
+    def compact(self, *, wait: bool = True) -> int:
+        """Seal the current delta into the immutable tiers.  Returns the
+        number of rows sealed (0 if the delta was empty, or if another
+        thread is already compacting and ``wait=False``).
+
+        Three phases: (1) claim — snapshot the delta prefix under the
+        lock and take the single-compactor token; (2) seal — re-cluster,
+        PQ-encode, and extend the SSD tier OUTSIDE the lock (queries,
+        inserts, and deletes keep flowing); (3) publish — one
+        epoch-bumped view swap under the lock.  Inserts that raced phase
+        2 stay in the (shrunk) delta; deletes that raced it land in the
+        sealed tombstone array, so nothing is lost either way.
+        """
+        with self._mut_cond:  # acquires: compaction
+            while self._compacting:
+                if not wait:
+                    return 0
+                self._mut_cond.wait()
+            view0 = self._view
+            d0 = len(view0.delta)
+            if d0 == 0:
+                return 0
+            self._compacting = True
+        try:
+            self._seal(view0, d0)
+        finally:
+            with self._mut_cond:  # acquires: compaction
+                self._compacting = False
+                self._mut_cond.notify_all()
+        return d0
+
+    def _seal(self, view0: IndexView, d0: int) -> None:
+        """Phase 2+3 of :meth:`compact` — heavy work lock-free, publish
+        atomic.  Only ever runs under the ``_compacting`` token, so
+        ``view0``'s sealed tiers are still current at publish time (only
+        compaction replaces them)."""
+        delta_vecs = view0.delta.vectors[:d0]
+        snap_tomb = view0.delta.tombstoned[:d0]
+        n_sealed = view0.n_sealed
+        # DRAM tier: cluster the delta against the EXISTING centroids
+        # (deterministic — replicas stay in lockstep replaying the same
+        # ops) and purge rows already tombstoned at claim time.
+        new_pl = clustering.assign_with_replication(
+            delta_vecs, view0.posting.centroids,
+            eps=self.cfg.replication_eps,
+            max_replicas=self.cfg.max_replicas)
+        members = list(view0.posting.members)
+        for c in range(view0.posting.n_clusters):
+            mem = new_pl.members[c]
+            if len(mem):
+                live = mem[~snap_tomb[mem]]
+                if len(live):
+                    members[c] = np.concatenate(
+                        [members[c], (live + n_sealed).astype(np.int32)])
+        posting = clustering.PostingLists(
+            centroids=view0.posting.centroids, members=members,
+            primary=np.concatenate([view0.posting.primary, new_pl.primary]))
+        # HBM tier: PQ-encode (rotated if OPQ) + append
+        enc_in = delta_vecs
+        if self.rotation is not None:
+            enc_in = enc_in @ self.rotation
+        new_codes = pq.encode(self.codebook, jnp.asarray(enc_in))
+        codes = jnp.concatenate([view0.codes, new_codes], axis=0)
+        # SSD tier: fresh pages bucketed by primary centroid (§4.3).
+        # Prefix-preserving rebinds — rows a published view can name never
+        # move, so readers of any older view stay consistent mid-seal.
+        lay = self.ssd.layout
+        order = np.argsort(new_pl.primary, kind="stable")
+        new_pages = lay.n_pages + np.arange(d0) // lay.per_page
+        page_of = np.empty(d0, np.int64)
+        page_of[order] = new_pages
+        self.ssd.vectors = np.concatenate(
+            [self.ssd.vectors, delta_vecs.astype(self.ssd.vectors.dtype)])
+        lay.page_of = np.concatenate([lay.page_of, page_of])
+        lay.n_pages = int(lay.page_of.max()) + 1
+        # publish: sealed tombstones take the PUBLISH-time delta flags —
+        # a delete that raced the seal missed the members purge above,
+        # but the candidate-collection tombstone filter still drops it.
+        with self._mut_cond:  # acquires: compaction
+            cur = self._view
+            tomb = np.concatenate([cur.tombstones,
+                                   cur.delta.tombstoned[:d0]])
+            self._view = IndexView(
+                epoch=cur.epoch + 1, codes=codes, posting=posting,
+                tombstones=tomb, graph=cur.graph,
+                delta=cur.delta.drop_prefix(d0))
+            self._mut_cond.notify_all()
+
+    def start_compactor(self, *, min_delta: int = 64,
+                        poll_s: float = 0.05) -> SegmentCompactor:
+        """Run background compaction off the pump thread: seals the delta
+        whenever it reaches ``min_delta`` rows."""
+        if self._compactor is None:
+            self._compactor = SegmentCompactor(
+                self, min_delta=min_delta, poll_s=poll_s).start()
+        return self._compactor
+
+    def stop_compactor(self, *, flush: bool = False) -> None:
+        compactor = self._compactor
+        if compactor is not None:
+            self._compactor = None
+            compactor.stop(flush=flush)
+
+    # ------------------------------------------------------------- snapshots
+    def save_snapshot(self, path: str) -> str:
+        """Checkpoint every tier — PQ codes + codebooks, nav graph,
+        posting lists, SSD layout + raw vectors, tombstones, and the live
+        delta segment — to ``path/`` (manifest.json + arrays.npz).
+
+        The view ref is pinned under the compaction lock; materialization
+        and file I/O run outside it.  SSD arrays are truncated to the
+        view's sealed prefix, so a compaction racing the save cannot leak
+        rows the captured view does not publish.  A replica restored via
+        :meth:`load_snapshot` answers queries with bit-identical ids.
+        """
+        with self._mut_cond:  # acquires: compaction
+            view = self._view
+        n_sealed = view.n_sealed
+        lay = self.ssd.layout
+        page_of = np.asarray(lay.page_of[:n_sealed], np.int64)
+        arrays: Dict[str, np.ndarray] = {
+            "codes": np.asarray(view.codes, np.uint8),
+            "codebooks": np.asarray(self.codebook.codebooks, np.float32),
+            "graph_points": view.graph.points,
+            "graph_neighbors": view.graph.neighbors,
+            "posting_centroids": view.posting.centroids,
+            "posting_primary": view.posting.primary,
+            "posting_members_flat": (
+                np.concatenate(view.posting.members)
+                if view.posting.n_clusters else np.zeros(0, np.int32)),
+            "posting_offsets": np.cumsum(
+                [0] + [len(m) for m in view.posting.members]).astype(np.int64),
+            "tombstones": view.tombstones,
+            "ssd_vectors": np.asarray(self.ssd.vectors[:n_sealed]),
+            "ssd_page_of": page_of,
+            "delta_vectors": view.delta.vectors,
+            "delta_tombstoned": view.delta.tombstoned,
+        }
+        if self.rotation is not None:
+            arrays["rotation"] = np.asarray(self.rotation, np.float32)
+        if view.graph.super_centroids is not None:
+            arrays["graph_super_centroids"] = view.graph.super_centroids
+            arrays["graph_super_assign"] = view.graph.super_assign
+        manifest = {
+            "format_version": SNAPSHOT_FORMAT_VERSION,
+            "epoch": int(view.epoch),
+            "n_sealed": int(n_sealed),
+            "use_kernel": bool(self.use_kernel),
+            "cfg": dataclasses.asdict(self.cfg),
+            "graph_entry": int(view.graph.entry),
+            "ssd": {
+                "n_pages": int(page_of.max()) + 1 if n_sealed else 0,
+                "per_page": int(lay.per_page),
+                "page_bytes": int(lay.page_bytes),
+                "buffer_pages": int(self.ssd.buffer_pages),
+                "intra_merge": bool(self.ssd.intra_merge),
+                "use_buffer": bool(self.ssd.use_buffer),
+            },
+        }
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, _SNAPSHOT_MANIFEST), "w") as fh:
+            json.dump(manifest, fh, indent=1)
+        np.savez(os.path.join(path, _SNAPSHOT_ARRAYS), **arrays)
+        return path
+
+    @classmethod
+    def load_snapshot(cls, path: str) -> "FusionANNSIndex":
+        """Rebuild a full index — sealed tiers AND delta segment, at the
+        saved epoch — from a :meth:`save_snapshot` directory.  This is how
+        ``ReplicaRouter.add_replica`` hydrates a newcomer from disk
+        instead of re-clustering/re-encoding from raw data."""
+        with open(os.path.join(path, _SNAPSHOT_MANIFEST)) as fh:
+            manifest = json.load(fh)
+        if manifest["format_version"] != SNAPSHOT_FORMAT_VERSION:
+            raise ValueError(
+                f"snapshot format {manifest['format_version']} != "
+                f"{SNAPSHOT_FORMAT_VERSION}")
+        with np.load(os.path.join(path, _SNAPSHOT_ARRAYS)) as npz:
+            arr = {k: npz[k] for k in npz.files}
+        cfg = ANNSConfig(**manifest["cfg"])
+        offsets = arr["posting_offsets"]
+        flat = arr["posting_members_flat"]
+        posting = clustering.PostingLists(
+            centroids=arr["posting_centroids"],
+            members=[flat[offsets[i]:offsets[i + 1]]
+                     for i in range(len(offsets) - 1)],
+            primary=arr["posting_primary"])
+        graph = ng.NavGraph(
+            points=arr["graph_points"], neighbors=arr["graph_neighbors"],
+            entry=manifest["graph_entry"],
+            super_centroids=arr.get("graph_super_centroids"),
+            super_assign=arr.get("graph_super_assign"))
+        ssd_meta = manifest["ssd"]
+        layout = StorageLayout(
+            page_of=arr["ssd_page_of"], n_pages=ssd_meta["n_pages"],
+            per_page=ssd_meta["per_page"], page_bytes=ssd_meta["page_bytes"])
+        ssd = SSDSim(arr["ssd_vectors"], layout,
+                     buffer_pages=ssd_meta["buffer_pages"],
+                     intra_merge=ssd_meta["intra_merge"],
+                     use_buffer=ssd_meta["use_buffer"])
+        codes = jnp.asarray(arr["codes"])
+        index = cls(cfg=cfg, codebook=pq.PQCodebook(
+                        codebooks=jnp.asarray(arr["codebooks"])),
+                    codes=codes, posting=posting, graph=graph, ssd=ssd,
+                    use_kernel=manifest["use_kernel"],
+                    rotation=arr.get("rotation"),
+                    tombstones=arr["tombstones"])
+        # restore the delta + epoch too: a hydrated replica must answer
+        # bit-identically to the donor, including its unsealed tail
+        index._view = IndexView(
+            epoch=manifest["epoch"], codes=codes, posting=posting,
+            tombstones=np.asarray(arr["tombstones"], bool), graph=graph,
+            delta=DeltaSegment(base=manifest["n_sealed"],
+                               vectors=arr["delta_vectors"],
+                               tombstoned=np.asarray(
+                                   arr["delta_tombstoned"], bool)))
+        return index
 
     # ------------------------------------------------------------------ query
     def candidate_ids(self, query: np.ndarray, top_m: int,
                       dedup: bool = True) -> np.ndarray:
-        """Stages ②③⑤: graph traversal -> ID collection -> dedup."""
-        cids = ng.search(self.graph, query.astype(np.float32), top_m)
-        ids = np.concatenate([self.posting.members[c] for c in cids]) \
-            if len(cids) else np.zeros((0,), np.int32)
-        if dedup:
-            ids = np.unique(ids)
-        if self.tombstones is not None and len(ids):
-            ids = ids[~self.tombstones[ids]]
-        return ids
+        """Stages ②③⑤ against the current view's sealed segments."""
+        return self._view.candidate_ids(query, top_m, dedup)
 
     @property
     def executor(self) -> QueryExecutor:
@@ -163,10 +461,9 @@ class FusionANNSIndex:
         """A FRESH executor over this index (multi-replica serving: each
         replica owns its own executor, optionally attached to a disjoint
         sub-mesh from ``launch.mesh.split_mesh``).  All executors share
-        the index's tiers — posting lists, tombstones, SSD sim, and the
-        ``codes`` binding — so inserts/deletes propagate to every replica:
-        an insert rebinds ``self.codes`` and each executor re-places its
-        HBM shard on its next dispatch."""
+        the index's published view — an executor pins ``index.view()``
+        per scan window, so every insert/delete/compaction epoch reaches
+        every replica at its next dispatch."""
         return QueryExecutor(self, mesh=mesh)
 
     def plan(self, *, k: Optional[int] = None, top_m: Optional[int] = None,

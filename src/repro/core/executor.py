@@ -190,6 +190,11 @@ class _Window:
     start: int = 0               # global index of this window's first query
     wi: int = 0                  # window index within the ticket
     ids_global: bool = False     # fused path: ``pos`` holds global row ids
+    # the IndexView pinned at dispatch (DESIGN.md §10): candidate
+    # collection, the scan, re-rank, and the delta merge in
+    # ``_finish_into`` all read THIS epoch's binding, so a concurrent
+    # insert/delete/compaction can never tear a window mid-pipeline
+    view: Optional[object] = None
 
 
 class _InflightQueue:
@@ -199,33 +204,40 @@ class _InflightQueue:
     scans in flight while the host re-ranks the oldest window — the
     explicit home of the pipelining that PR 1 buried inside ``run()``.
 
-    Thread-safety (PR 3): every method must run under the owning ticket's
-    lock.  Two-phase dispatch keeps the slow host traversal OUT of that
-    lock: ``reserve()`` claims a depth slot (counted by ``full()``),
-    ``commit(w)`` fills it, keeping the queue ordered by window index even
-    when a pump thread and a ticker dispatch concurrently.
+    Thread-safety (PR 3, re-ranked PR 9): every method must run under
+    ``self._lock`` (rank ``inflight``, one level ABOVE the ticket's
+    bookkeeping lock).  Callers acquire it first and nest the ticket
+    lock's ``busy`` accounting INSIDE the inflight critical section —
+    descending per the hierarchy — so a stall-checking
+    ``BatchTicket.wait()`` can never observe ``busy == 0`` while a
+    window sits claimed-but-uncounted between the two locks.  Two-phase
+    dispatch keeps the slow host traversal OUT of both locks:
+    ``reserve()`` claims a depth slot (counted by ``full()``),
+    ``commit(w)`` fills it, keeping the queue ordered by window index
+    even when a pump thread and a ticker dispatch concurrently.
     ``pop_ready()`` removes ANY window whose scan has landed — the
     out-of-order retirement path — while ``pop()`` stays FIFO for the
     blocking pump."""
 
     def __init__(self, depth: int):
         self.depth = max(1, depth)
-        self._q: deque = deque()
-        self._reserved = 0
+        self._lock = make_lock("inflight")
+        self._q: deque = deque()         # guarded-by: _lock
+        self._reserved = 0               # guarded-by: _lock
 
-    def __len__(self) -> int:
+    def __len__(self) -> int:            # holds: _lock
         return len(self._q)
 
-    def full(self) -> bool:
+    def full(self) -> bool:              # holds: _lock
         return len(self._q) + self._reserved >= self.depth
 
-    def reserve(self) -> None:
+    def reserve(self) -> None:           # holds: _lock
         self._reserved += 1
 
-    def cancel_reservation(self) -> None:
+    def cancel_reservation(self) -> None:    # holds: _lock
         self._reserved -= 1
 
-    def commit(self, w: _Window) -> None:
+    def commit(self, w: _Window) -> None:    # holds: _lock
         """Fill a reserved slot, keeping windows ordered by ``wi``."""
         self._reserved -= 1
         i = len(self._q)
@@ -233,13 +245,13 @@ class _InflightQueue:
             i -= 1
         self._q.insert(i, w)
 
-    def head(self) -> _Window:
+    def head(self) -> _Window:           # holds: _lock
         return self._q[0]
 
-    def pop(self) -> _Window:
+    def pop(self) -> _Window:            # holds: _lock
         return self._q.popleft()
 
-    def pop_ready(self, ready) -> Optional[_Window]:
+    def pop_ready(self, ready) -> Optional[_Window]:    # holds: _lock
         """Remove and return the first window (any position) whose scan
         has landed, or None."""
         for i, w in enumerate(self._q):
@@ -327,10 +339,11 @@ class QueryExecutor:
             n *= self.ctx.mesh.shape[a]
         return n
 
-    def _device_codes(self) -> jax.Array:        # holds: _dispatch_lock
-        """HBM-tier codes; placed row-sharded once per codes version (insert
-        invalidates the placement by rebinding ``index.codes``)."""
-        codes = self.index.codes
+    def _device_codes(self, codes: jax.Array) -> jax.Array:  # holds: _dispatch_lock
+        """HBM-tier placement of the pinned view's sealed codes, row-sharded
+        once per codes version.  Only compaction rebinds the code array
+        under the segmented index — delta inserts no longer invalidate the
+        placement, so streaming ingest stops thrashing the HBM cache."""
         if self.ctx.mesh is None:
             return codes
         if self._placed_src is not codes:
@@ -355,8 +368,12 @@ class QueryExecutor:
         ``top_n`` and each query truncates to its own at merge time."""
         from repro.core.distributed import sharded_adc_topn_window
         idx = self.index
+        # pin ONE epoch's consistent multi-tier binding for the whole
+        # window (DESIGN.md §10): everything below — traversal, gather,
+        # scan, and later the re-rank + delta merge — reads this view
+        view = idx.view()
         t0 = time.perf_counter()
-        per_q = [idx.candidate_ids(q, p.top_m)
+        per_q = [view.candidate_ids(q, p.top_m)
                  for q, p in zip(queries, plans)]
         union = (np.unique(np.concatenate(per_q)).astype(np.int64)
                  if sum(len(p) for p in per_q) else np.zeros((0,), np.int64))
@@ -364,7 +381,7 @@ class QueryExecutor:
 
         if plans[0].fused:
             return self._dispatch_fused(queries, plans, per_q, union,
-                                        t_graph=t1 - t0)
+                                        view=view, t_graph=t1 - t0)
         u = len(union)
         shards = self._n_shards()
         bucket = max(64, shards, 1 << int(np.ceil(np.log2(max(u, 1)))))
@@ -380,7 +397,8 @@ class QueryExecutor:
         luts = pq.adc_lut_batch(idx.codebook, jnp.asarray(
             np.stack([idx._lut_query(np.asarray(q, np.float32))
                       for q in queries])))
-        cand = jnp.take(self._device_codes(), jnp.asarray(padded), axis=0)
+        cand = jnp.take(self._device_codes(view.codes), jnp.asarray(padded),
+                        axis=0)
         mask_dev = jnp.asarray(mask)
         if self.ctx.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -400,11 +418,11 @@ class QueryExecutor:
             use_kernel=idx.use_kernel)
         return _Window(queries=queries, plans=list(plans), per_q=per_q,
                        union=union, vals=vals, pos=pos, t_graph=t1 - t0,
-                       t_scan_host=time.perf_counter() - t1)
+                       t_scan_host=time.perf_counter() - t1, view=view)
 
     def _dispatch_fused(self, queries: np.ndarray,
-                        plans: Sequence[QueryPlan], per_q, union,
-                        t_graph: float) -> _Window:    # holds: _dispatch_lock
+                        plans: Sequence[QueryPlan], per_q, union, *,
+                        view, t_graph: float) -> _Window:  # holds: _dispatch_lock
         """Fused form of stages ④⑤⑥ (``plan.fused``): one LUT→ADC→top-k
         pipeline per shard over per-query candidate ROW LISTS.  No union
         bucket, membership mask, or candidate gather ever materialises —
@@ -433,13 +451,13 @@ class QueryExecutor:
             codebooks = replicate_to_mesh(codebooks, self.ctx)
         scan_top_n = max(p.top_n for p in plans)
         vals, gids = sharded_adc_topn_rows(
-            self._device_codes(), qrot, codebooks, rows_dev,
+            self._device_codes(view.codes), qrot, codebooks, rows_dev,
             min(scan_top_n, S), self.ctx, use_kernel=idx.use_kernel,
             lut_int8=plans[0].lut_int8)
         return _Window(queries=queries, plans=list(plans), per_q=per_q,
                        union=union, vals=vals, pos=gids, t_graph=t_graph,
                        t_scan_host=time.perf_counter() - t1,
-                       ids_global=True)
+                       ids_global=True, view=view)
 
     def _finish_into(self, w: _Window, futures: Sequence[QueryFuture],
                      deadlines: Sequence[Optional[float]]) -> None:
@@ -480,11 +498,28 @@ class QueryExecutor:
             n_eff = min(p.top_n, len(w.per_q[qi]))
             order_ids = ids_sel[order][:n_eff]
             t2 = time.perf_counter()
+            q32 = np.asarray(q, np.float32)
             rr = heuristic_rerank(
-                np.asarray(q, np.float32), order_ids, idx.ssd, p.k,
+                q32, order_ids, idx.ssd, p.k,
                 batch_size=p.rerank_batch, eps=p.rerank_eps,
                 beta=p.rerank_beta,
                 disable_early_stop=p.disable_early_stop)
+            ids_out, dists_out = rr.ids, rr.dists
+            # delta merge (DESIGN.md §10): the pinned view's unsealed rows
+            # are scanned exactly and merged on (dist, id) — both streams
+            # are exact squared-L2, and delta ids (>= n_sealed) never
+            # appear in the sealed posting lists, so this is a disjoint
+            # k-way merge, bit-identical across replicas at one epoch
+            if w.view is not None and len(w.view.delta):
+                d_ids, d_d2 = w.view.delta_scan(q32)
+                if len(d_ids):
+                    all_ids = np.concatenate([rr.ids.astype(np.int64),
+                                              d_ids])
+                    all_d = np.concatenate(
+                        [rr.dists, d_d2.astype(rr.dists.dtype)])
+                    sel = np.lexsort((all_ids, all_d))[:p.k]
+                    ids_out = all_ids[sel].astype(rr.ids.dtype)
+                    dists_out = all_d[sel]
             stats = QueryStats(
                 ios=rr.io.ios, pages_requested=rr.io.pages_requested,
                 buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
@@ -495,7 +530,7 @@ class QueryExecutor:
                 early_stopped=rr.early_stopped,
                 t_graph=w.t_graph / max(B, 1), t_scan=t_scan / max(B, 1),
                 t_rerank=time.perf_counter() - t2)
-            fut._set_result(QueryResult(ids=rr.ids, dists=rr.dists,
+            fut._set_result(QueryResult(ids=ids_out, dists=dists_out,
                                         stats=stats))
 
     # --------------------------------------------------------------- submit
@@ -537,23 +572,29 @@ class QueryExecutor:
         W = plan.window or n
         starts = list(range(0, n, W))
         inflight = _InflightQueue(plan.effective_depth())
-        cursor = [0]                       # next undispatched window index
+        cursor = [0]          # next undispatched window; under inflight._lock
         lock, cond, busy = ticket._lock, ticket._cond, ticket._busy
 
         def _claim_dispatch() -> Optional[int]:
-            """Under ``lock``: claim the next window index + a depth slot,
-            or None when nothing is dispatchable."""
-            if cursor[0] < len(starts) and not inflight.full():
-                wi = cursor[0]
-                cursor[0] += 1
-                inflight.reserve()
-                busy[0] += 1
-                return wi
+            """Claim the next window index + a depth slot, or None when
+            nothing is dispatchable.  Takes the inflight lock first and
+            bumps the ticket's ``busy`` INSIDE it (rank descends:
+            inflight > ticket), so a stall-checking ``wait()`` — which
+            must take the inflight lock to observe an empty queue — can
+            never see the claim without its busy count."""
+            with inflight._lock:               # acquires: inflight
+                if cursor[0] < len(starts) and not inflight.full():
+                    wi = cursor[0]
+                    cursor[0] += 1
+                    inflight.reserve()
+                    with lock:                 # acquires: ticket
+                        busy[0] += 1
+                    return wi
             return None
 
         def _do_dispatch(wi: int) -> None:
             """Stage ①-⑥ for a claimed window — slow host work runs outside
-            the ticket lock so a concurrent retire can overlap it."""
+            both locks so a concurrent retire can overlap it."""
             s = starts[wi]
             try:
                 with self._dispatch_lock:
@@ -561,17 +602,19 @@ class QueryExecutor:
             except BaseException as exc:
                 for qi in range(s, min(s + W, n)):
                     futures[qi]._set_exception(exc)
-                with cond:                     # acquires: ticket
+                with inflight._lock:           # acquires: inflight
                     inflight.cancel_reservation()
-                    busy[0] -= 1
-                    cond.notify_all()
+                    with cond:                 # acquires: ticket
+                        busy[0] -= 1
+                        cond.notify_all()
                 raise
             w.start, w.wi = s, wi
-            with cond:                             # acquires: ticket
+            with inflight._lock:               # acquires: inflight
                 inflight.commit(w)
-                ticket.events.append(("dispatch", wi))
-                busy[0] -= 1
-                cond.notify_all()
+                with cond:                     # acquires: ticket
+                    ticket.events.append(("dispatch", wi))
+                    busy[0] -= 1
+                    cond.notify_all()
 
         def _retire(w: _Window) -> None:
             """Stage ⑥-⑦ for a popped window.  The ``finish`` event is
@@ -594,15 +637,16 @@ class QueryExecutor:
             """Blocking progress: prefer dispatching window t+1 over
             blocking on window t's scan (the paper's CPU/GPU overlap);
             retirement is FIFO from this path."""
-            w = None
-            with lock:                             # acquires: ticket
-                wi = _claim_dispatch()
-                if wi is None and len(inflight):
-                    w = inflight.pop()
-                    busy[0] += 1
+            wi = _claim_dispatch()
             if wi is not None:
                 _do_dispatch(wi)
                 return True
+            w = None
+            with inflight._lock:                   # acquires: inflight
+                if len(inflight):
+                    w = inflight.pop()
+                    with lock:                     # acquires: ticket
+                        busy[0] += 1
             if w is not None:
                 _retire(w)
                 return True
@@ -615,17 +659,17 @@ class QueryExecutor:
             from repro.core.distributed import window_scan_ready
             progressed = False
             while True:
-                with lock:                         # acquires: ticket
+                with inflight._lock:               # acquires: inflight
                     w = inflight.pop_ready(
                         lambda x: window_scan_ready(x.vals, x.pos))
                     if w is not None:
-                        busy[0] += 1
+                        with lock:                 # acquires: ticket
+                            busy[0] += 1
                 if w is not None:
                     _retire(w)
                     progressed = True
                     continue
-                with lock:                         # acquires: ticket
-                    wi = _claim_dispatch()
+                wi = _claim_dispatch()
                 if wi is None:
                     return progressed
                 _do_dispatch(wi)
@@ -637,8 +681,7 @@ class QueryExecutor:
             f._driver = _pump
         # eager phase: fill the in-flight depth before handing back
         while True:
-            with lock:                             # acquires: ticket
-                wi = _claim_dispatch()
+            wi = _claim_dispatch()
             if wi is None:
                 break
             _do_dispatch(wi)

@@ -1,0 +1,227 @@
+"""Segmented streaming index: immutable epoch-stamped views + a mutable
+delta segment + background compaction (DESIGN.md §10).
+
+The update model (SVFusion-style real-time ingest on top of the paper's
+SPFresh-cited maintenance path):
+
+  * Every reader — executor dispatch, candidate collection, the delta
+    merge in ``_finish_into`` — works against ONE :class:`IndexView`
+    pinned at the start of its window.  Views are frozen dataclasses
+    published by a single atomic reference assignment, so a reader can
+    never observe torn multi-tier state (the PR-9 race class: posting
+    ids pointing past the end of the code array, tombstone filters
+    IndexError-ing on fresh ids).
+  * Inserts append to the small mutable *delta segment* — raw float32
+    rows scanned exactly and merged into the top-k after the PQ scan +
+    re-rank.  No clustering, PQ encode, or SSD traffic on the insert
+    path.
+  * Deletes tombstone in the owning segment: a copy-on-write flip of the
+    sealed tombstone array, or a functional update of the delta's flags.
+  * A background :class:`SegmentCompactor` (its critical sections under
+    the ``compaction``-ranked witness lock) seals the delta into the
+    immutable PQ/posting/SSD tiers — re-cluster against the existing
+    centroids, PQ-encode, purge delta tombstones — while queries keep
+    serving against the old view; the swap is one epoch-bumped reference
+    assignment, so every executor/replica picks up the new binding at
+    its next dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import numpy as np
+
+from repro.core import navgraph as ng
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    import jax
+    from repro.core.clustering import PostingLists
+
+
+# ---------------------------------------------------------------------------
+# Delta segment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSegment:
+    """The mutable tail of the index, snapshotted functionally.
+
+    Every mutation returns a NEW ``DeltaSegment`` (arrays are never
+    written in place), so a published :class:`IndexView` holds a delta
+    that can never change under its readers.  Global ids are positional:
+    row ``i`` is vector ``base + i``; compaction seals a PREFIX of the
+    rows, so surviving rows keep their global ids with a higher base.
+    """
+
+    base: int                   # global id of row 0
+    vectors: np.ndarray         # (D, dim) float32, raw (un-rotated) space
+    tombstoned: np.ndarray      # (D,) bool
+
+    @staticmethod
+    def empty(base: int, dim: int) -> "DeltaSegment":
+        return DeltaSegment(base=int(base),
+                            vectors=np.zeros((0, dim), np.float32),
+                            tombstoned=np.zeros((0,), bool))
+
+    def __len__(self) -> int:
+        return len(self.vectors)
+
+    @property
+    def ids(self) -> np.ndarray:
+        """Global ids of every row (including tombstoned ones)."""
+        return np.arange(self.base, self.base + len(self.vectors),
+                         dtype=np.int64)
+
+    def live_count(self) -> int:
+        return int(len(self.tombstoned) - np.count_nonzero(self.tombstoned))
+
+    def append(self, vectors: np.ndarray) -> "DeltaSegment":
+        vecs = np.atleast_2d(vectors)
+        return DeltaSegment(
+            base=self.base,
+            vectors=np.concatenate([self.vectors, vecs]),
+            tombstoned=np.concatenate(
+                [self.tombstoned, np.zeros(len(vecs), bool)]))
+
+    def tombstone(self, local_ids: np.ndarray) -> "DeltaSegment":
+        flags = self.tombstoned.copy()
+        flags[local_ids] = True
+        return DeltaSegment(base=self.base, vectors=self.vectors,
+                            tombstoned=flags)
+
+    def drop_prefix(self, n: int) -> "DeltaSegment":
+        """The segment left after sealing rows ``[0, n)`` — survivors keep
+        their global ids because the base advances by exactly ``n``."""
+        return DeltaSegment(base=self.base + int(n),
+                            vectors=self.vectors[n:],
+                            tombstoned=self.tombstoned[n:])
+
+    def scan(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact squared-L2 over live rows -> (global ids, dists).
+
+        Same metric as ``heuristic_rerank``'s SSD re-scoring, so the two
+        result streams merge with one lexsort on ``(dist, id)``.
+        """
+        live = ~self.tombstoned
+        if not live.any():
+            return (np.zeros((0,), np.int64), np.zeros((0,), np.float32))
+        vecs = self.vectors[live]
+        diff = vecs - query.astype(np.float32)[None]
+        d2 = np.einsum("ij,ij->i", diff, diff).astype(np.float32)
+        return self.ids[live], d2
+
+
+# ---------------------------------------------------------------------------
+# Immutable view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndexView:
+    """One consistent, epoch-stamped binding of every tier.
+
+    Published by atomic reference assignment (``index._view = view``);
+    readers pin a view once per scan window and never lock.  All arrays
+    reachable from a view are treated as immutable: compaction builds
+    fresh posting/tombstone/code objects instead of extending in place,
+    and ``SSDSim``/``StorageLayout`` extension is prefix-preserving
+    (sealed rows never move), so a reader holding an old view stays
+    internally consistent forever.
+    """
+
+    epoch: int
+    codes: "jax.Array"          # (n_sealed, M) uint8 — sealed PQ segment(s)
+    posting: "PostingLists"     # sealed DRAM ID metadata
+    tombstones: np.ndarray      # (n_sealed,) bool
+    graph: ng.NavGraph
+    delta: DeltaSegment
+
+    @property
+    def n_sealed(self) -> int:
+        return len(self.tombstones)
+
+    @property
+    def n_total(self) -> int:
+        return self.n_sealed + len(self.delta)
+
+    # ------------------------------------------------------------- queries
+    def candidate_ids(self, query: np.ndarray, top_m: int,
+                      dedup: bool = True) -> np.ndarray:
+        """Stages ②③⑤ over the SEALED segments: graph traversal -> ID
+        collection -> dedup -> tombstone filter.  Every id returned is
+        ``< n_sealed == len(codes)`` by construction — posting lists and
+        tombstones in one view always describe the same sealed prefix,
+        which is the whole-of-PR-9 fix for the torn-tier gathers."""
+        cids = ng.search(self.graph, query.astype(np.float32), top_m)
+        ids = np.concatenate([self.posting.members[c] for c in cids]) \
+            if len(cids) else np.zeros((0,), np.int32)
+        if dedup:
+            ids = np.unique(ids)
+        if len(ids):
+            ids = ids[~self.tombstones[ids]]
+        return ids
+
+    def delta_scan(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact scan of the delta segment -> (global ids, squared-L2)."""
+        return self.delta.scan(query)
+
+
+# ---------------------------------------------------------------------------
+# Background compaction
+# ---------------------------------------------------------------------------
+
+class SegmentCompactor:
+    """Background thread sealing the delta whenever it holds at least
+    ``min_delta`` rows.
+
+    Parks on the index's ``compaction``-ranked condition; inserts notify
+    it, so sealing starts within one wakeup of the threshold being
+    crossed (``poll_s`` bounds the latency when a notify is missed).
+    The heavy work — re-cluster, PQ encode, SSD extension — runs in
+    :meth:`FusionANNSIndex.compact` OUTSIDE the lock; only the
+    claim/publish critical sections hold it, so inserts, deletes, and
+    queries keep flowing mid-compaction.
+    """
+
+    def __init__(self, index, *, min_delta: int = 64,
+                 poll_s: float = 0.05):
+        self.index = index
+        self.min_delta = int(min_delta)
+        self.poll_s = float(poll_s)
+        self._stop_requested = False    # written under index._mut_cond
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "SegmentCompactor":
+        if self._thread is not None:
+            return self
+        self._thread = threading.Thread(
+            target=self._loop, name="segment-compactor", daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        idx = self.index
+        while True:
+            with idx._mut_cond:  # acquires: compaction
+                while (not self._stop_requested
+                       and len(idx._view.delta) < self.min_delta):
+                    idx._mut_cond.wait(self.poll_s)
+                if self._stop_requested:
+                    return
+            idx.compact()
+
+    def stop(self, *, flush: bool = False) -> None:
+        """Stop the thread; with ``flush=True`` seal any remaining delta
+        rows after it exits (drain-to-sealed for snapshot-heavy tests)."""
+        t = self._thread
+        if t is not None:
+            with self.index._mut_cond:  # acquires: compaction
+                self._stop_requested = True
+                self.index._mut_cond.notify_all()
+            t.join(timeout=30.0)
+            self._thread = None
+            self._stop_requested = False
+        if flush:
+            self.index.compact()

@@ -477,6 +477,12 @@ class BatchingANNSService:
         return out
 
     # ---------------------------------------------------------------- stats
+    @property
+    def epoch(self) -> int:
+        """The index's segment-list epoch (DESIGN.md §10) — exposed so
+        coalescing layers key result identity on index state."""
+        return self.index.epoch
+
     def live_load(self) -> int:
         """Admission-state load: LIVE (uncancelled) queued requests plus
         requests inside a forming or in-flight batch.  This is what the

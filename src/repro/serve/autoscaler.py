@@ -71,7 +71,13 @@ class AutoscalerConfig:
 class ReplicaAutoscaler:
     """Drives a :class:`ReplicaRouter`'s replica count from its own load
     signals.  ``tick()`` is the whole control law (pure given the clock);
-    ``start()``/``stop()`` run it on a daemon thread."""
+    ``start()``/``stop()`` run it on a daemon thread.
+
+    When the router carries a ``snapshot_dir`` (DESIGN.md §10), every
+    scale-up this controller triggers hydrates the new replica from a
+    fresh ``save_snapshot`` of the live index — checkpoint/restore
+    instead of a from-scratch rebuild, so elastic capacity arrives at
+    the donor's exact epoch with bit-identical ids."""
 
     def __init__(self, router: ReplicaRouter,
                  config: Optional[AutoscalerConfig] = None,

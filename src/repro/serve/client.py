@@ -44,7 +44,8 @@ import asyncio
 import dataclasses
 import threading
 import time
-from typing import (Any, AsyncIterator, Dict, Iterable, List, Optional,
+from typing import (Any, AsyncIterator, Callable, Dict, Iterable, List,
+                    Optional,
                     Protocol, Sequence, runtime_checkable)
 
 import numpy as np
@@ -168,18 +169,24 @@ class Backend(Protocol):
 # ---------------------------------------------------------------------------
 
 def coalesce_key(request: SearchRequest, *, fused: bool = False,
-                 lut_int8: bool = False) -> tuple:
+                 lut_int8: bool = False,
+                 epoch: Optional[int] = None) -> tuple:
     """Identity of the backend work a request triggers: the query bytes
     plus EVERY effective plan knob — ``k``/``top_n``/``deadline_s`` from
     the request and the serving stack's ``fused``/``lut_int8`` accuracy
-    knobs.  Two requests may share one backend submit iff their keys are
-    equal; anything that could change the returned ids (or the latency
-    contract, for deadlines) keys separately.  ``tag``/``tenant`` are
-    correlation metadata, NOT part of the key — attached waiters get their
-    own tag/tenant stamped onto the shared response."""
+    knobs — plus the index's segment-list ``epoch``.  Two requests may
+    share one backend submit iff their keys are equal; anything that
+    could change the returned ids (or the latency contract, for
+    deadlines) keys separately.  The epoch is what keeps coalescing
+    honest under streaming updates (DESIGN.md §10): an insert/delete/
+    compaction bumps it, so a request arriving after a mutation never
+    attaches to a leader dispatched against the pre-mutation view.
+    ``tag``/``tenant`` are correlation metadata, NOT part of the key —
+    attached waiters get their own tag/tenant stamped onto the shared
+    response."""
     q = np.ascontiguousarray(np.asarray(request.query, np.float32))
     return (q.tobytes(), q.shape, request.k, request.top_n,
-            request.deadline_s, bool(fused), bool(lut_int8))
+            request.deadline_s, bool(fused), bool(lut_int8), epoch)
 
 
 class RequestCoalescer:
@@ -200,9 +207,14 @@ class RequestCoalescer:
     Thread-safe: the edge's event loop, replica pump threads (resolving
     leaders), and sync callers may all touch one coalescer."""
 
-    def __init__(self, *, fused: bool = False, lut_int8: bool = False):
+    def __init__(self, *, fused: bool = False, lut_int8: bool = False,
+                 epoch_source: Optional[Callable[[], int]] = None):
         self.fused = fused
         self.lut_int8 = lut_int8
+        # () -> current index epoch (e.g. ``lambda: backend.epoch``);
+        # sampled at claim time so a mutation between two identical
+        # requests forces the second into its own leader submit
+        self.epoch_source = epoch_source
         self._lock = make_lock("coalescer")
         # key -> [master future or None (leader mid-admission), waiters]
         self._inflight: Dict[tuple, list] = {}    # guarded-by: _lock
@@ -210,8 +222,10 @@ class RequestCoalescer:
             "leaders": 0, "attached": 0}          # guarded-by: _lock
 
     def key(self, request: SearchRequest) -> tuple:
+        epoch = (None if self.epoch_source is None
+                 else int(self.epoch_source()))
         return coalesce_key(request, fused=self.fused,
-                            lut_int8=self.lut_int8)
+                            lut_int8=self.lut_int8, epoch=epoch)
 
     def live(self) -> int:
         """Keys currently in flight (leader submitted or mid-admission)."""

@@ -149,10 +149,16 @@ class AnnsEdge:
         coalescer = None
         if self.cfg.coalesce:
             # the stack's accuracy knobs are part of result identity, so
-            # they fold into every coalescing key
+            # they fold into every coalescing key — and so is the index's
+            # segment-list epoch (DESIGN.md §10): backends expose
+            # ``.epoch`` and a mutation bumps it, keeping waiters from
+            # attaching to a leader dispatched against pre-mutation state
+            epoch_source = ((lambda: backend.epoch)
+                            if hasattr(backend, "epoch") else None)
             coalescer = RequestCoalescer(
                 fused=bool(getattr(backend, "fused", False)),
-                lut_int8=bool(getattr(backend, "lut_int8", False)))
+                lut_int8=bool(getattr(backend, "lut_int8", False)),
+                epoch_source=epoch_source)
         self.client = AsyncANNSClient(backend,
                                       max_inflight=self.cfg.max_inflight,
                                       coalescer=coalescer)

@@ -48,13 +48,18 @@ query streams.  :class:`ReplicaRouter` fronts N such replicas:
   queue is full the router tries the remaining replicas (least-loaded
   first) before rejecting.  A spill chain that exhausts EVERY replica
   counts as ``spill_exhausted`` and rejects.
-* **update propagation** — replicas share ONE index object (posting
-  lists, tombstones, SSD tier, the ``codes`` binding), so
-  ``router.insert()/delete()`` are visible to every replica: an insert
-  rebinds ``index.codes`` and each replica's executor re-places its HBM
-  shard on its next dispatch; deletes tombstone in DRAM and are filtered
-  at candidate collection on every replica (``test_updates`` semantics
-  hold under routing).
+* **update propagation** — founding replicas share ONE segmented index
+  object, so ``router.insert()/delete()/compact()`` publish a new
+  epoch-stamped :class:`~repro.core.segments.IndexView` that every
+  replica's executor pins at its next dispatch (``test_updates``
+  semantics hold under routing).  With ``snapshot_dir=`` set,
+  ``add_replica()`` HYDRATES the newcomer from a fresh
+  ``save_snapshot()`` of the live index instead of sharing it; the
+  router then fans every mutation out to each distinct index in the
+  same order, and because delta append / tombstone / compaction are
+  deterministic, hydrated replicas stay in id-for-id lockstep with the
+  donor (mutate through the ROUTER, not a bare index, once a hydrated
+  replica exists).
 
 Routing never changes results: each replica runs the same unified
 executor pipeline over the same index, so ids are bit-identical to a
@@ -91,12 +96,15 @@ class ReplicaRouter:
 
     def __init__(self, index: FusionANNSIndex, *, n_replicas: int = 2,
                  policy: str = "jsq", mesh=None, threaded: bool = True,
-                 **svc_kw):
+                 snapshot_dir: Optional[str] = None, **svc_kw):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         self.index = index
+        # with a snapshot dir, scale-ups hydrate a PRIVATE index from disk
+        # (save_snapshot -> load_snapshot) instead of sharing ``index``
+        self.snapshot_dir = snapshot_dir
         self.policy = policy
         self.parent_mesh = mesh
         self._lock = make_lock("router")
@@ -118,6 +126,11 @@ class ReplicaRouter:
             BatchingANNSService(index, executor=index.make_executor(m),
                                 threaded=threaded, **svc_kw)
             for m in self.meshes]              # guarded-by: _lock
+        # per-replica index binding, parallel to ``replicas`` (founding
+        # replicas share ``index``; snapshot-hydrated ones own a private
+        # copy that mutations fan out to)
+        self.indexes: List[FusionANNSIndex] = [
+            index] * n_replicas                # guarded-by: _lock
         # stable slot ids, parallel to ``replicas``; slots are never reused
         self.replica_ids: List[int] = list(range(n_replicas))  # guarded-by: _lock
         self._next_slot = n_replicas           # guarded-by: _lock
@@ -189,14 +202,34 @@ class ReplicaRouter:
         """Grow the replica set by one: re-carve the parent mesh over
         ``n+1`` groups, re-attach the survivors, and start a fresh replica
         (same service knobs as the founding set) on the last group.
-        Returns the new replica's stable slot id."""
-        new = BatchingANNSService(
-            self.index, executor=self.index.make_executor(None),
-            threaded=False, **self._svc_kw)
+        Returns the new replica's stable slot id.
+
+        With ``snapshot_dir`` set the newcomer HYDRATES from disk
+        (DESIGN.md §10): the live index is checkpointed via
+        ``save_snapshot`` and the replica serves a ``load_snapshot`` copy
+        — bit-identical ids at the captured epoch, no re-cluster /
+        re-encode, and no shared mutable state with the donor; subsequent
+        ``router.insert()/delete()/compact()`` fan out to keep it in
+        lockstep."""
         with self._lock:
+            # hydration happens INSIDE the router lock on purpose: the
+            # mutation fan-out also runs under it, so no insert/delete can
+            # land between the checkpoint and the newcomer joining
+            # ``self.indexes`` (which would be silently missing from the
+            # hydrated copy forever).  router > compaction in the lock
+            # hierarchy, so save_snapshot's pin underneath is legal.
+            if self.snapshot_dir is not None:
+                self.index.save_snapshot(self.snapshot_dir)
+                new_index = FusionANNSIndex.load_snapshot(self.snapshot_dir)
+            else:
+                new_index = self.index
+            new = BatchingANNSService(
+                new_index, executor=new_index.make_executor(None),
+                threaded=False, **self._svc_kw)
             slot = self._next_slot
             self._next_slot += 1
             self.replicas.append(new)
+            self.indexes.append(new_index)
             self.replica_ids.append(slot)
             self.stats["routed"].append(0)
             self.stats["scale_ups"] += 1
@@ -227,6 +260,7 @@ class ReplicaRouter:
                     raise ValueError(f"no replica with slot id {slot}") \
                         from None
             victim = self.replicas.pop(i)
+            self.indexes.pop(i)
             slot = self.replica_ids.pop(i)
             self.stats["scale_downs"] += 1
             # keep the round-robin cursor in range after the shrink
@@ -423,13 +457,50 @@ class ReplicaRouter:
             top_m=self.index.cfg.top_m)
 
     # -------------------------------------------------------------- updates
+    @property
+    def epoch(self) -> int:
+        """The primary index's segment-list epoch (coalescing keys)."""
+        return self.index.epoch
+
+    def _distinct_indexes_locked(self) -> List[FusionANNSIndex]:  # holds: _lock
+        seen: set = set()
+        out: List[FusionANNSIndex] = []
+        for ix in [self.index] + list(self.indexes):
+            if id(ix) not in seen:
+                seen.add(id(ix))
+                out.append(ix)
+        return out
+
     def insert(self, vectors: np.ndarray) -> np.ndarray:
-        """Insert into the SHARED index: every replica sees the new ids on
-        its next dispatch (the executor's HBM placement is keyed on the
-        ``codes`` binding, which insert replaces)."""
-        return self.index.insert(vectors)
+        """Append to every distinct index's delta segment (founding
+        replicas share one; snapshot-hydrated replicas own copies kept in
+        lockstep by this fan-out).  Each replica's executor pins the new
+        epoch's view at its next dispatch.  Returns the new global ids
+        (identical on every index by determinism)."""
+        vecs = np.atleast_2d(np.asarray(vectors, np.float32))
+        with self._lock:
+            ids = None
+            for ix in self._distinct_indexes_locked():
+                out = ix.insert(vecs)
+                ids = out if ids is None else ids
+        return ids
 
     def delete(self, ids: np.ndarray) -> None:
-        """Tombstone ids in the shared DRAM tier — filtered at candidate
-        collection by every replica immediately."""
-        self.index.delete(ids)
+        """Tombstone ids in the owning segment of every distinct index —
+        filtered at candidate collection by every replica from its next
+        pinned view."""
+        with self._lock:
+            for ix in self._distinct_indexes_locked():
+                ix.delete(ids)
+
+    def compact(self, *, wait: bool = True) -> int:
+        """Seal every distinct index's delta into its immutable tiers
+        (same deterministic op on each, so hydrated replicas stay
+        bit-identical).  Returns rows sealed on the primary index."""
+        with self._lock:
+            sealed = 0
+            for ix in self._distinct_indexes_locked():
+                n = ix.compact(wait=wait)
+                if ix is self.index:
+                    sealed = n
+        return sealed

@@ -12,6 +12,7 @@ examples/rag_pipeline.py, and the HTTP edge all build on it.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 from repro.core.engine import FusionANNSIndex
@@ -38,20 +39,37 @@ class ServingStackConfig:
     max_queue: int = 1024
     fused: bool = False
     lut_int8: bool = False
+    # snapshot directory (DESIGN.md §10): scale-ups hydrate new replicas
+    # from ``save_snapshot``/``load_snapshot`` instead of sharing the live
+    # index, and ``make_serving_stack(index=None)`` boots the whole stack
+    # from an existing checkpoint on disk
+    snapshot_dir: Optional[str] = None
 
 
-def make_serving_stack(index: FusionANNSIndex,
+def make_serving_stack(index: Optional[FusionANNSIndex] = None,
                        config: Optional[ServingStackConfig] = None,
                        **overrides) -> ReplicaRouter:
     """Build the serving stack for ``index``: a
     :class:`~repro.serve.router.ReplicaRouter` over ``n_replicas``
     batching replicas, configured from ``config`` (or a fresh default)
     with keyword ``overrides`` applied on top.  Started when
-    ``threaded=True`` (the default) — callers own the ``stop()``."""
+    ``threaded=True`` (the default) — callers own the ``stop()``.
+
+    ``index=None`` requires ``snapshot_dir`` pointing at a
+    ``save_snapshot`` checkpoint: the stack hydrates its index from disk
+    (replica restart without rebuilding), answering with bit-identical
+    ids to the index the snapshot was taken from."""
     cfg = dataclasses.replace(config or ServingStackConfig(), **overrides)
+    if index is None:
+        if cfg.snapshot_dir is None or not os.path.isdir(cfg.snapshot_dir):
+            raise ValueError(
+                "make_serving_stack(index=None) needs snapshot_dir= "
+                "pointing at an existing save_snapshot() directory")
+        index = FusionANNSIndex.load_snapshot(cfg.snapshot_dir)
     return ReplicaRouter(
         index, n_replicas=cfg.n_replicas, policy=cfg.policy, mesh=cfg.mesh,
-        threaded=cfg.threaded, max_batch=cfg.max_batch,
+        threaded=cfg.threaded, snapshot_dir=cfg.snapshot_dir,
+        max_batch=cfg.max_batch,
         max_wait_s=cfg.max_wait_s, scan_window=cfg.scan_window,
         inflight_depth=cfg.inflight_depth,
         overlap_rerank=cfg.overlap_rerank, max_queue=cfg.max_queue,

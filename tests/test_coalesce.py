@@ -129,6 +129,50 @@ def test_abandoned_leader_fails_waiters_and_frees_key():
     assert leader and co.live() == 1
 
 
+# ---------------------------------------- epoch-aware keys (PR 9, S3)
+
+def test_key_includes_index_epoch():
+    """The key must distinguish index states: identical request bytes at
+    different epochs are different units of work."""
+    q = np.arange(8, dtype=np.float32)
+    req = SearchRequest(query=q, k=5)
+    assert coalesce_key(req, epoch=3) == coalesce_key(req, epoch=3)
+    assert coalesce_key(req, epoch=3) != coalesce_key(req, epoch=4)
+    # and the epoch-free key (no epoch_source wired) stays distinct too
+    assert coalesce_key(req) != coalesce_key(req, epoch=0)
+
+
+def test_mutation_mid_flight_is_not_coalesced(anns_bundle, fresh_index):
+    """PR-9 regression: with an in-flight entry keyed before a mutation,
+    a request submitted AFTER the insert/delete must not attach to it —
+    attaching would hand the late arrival a pre-mutation result.  The
+    coalescer samples the index epoch at claim time, so the same query
+    bytes become a fresh leader once the index moves."""
+    b = anns_bundle
+    index = fresh_index
+    co = RequestCoalescer(epoch_source=lambda: index.epoch)
+    req = SearchRequest(query=b.queries[0], k=5)
+    leader, key = co.claim(req)
+    assert leader
+    master = QueryFuture(blocking=True)
+    co.publish(key, master)
+    # identical request while in flight at the SAME epoch: attaches
+    attached, waiter = co.claim(SearchRequest(query=b.queries[0], k=5,
+                                              tag="same-epoch"))
+    assert not attached
+    # mutate the index mid-flight; the same bytes now claim a new key
+    index.insert(b.new_vecs[:2])
+    leader2, key2 = co.claim(SearchRequest(query=b.queries[0], k=5))
+    assert leader2 and key2 != key
+    assert co.live() == 2              # entries coexist, split by epoch
+    master._set_result(_resp(tag="master"))
+    assert waiter.result().tag == "same-epoch"   # old entry still fans out
+    co.abandon(key2, None)
+    index.delete(np.array([index.n_total - 1]))  # delete bumps epoch too
+    leader3, key3 = co.claim(SearchRequest(query=b.queries[0], k=5))
+    assert leader3 and key3 != key2
+
+
 # ------------------------------------------ one backend submit per burst
 
 def test_coalesced_burst_is_one_backend_submit(anns_bundle):

@@ -565,6 +565,11 @@ class TestOrderedLock:
         assert HIERARCHY[0] == "future" and HIERARCHY[-1] == "autoscaler"
         assert LEVEL["ticket"] < LEVEL["executor"] < LEVEL["service"] \
             < LEVEL["router"] < LEVEL["autoscaler"]
+        # PR 9: the inflight queue got its own rank between ticket and
+        # executor, and compaction slots below service so the sealing
+        # thread can never wait on a lock a pump thread holds
+        assert LEVEL["ticket"] < LEVEL["inflight"] < LEVEL["executor"]
+        assert LEVEL["coalescer"] < LEVEL["compaction"] < LEVEL["service"]
 
 
 class TestFactories:
@@ -626,7 +631,8 @@ class TestRepoClean:
         assert n_fields >= 30
         assert {"QueryFuture", "BatchTicket", "QueryExecutor",
                 "BatchingANNSService", "ReplicaRouter",
-                "ReplicaAutoscaler"} <= classes
+                "ReplicaAutoscaler", "FusionANNSIndex",
+                "_InflightQueue"} <= classes
 
     def test_real_edges_descend(self):
         from repro.analysis.concurrency import collect_files
@@ -637,4 +643,9 @@ class TestRepoClean:
         pairs = {(o, i) for o, i, _, _ in edges if o != i}
         assert ("service", "future") in pairs
         assert ("router", "service") in pairs
+        # PR 9 non-vacuity: the inflight-queue lock really nests the
+        # ticket busy-accounting inside it, and the router really holds
+        # its lock across compaction fan-out / snapshot hydration
+        assert ("inflight", "ticket") in pairs
+        assert ("router", "compaction") in pairs
         assert all(LEVEL[i] < LEVEL[o] for o, i in pairs)

@@ -1,0 +1,226 @@
+"""Updates-while-serving stress (PR 9, satellite S5 — DESIGN.md §10).
+
+A mutator thread drives deterministic insert/delete bursts (with
+compaction sealing concurrently) against (a) a threaded
+:class:`BatchingANNSService` and (b) a 2-replica :class:`ReplicaRouter`
+with a snapshot-hydrated third replica, while the main thread keeps
+submitting queries.  The contract:
+
+* every submitted future resolves — zero leaked futures;
+* after quiescing, the stressed index answers BIT-IDENTICALLY to a
+  fresh index that replayed the same mutation log serially (compaction
+  timing must not change results, only when rows seal);
+* ``save_snapshot`` → ``load_snapshot`` of the quiesced index is
+  bit-identical too (checkpoint/restore parity);
+* under ``LINT_LOCKS=1`` the autouse witness guard (conftest.py) fails
+  the test on ANY lock-order violation recorded during the churn.
+
+Wired as ``scripts/check.sh mutate-stress`` (which exports LINT_LOCKS=1)
+and a CI step.
+"""
+
+import copy
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.engine import FusionANNSIndex
+from repro.serve.client import SearchRequest
+
+_ROUNDS = 10
+_BATCH = 4
+
+
+def _mutation_log(seed: int, dim: int, rounds: int = _ROUNDS,
+                  batch: int = _BATCH):
+    """Deterministic op list: ("insert", vecs) / ("delete", slots) where
+    a slot indexes the cumulative insert order (valid in any replay)."""
+    rng = np.random.default_rng(seed)
+    ops, n_inserted = [], 0
+    for _ in range(rounds):
+        ops.append(("insert",
+                    rng.normal(size=(batch, dim)).astype(np.float32)))
+        n_inserted += batch
+        if rng.random() < 0.7:
+            k = int(rng.integers(1, 3))
+            ops.append(("delete",
+                        rng.integers(0, n_inserted, size=k).tolist()))
+    return ops
+
+
+def _apply(target, ops, *, compact_every: int = 0) -> None:
+    """Replay ``ops`` against anything exposing insert()/delete() —
+    a bare index or a router.  Deletes resolve slots via the ids the
+    TARGET returned, so replays stay valid whatever the base size."""
+    inserted: list = []
+    for i, (kind, payload) in enumerate(ops):
+        if kind == "insert":
+            inserted.extend(int(x) for x in target.insert(payload))
+        else:
+            target.delete(np.array([inserted[s] for s in payload]))
+        if compact_every and (i + 1) % compact_every == 0:
+            target.compact(wait=True)
+
+
+def _top1_sets(index: FusionANNSIndex, queries, k: int = 10):
+    return [index.query(q, k=k) for q in queries]
+
+
+def _assert_bit_identical(a: FusionANNSIndex, b: FusionANNSIndex, queries):
+    for ra, rb in zip(_top1_sets(a, queries), _top1_sets(b, queries)):
+        np.testing.assert_array_equal(ra.ids, rb.ids)
+        np.testing.assert_array_equal(ra.dists, rb.dists)
+
+
+# ---------------------------------------------------------------------------
+# (a) threaded service + background compactor
+# ---------------------------------------------------------------------------
+
+def test_threaded_service_under_mutation_bursts(anns_bundle, fresh_index,
+                                                tmp_path):
+    from repro.serve.anns_service import BatchingANNSService
+    b = anns_bundle
+    index = fresh_index
+    ops = _mutation_log(11, b.data.shape[1])
+    svc = BatchingANNSService(index, threaded=True, max_batch=8,
+                              max_wait_s=0.001)
+    index.start_compactor(min_delta=6, poll_s=0.002)
+    errors: list = []
+
+    def mutate():
+        try:
+            _apply(index, ops)
+        except BaseException as exc:   # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    futs = []
+    t = threading.Thread(target=mutate, name="mutator")
+    t.start()
+    try:
+        while t.is_alive() or len(futs) < 24:
+            futs.extend(svc.submit(SearchRequest(query=q, k=10))
+                        for q in b.queries[:4])
+            for f in futs[-4:]:
+                f.result(timeout=60)   # serving keeps up during churn
+        t.join(60)
+        assert not t.is_alive()
+    finally:
+        t.join(60)
+        index.stop_compactor(flush=True)
+        svc.stop()
+    assert not errors, errors
+    # zero leaked futures: everything submitted resolved with real ids
+    assert all(f.done() for f in futs)
+    assert all(len(f.result().ids) == 10 for f in futs)
+    assert svc.live_load() == 0
+
+    # quiesced run parity: a fresh index replaying the same log serially
+    # (single thread, one final seal) answers bit-identically
+    replay = copy.deepcopy(b.index)
+    _apply(replay, ops)
+    replay.compact()
+    assert index.delta_size == 0               # flush=True sealed the tail
+    assert replay.n_total == index.n_total
+    _assert_bit_identical(index, replay, b.queries)
+
+    # checkpoint/restore parity on the stressed index
+    index.save_snapshot(str(tmp_path / "stressed"))
+    restored = FusionANNSIndex.load_snapshot(str(tmp_path / "stressed"))
+    _assert_bit_identical(index, restored, b.queries)
+
+
+# ---------------------------------------------------------------------------
+# (b) 2-replica router + snapshot-hydrated newcomer
+# ---------------------------------------------------------------------------
+
+def test_router_under_mutation_bursts_with_hydrated_replica(
+        anns_bundle, fresh_index, tmp_path):
+    from repro.serve.router import ReplicaRouter
+    b = anns_bundle
+    ops = _mutation_log(13, b.data.shape[1])
+    router = ReplicaRouter(fresh_index, n_replicas=2, threaded=True,
+                           max_batch=8, max_wait_s=0.001,
+                           snapshot_dir=str(tmp_path / "hydrate"))
+    router.start()
+    errors: list = []
+
+    def mutate():
+        try:
+            # mutations flow through the ROUTER so the hydrated replica's
+            # private index stays in lockstep; periodic compaction
+            # exercises sealing mid-traffic on every replica
+            _apply(router, ops, compact_every=5)
+        except BaseException as exc:   # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    futs = []
+    try:
+        slot = router.add_replica()    # hydrates from a live snapshot
+        assert slot >= 2
+        t = threading.Thread(target=mutate, name="mutator")
+        t.start()
+        try:
+            while t.is_alive() or len(futs) < 24:
+                futs.extend(router.submit(SearchRequest(query=q, k=10))
+                            for q in b.queries[:4])
+                for f in futs[-4:]:
+                    f.result(timeout=60)
+            t.join(60)
+            assert not t.is_alive()
+        finally:
+            t.join(60)
+        assert not errors, errors
+        router.compact(wait=True)      # quiesce: seal every replica
+        for f in futs:                 # zero leaked futures
+            assert len(f.result(timeout=60).ids) == 10
+        assert router.live_load() == 0
+        roll = router.stats_rollup()
+        assert roll["submitted"] == len(futs)
+        assert roll["submitted"] == sum(roll["routed"]) + roll["rejected"]
+
+        # every replica index (shared founders + hydrated private copy)
+        # is in bit-identical lockstep after quiescing
+        distinct = {id(ix): ix for ix in [router.index, *router.indexes]}
+        assert len(distinct) == 2      # founders share; newcomer private
+        ixs = list(distinct.values())
+        assert ixs[0].n_total == ixs[1].n_total
+        _assert_bit_identical(ixs[0], ixs[1], b.queries)
+
+        # quiesced-run parity vs a serial replay of the same log
+        replay = copy.deepcopy(b.index)
+        _apply(replay, ops)
+        replay.compact()
+        _assert_bit_identical(router.index, replay, b.queries)
+
+        # checkpoint/restore parity straight off the live router
+        router.index.save_snapshot(str(tmp_path / "final"))
+        restored = FusionANNSIndex.load_snapshot(str(tmp_path / "final"))
+        _assert_bit_identical(router.index, restored, b.queries)
+    finally:
+        router.stop()
+
+
+def test_mutations_through_router_reach_hydrated_replica(anns_bundle,
+                                                         fresh_index,
+                                                         tmp_path):
+    """Focused (non-threaded) check of the fan-out itself: an insert and
+    a delete issued AFTER hydration are visible — and identical — on the
+    newcomer's private index."""
+    from repro.serve.router import ReplicaRouter
+    b = anns_bundle
+    router = ReplicaRouter(fresh_index, n_replicas=1, threaded=False,
+                           snapshot_dir=str(tmp_path / "h"))
+    try:
+        router.add_replica()
+        new_ids = router.insert(b.new_vecs[:6])
+        router.delete(new_ids[:2])
+        router.compact(wait=True)
+        priv = router.indexes[-1]
+        assert priv is not router.index
+        assert priv.epoch == router.index.epoch
+        assert priv.n_total == router.index.n_total
+        _assert_bit_identical(router.index, priv, b.new_vecs[:6])
+        _assert_bit_identical(router.index, priv, b.queries)
+    finally:
+        router.stop()

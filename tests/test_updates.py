@@ -1,6 +1,11 @@
-"""Incremental index maintenance (SPFresh-style insert/delete), including
-the fused batched path (updates x batching: tombstones and fresh appends
-must be honored by every executor window size, not just window=1)."""
+"""Incremental index maintenance (segmented streaming updates, DESIGN.md
+§10), including the fused batched path (updates x batching: tombstones
+and fresh appends must be honored by every executor window size, not just
+window=1) and the PR-9 regression tests for the pre-segmentation races:
+torn multi-tier publication on insert, and tombstone filters indexing
+past their array on fresh ids."""
+
+import threading
 
 import numpy as np
 import pytest
@@ -100,13 +105,96 @@ def test_updates_respected_by_batching_service(index_and_data):
     assert hits >= 5
 
 
-def test_insert_extends_all_tiers(index_and_data):
+def test_insert_lands_in_delta_then_compaction_seals_all_tiers(
+        index_and_data):
+    """Segmented semantics: insert touches ONLY the delta segment (cheap,
+    atomic); compaction seals the rows into every immutable tier."""
     cfg, data, new_vecs, queries, index = index_and_data
     n0 = len(index.ssd.vectors)
     p0 = index.ssd.layout.n_pages
+    e0 = index.epoch
     index.insert(new_vecs)
+    assert index.delta_size == 20
+    assert index.epoch == e0 + 1
+    assert len(index.ssd.vectors) == n0               # sealed tiers
+    assert index.codes.shape[0] == n0                 # untouched by insert
+    assert index.n_total == n0 + 20                   # ids still published
+    sealed = index.compact()
+    assert sealed == 20 and index.delta_size == 0
     assert len(index.ssd.vectors) == n0 + 20          # SSD tier
     assert index.codes.shape[0] == n0 + 20            # HBM tier
     assert index.ssd.layout.n_pages > p0              # fresh pages
     total_members = sum(len(m) for m in index.posting.members)
     assert total_members >= n0 + 20                   # DRAM metadata
+
+
+def test_query_ids_stable_across_compaction(index_and_data):
+    """A vector's global id is assigned at insert and survives sealing."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    new_ids = index.insert(new_vecs)
+    pre = [index.query(v, k=1).ids[0] for v in new_vecs]
+    index.compact()
+    post = [index.query(v, k=1).ids[0] for v in new_vecs]
+    hits = sum(int(a == b == nid)
+               for a, b, nid in zip(pre, post, new_ids))
+    assert hits >= 18     # tight clusters; PQ may swap exact ties
+
+
+def test_delete_of_unpublished_id_raises(index_and_data):
+    """PR-9 regression (tombstone race): deleting an id that was never
+    published must be a ValueError, not silent corruption of (or an
+    IndexError in) a tombstone array that does not cover it."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    with pytest.raises(ValueError):
+        index.delete(np.array([index.n_total]))
+    with pytest.raises(ValueError):
+        index.delete(np.array([-1]))
+    # inserted-then-deleted works at every point of the lifecycle
+    new_ids = index.insert(new_vecs)
+    index.delete(new_ids[:1])                   # delta-owned tombstone
+    index.compact()
+    index.delete(new_ids[1:2])                  # sealed tombstone
+    res = index.query(new_vecs[0], k=5)
+    assert new_ids[0] not in set(res.ids.tolist())
+    assert new_ids[1] not in set(index.query(new_vecs[1], k=5).ids.tolist())
+
+
+def test_view_publication_is_atomic_across_tiers(index_and_data):
+    """PR-9 regression (torn-tier race): a view pinned at ANY moment —
+    including mid-insert/mid-compaction from another thread — must have
+    posting ids, codes, and tombstones describing exactly the same sealed
+    prefix.  Pre-segmentation, posting.members was extended before the
+    codes rebinding, so a concurrent reader could gather out of range."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    stop = threading.Event()
+    errors = []
+
+    def mutate():
+        try:
+            rng = np.random.default_rng(7)
+            while not stop.is_set():
+                ids = index.insert(
+                    rng.normal(size=(3, data.shape[1])).astype(np.float32))
+                index.delete(ids[:1])
+                index.compact()
+        except BaseException as exc:   # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    t = threading.Thread(target=mutate)
+    t.start()
+    try:
+        for _ in range(60):
+            view = index.view()
+            n_sealed = view.n_sealed
+            assert view.codes.shape[0] == n_sealed
+            assert len(view.posting.primary) == n_sealed
+            for q in queries[:2]:
+                ids = view.candidate_ids(q, cfg.top_m)
+                if len(ids):
+                    assert ids.max() < n_sealed
+            # the full pipeline never sees a torn binding either
+            index.query(queries[0], k=5)
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
