@@ -5,7 +5,9 @@ serving front-end's p50/p99 through submit()/QueryFuture (PR 2), the
 threaded runtime under 8 producer threads vs the synchronous pump
 (PR 3), the multi-replica JSQ router with the 1/2/4-replica scaling
 model (PR 4), the asyncio client front door over that router (PR 5),
-and the HTTP edge measured through a real loopback socket (PR 7)."""
+the HTTP edge measured through a real loopback socket (PR 7), and the
+deadline-adaptive accuracy resolver descending the level ladder as the
+deadline tightens (PR 10)."""
 
 import time
 
@@ -172,6 +174,90 @@ def _edge_http_row(b) -> dict:
     }
 
 
+def _deadline_adaptive_row(b) -> dict:
+    """Deadline-adaptive accuracy (PR 10 — DESIGN.md §11): feed the
+    planner the REAL served stats, then tighten the deadline and let it
+    descend the accuracy ladder; every adapted operating point is re-run
+    for real to report recall + measured candidate reduction, and its
+    re-measured modeled latency must fit the deadline that picked it.
+    A serve-path pass (``adaptive=True`` requests through the batching
+    service with a wall-clock deadline) proves the wiring end to end —
+    zero deadline misses.  The "fit" count uses the resolver's own
+    contract: the PREDICTED latency of the chosen level fits the
+    deadline, with the cheapest level as the explicit best-effort floor
+    when nothing does."""
+    from repro.core.futures import DeadlineExceeded
+    from repro.core.perf_model import (ACCURACY_LEVELS, AdaptivePlanner,
+                                       demand_from_stats, scale_demand,
+                                       single_thread_latency)
+    from repro.serve.anns_service import BatchingANNSService
+    from repro.serve.client import SearchRequest
+
+    def modeled(results):
+        stats = [r.stats for r in results]
+        totals = {f: float(np.sum([getattr(s, f) for s in stats]))
+                  for f in ("ios", "ssd_bytes", "h2d_bytes",
+                            "candidates_scanned", "rerank_scored")}
+        d = demand_from_stats(totals, len(stats), pq_m=b.cfg.pq_m,
+                              dim=b.data.shape[1], top_m=b.cfg.top_m)
+        return single_thread_latency(d, HW), d, stats
+
+    ex = b.index.executor
+    full = ex.run(b.queries, b.index.plan())
+    base_lat, d_full, full_stats = modeled(full)
+    planner = AdaptivePlanner(b.cfg, HW, dim=b.data.shape[1])
+    for s in full_stats:
+        planner.observe(s)
+
+    parts, fit, tried, wall = [], 0, 0, 0.0
+    for frac in (0.6, 0.25):
+        deadline = base_lat * frac
+        sug = planner.suggest(deadline)
+        lvl = next(l for l in ACCURACY_LEVELS
+                   if l.name == (sug["level"] if sug else "full"))
+        pred = single_thread_latency(scale_demand(d_full, lvl), HW)
+        plan = b.index.plan() if sug is None else \
+            b.index.plan(top_m=sug["top_m"], top_n=sug["top_n"])
+        t0 = time.perf_counter()
+        res = ex.run(b.queries, plan)
+        wall = time.perf_counter() - t0
+        lat, _, stats = modeled(res)
+        rec = recall_at_k(np.stack([r.ids for r in res]), b.gt, 10)
+        tried += 1
+        fit += int(pred <= deadline * planner.headroom
+                   or lvl is ACCURACY_LEVELS[-1])
+        parts.append(f"dl={deadline*1e3:.2f}ms level={lvl.name} "
+                     f"pred={pred*1e3:.2f}ms meas={lat*1e3:.2f}ms "
+                     f"recall={rec:.3f} "
+                     f"scanned={np.mean([s.candidates_scanned for s in stats]):.0f}")
+
+    # serve-path wiring: adaptive requests with a wall-clock deadline
+    svc = BatchingANNSService(b.index, threaded=True, max_batch=16,
+                              max_wait_s=0.0005)
+    try:
+        futs = [svc.submit(SearchRequest(query=q, k=10, deadline_s=1.0,
+                                         adaptive=True))
+                for q in b.queries]
+        misses = 0
+        for f in futs:
+            try:
+                f.result()
+            except DeadlineExceeded:
+                misses += 1
+    finally:
+        svc.stop()
+    return {
+        "name": "fig9.sift.deadline_adaptive",
+        "us_per_call": wall / max(len(b.queries), 1) * 1e6,
+        "derived": (f"full modeled={base_lat*1e3:.2f}ms "
+                    f"recall={recall_at_k(np.stack([r.ids for r in full]), b.gt, 10):.3f} | "
+                    + " | ".join(parts)
+                    + f" | resolver fit {fit}/{tried} (floor=best-effort)"
+                    + f" | serve adaptive: {len(b.queries)-misses}"
+                    f"/{len(b.queries)} in wall deadline"),
+    }
+
+
 def run():
     rows = []
     for ds in ("sift", "spacev", "deep"):
@@ -220,6 +306,7 @@ def run():
             rows.append(_router_jsq_row(b, thr))
             rows.append(_client_async_row(b))
             rows.append(_edge_http_row(b))
+            rows.append(_deadline_adaptive_row(b))
     return rows
 
 

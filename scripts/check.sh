@@ -33,6 +33,15 @@
 #                               soak, deterministic load-ramp (scale up
 #                               under burst, drain on scale-down, zero
 #                               leaked futures at router AND edge level)
+#   scripts/check.sh filter-stress
+#                               filtered + multi-tenant search: filtered
+#                               top-k vs the exact post-filter oracle
+#                               (selectivity sweep, delta-only matches,
+#                               tombstones, snapshots), tenant quota
+#                               enforcement and base-predicate stamping,
+#                               socket-level cross-tenant isolation, and
+#                               the deadline-adaptive resolver — all
+#                               under LINT_LOCKS=1 witnesses
 #   scripts/check.sh mutate-stress
 #                               updates-while-serving: insert/delete
 #                               bursts + background compaction against
@@ -97,6 +106,12 @@ case "$MODE" in
         tests/test_mutate_stress.py tests/test_segments.py \
         tests/test_updates.py
     ;;
+  filter-stress)
+    export LINT_LOCKS="${LINT_LOCKS:-1}"
+    exec timeout "${CHECK_TIMEOUT:-600}" \
+      python -m pytest -x -q -p no:cacheprovider tests/test_filters.py \
+        tests/test_tenants.py tests/test_edge.py
+    ;;
   kernels)
     timeout "${CHECK_TIMEOUT:-600}" \
       python -m pytest -x -q -p no:cacheprovider tests/test_kernels.py \
@@ -125,7 +140,7 @@ case "$MODE" in
       python -m pytest -x -q -p no:cacheprovider -m ""
     ;;
   *)
-    echo "usage: scripts/check.sh [tier1|smoke|lint|threaded-stress|router-stress|async-stress|mutate-stress|kernels|edge-stress|fig9|full]" >&2
+    echo "usage: scripts/check.sh [tier1|smoke|lint|threaded-stress|router-stress|async-stress|mutate-stress|filter-stress|kernels|edge-stress|fig9|full]" >&2
     exit 2
     ;;
 esac

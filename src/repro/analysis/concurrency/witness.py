@@ -9,14 +9,19 @@ Outer locks rank HIGHER; a thread may acquire a lock only while every
 lock it already holds ranks strictly above it.  Acquisition therefore
 always descends::
 
-    autoscaler > client > router > service > compaction > coalescer
-               > executor > inflight > ticket > future
+    autoscaler > client > router > service > tenant > compaction
+               > coalescer > executor > inflight > ticket > future
 
 ``compaction`` guards index mutation (the segmented index's delta append
 / tombstone / seal-publish critical sections, ``core/segments.py``); it
 sits below ``service``/``router`` so a serving layer may mutate its index
 while holding its own lock, and above ``coalescer``/``executor`` so the
-mutation path can never invert against a dispatch.  ``inflight`` is the
+mutation path can never invert against a dispatch.  ``tenant`` guards
+the tenant manager's quota buckets and per-tenant books
+(``serve/tenants.py``): it is never held across a backend call, and it
+sits BELOW ``service`` because the accounting runs in future
+done-callbacks, which the batching service fires while holding its own
+lock.  ``inflight`` is the
 executor's ``_InflightQueue`` lock: it is acquired first when claiming or
 retiring a depth slot, with the owning ticket's bookkeeping lock nested
 inside it (descending), so a stall-checking ``BatchTicket.wait()`` can
@@ -51,8 +56,8 @@ __all__ = ["HIERARCHY", "LEVEL", "LockOrderViolation", "OrderedLock",
 
 # innermost first: LEVEL[x] < LEVEL[y] means x must be acquired inside y
 HIERARCHY: Tuple[str, ...] = ("future", "ticket", "inflight", "executor",
-                              "coalescer", "compaction", "service",
-                              "router", "client", "autoscaler")
+                              "coalescer", "compaction", "tenant",
+                              "service", "router", "client", "autoscaler")
 LEVEL: Dict[str, int] = {name: i for i, name in enumerate(HIERARCHY)}
 
 

@@ -36,11 +36,16 @@ from repro.core import clustering, navgraph as ng, pq
 # ``from repro.core.engine import QueryResult`` keeps working.
 from repro.core.executor import (PlanOverrides, QueryExecutor,  # noqa: F401
                                  QueryPlan, QueryResult, QueryStats)
+from repro.core.filters import AttributeTable
 from repro.core.futures import BatchTicket, QueryFuture  # noqa: F401
 from repro.core.io_sim import IOStats, SSDSim, StorageLayout
 from repro.core.segments import DeltaSegment, IndexView, SegmentCompactor
 
-SNAPSHOT_FORMAT_VERSION = 1
+# v2 (DESIGN.md §11): + per-row attribute columns and the seal-time purge
+# id map (``id_of``).  v1 snapshots still load — identity id map, no
+# attributes.
+SNAPSHOT_FORMAT_VERSION = 2
+_SNAPSHOT_COMPAT_VERSIONS = (1, 2)
 _SNAPSHOT_MANIFEST = "manifest.json"
 _SNAPSHOT_ARRAYS = "arrays.npz"
 
@@ -63,7 +68,8 @@ class FusionANNSIndex:
                  graph: ng.NavGraph, ssd: SSDSim,
                  use_kernel: bool = False,
                  rotation: Optional[np.ndarray] = None,
-                 tombstones: Optional[np.ndarray] = None):
+                 tombstones: Optional[np.ndarray] = None,
+                 attributes=None, id_of: Optional[np.ndarray] = None):
         self.cfg = cfg
         self.codebook = codebook                 # HBM tier
         self.ssd = ssd                           # SSD tier: raw vectors
@@ -71,17 +77,23 @@ class FusionANNSIndex:
         # beyond-paper: OPQ rotation (core/opq.py); applied to queries
         # before the LUT build only — clustering/graph/re-rank raw space.
         self.rotation = rotation
-        n_sealed = int(codes.shape[0])
-        tomb = (np.zeros(n_sealed, bool) if tombstones is None
+        # id-space size: with a seal-time-purged snapshot the tombstone
+        # array covers MORE ids than there are physical code rows
+        n_ids = (int(codes.shape[0]) if tombstones is None
+                 else int(len(tombstones)))
+        tomb = (np.zeros(n_ids, bool) if tombstones is None
                 else np.asarray(tombstones, bool))
         self._mut_lock = make_lock("compaction")
         self._mut_cond = make_condition("compaction", self._mut_lock)
         self._compacting = False                 # guarded-by: _mut_lock
         self._compactor: Optional[SegmentCompactor] = None
         dim = int(ssd.vectors.shape[1])
+        attrs = (AttributeTable.from_columns(n_ids, attributes)
+                 if attributes else None)
         self._view = IndexView(
             epoch=0, codes=codes, posting=posting, tombstones=tomb,
-            graph=graph, delta=DeltaSegment.empty(n_sealed, dim))
+            graph=graph, delta=DeltaSegment.empty(n_ids, dim),
+            attrs=attrs, id_of=id_of)
 
     # deepcopy/pickle: locks and threads are per-process; a copy starts
     # with fresh ones (and no background compactor)
@@ -142,7 +154,8 @@ class FusionANNSIndex:
     def build(data: np.ndarray, cfg: ANNSConfig, seed: int = 0,
               *, intra_merge: bool = True, use_buffer: bool = True,
               optimized_layout: bool = True,
-              use_opq: bool = False) -> "FusionANNSIndex":
+              use_opq: bool = False,
+              attributes=None) -> "FusionANNSIndex":
         n, d = data.shape
         rng = np.random.default_rng(seed)
         key = jax.random.key(seed)
@@ -176,17 +189,21 @@ class FusionANNSIndex:
         # only the ID metadata survives in DRAM (paper §4.1).
         return FusionANNSIndex(cfg=cfg, codebook=cb, codes=codes,
                                posting=posting, graph=graph, ssd=ssd,
-                               rotation=rotation)
+                               rotation=rotation, attributes=attributes)
 
     # --------------------------------------------------------------- updates
-    def insert(self, vectors: np.ndarray) -> np.ndarray:
+    def insert(self, vectors: np.ndarray,
+               attributes=None) -> np.ndarray:
         """Append vectors to the delta segment; returns their new ids.
 
-        O(rows) — no clustering, PQ encode, or SSD traffic here; sealing
-        is compaction's job.  The ids are published atomically WITH the
-        rows (one view swap), so a concurrent query either sees none of
-        the batch or a fully-consistent binding of all of it — never ids
-        pointing past the end of any tier (the pre-segmentation race).
+        ``attributes`` maps column name -> per-row ints (filtered search,
+        DESIGN.md §11); columns absent here backfill UNSET and never
+        match a predicate.  O(rows) — no clustering, PQ encode, or SSD
+        traffic here; sealing is compaction's job.  The ids are published
+        atomically WITH the rows (one view swap), so a concurrent query
+        either sees none of the batch or a fully-consistent binding of
+        all of it — never ids pointing past the end of any tier (the
+        pre-segmentation race).
         """
         vecs = np.atleast_2d(np.asarray(vectors, np.float32))
         with self._mut_cond:  # acquires: compaction
@@ -194,7 +211,8 @@ class FusionANNSIndex:
             new_ids = np.arange(cur.n_total, cur.n_total + len(vecs),
                                 dtype=np.int64)
             self._view = dataclasses.replace(
-                cur, epoch=cur.epoch + 1, delta=cur.delta.append(vecs))
+                cur, epoch=cur.epoch + 1,
+                delta=cur.delta.append(vecs, attributes))
             self._mut_cond.notify_all()          # wake the compactor
         return new_ids
 
@@ -257,49 +275,72 @@ class FusionANNSIndex:
         """Phase 2+3 of :meth:`compact` — heavy work lock-free, publish
         atomic.  Only ever runs under the ``_compacting`` token, so
         ``view0``'s sealed tiers are still current at publish time (only
-        compaction replaces them)."""
+        compaction replaces them).
+
+        Rows tombstoned at claim time are PURGED here, not carried: they
+        get no PQ code, no posting membership, no SSD page (the ROADMAP
+        streaming-index follow-on).  Global ids stay stable — the id
+        space keeps counting purged rows — so the published view carries
+        ``id_of``/``row_of`` maps between physical rows and ids; both are
+        strictly increasing, which keeps candidate lists ascending and
+        tie-breaks identical across compactions."""
         delta_vecs = view0.delta.vectors[:d0]
         snap_tomb = view0.delta.tombstoned[:d0]
         n_sealed = view0.n_sealed
-        # DRAM tier: cluster the delta against the EXISTING centroids
+        live_local = np.flatnonzero(~snap_tomb)
+        n_live = len(live_local)
+        live_vecs = delta_vecs[live_local]
+        live_gids = (n_sealed + live_local).astype(np.int64)
+        # DRAM tier: cluster the SURVIVORS against the EXISTING centroids
         # (deterministic — replicas stay in lockstep replaying the same
-        # ops) and purge rows already tombstoned at claim time.
-        new_pl = clustering.assign_with_replication(
-            delta_vecs, view0.posting.centroids,
-            eps=self.cfg.replication_eps,
-            max_replicas=self.cfg.max_replicas)
+        # ops).  Posting members are physical ROW indices.
         members = list(view0.posting.members)
-        for c in range(view0.posting.n_clusters):
-            mem = new_pl.members[c]
-            if len(mem):
-                live = mem[~snap_tomb[mem]]
-                if len(live):
+        primary = view0.posting.primary
+        new_pl = None
+        if n_live:
+            new_pl = clustering.assign_with_replication(
+                live_vecs, view0.posting.centroids,
+                eps=self.cfg.replication_eps,
+                max_replicas=self.cfg.max_replicas)
+            for c in range(view0.posting.n_clusters):
+                mem = new_pl.members[c]
+                if len(mem):
                     members[c] = np.concatenate(
-                        [members[c], (live + n_sealed).astype(np.int32)])
+                        [members[c],
+                         (mem + view0.n_rows).astype(np.int32)])
+            primary = np.concatenate([primary, new_pl.primary])
         posting = clustering.PostingLists(
             centroids=view0.posting.centroids, members=members,
-            primary=np.concatenate([view0.posting.primary, new_pl.primary]))
-        # HBM tier: PQ-encode (rotated if OPQ) + append
-        enc_in = delta_vecs
-        if self.rotation is not None:
-            enc_in = enc_in @ self.rotation
-        new_codes = pq.encode(self.codebook, jnp.asarray(enc_in))
-        codes = jnp.concatenate([view0.codes, new_codes], axis=0)
+            primary=primary)
+        # HBM tier: PQ-encode the survivors (rotated if OPQ) + append
+        codes = view0.codes
+        if n_live:
+            enc_in = live_vecs
+            if self.rotation is not None:
+                enc_in = enc_in @ self.rotation
+            new_codes = pq.encode(self.codebook, jnp.asarray(enc_in))
+            codes = jnp.concatenate([view0.codes, new_codes], axis=0)
         # SSD tier: fresh pages bucketed by primary centroid (§4.3).
         # Prefix-preserving rebinds — rows a published view can name never
         # move, so readers of any older view stay consistent mid-seal.
-        lay = self.ssd.layout
-        order = np.argsort(new_pl.primary, kind="stable")
-        new_pages = lay.n_pages + np.arange(d0) // lay.per_page
-        page_of = np.empty(d0, np.int64)
-        page_of[order] = new_pages
-        self.ssd.vectors = np.concatenate(
-            [self.ssd.vectors, delta_vecs.astype(self.ssd.vectors.dtype)])
-        lay.page_of = np.concatenate([lay.page_of, page_of])
-        lay.n_pages = int(lay.page_of.max()) + 1
+        if n_live:
+            lay = self.ssd.layout
+            order = np.argsort(new_pl.primary, kind="stable")
+            new_pages = lay.n_pages + np.arange(n_live) // lay.per_page
+            page_of = np.empty(n_live, np.int64)
+            page_of[order] = new_pages
+            self.ssd.vectors = np.concatenate(
+                [self.ssd.vectors,
+                 live_vecs.astype(self.ssd.vectors.dtype)])
+            lay.page_of = np.concatenate([lay.page_of, page_of])
+            lay.n_pages = int(lay.page_of.max()) + 1
+        id_of = np.concatenate([view0.id_of, live_gids])
         # publish: sealed tombstones take the PUBLISH-time delta flags —
-        # a delete that raced the seal missed the members purge above,
-        # but the candidate-collection tombstone filter still drops it.
+        # a delete that raced the seal missed the purge above (its row IS
+        # encoded), but the candidate-collection tombstone filter still
+        # drops it.  Purged ids stay tombstoned-True in id space forever.
+        # Attributes are id-space: ALL d0 rows carry over (harmless for
+        # purged ids — the tombstone filter runs before any attr lookup).
         with self._mut_cond:  # acquires: compaction
             cur = self._view
             tomb = np.concatenate([cur.tombstones,
@@ -307,7 +348,9 @@ class FusionANNSIndex:
             self._view = IndexView(
                 epoch=cur.epoch + 1, codes=codes, posting=posting,
                 tombstones=tomb, graph=cur.graph,
-                delta=cur.delta.drop_prefix(d0))
+                delta=cur.delta.drop_prefix(d0),
+                attrs=cur.attrs.extend(cur.delta.attrs.head(d0)),
+                id_of=id_of)
             self._mut_cond.notify_all()
 
     def start_compactor(self, *, min_delta: int = 64,
@@ -340,8 +383,9 @@ class FusionANNSIndex:
         with self._mut_cond:  # acquires: compaction
             view = self._view
         n_sealed = view.n_sealed
+        n_rows = view.n_rows                  # physical rows (<= n_sealed)
         lay = self.ssd.layout
-        page_of = np.asarray(lay.page_of[:n_sealed], np.int64)
+        page_of = np.asarray(lay.page_of[:n_rows], np.int64)
         arrays: Dict[str, np.ndarray] = {
             "codes": np.asarray(view.codes, np.uint8),
             "codebooks": np.asarray(self.codebook.codebooks, np.float32),
@@ -355,11 +399,16 @@ class FusionANNSIndex:
             "posting_offsets": np.cumsum(
                 [0] + [len(m) for m in view.posting.members]).astype(np.int64),
             "tombstones": view.tombstones,
-            "ssd_vectors": np.asarray(self.ssd.vectors[:n_sealed]),
+            "ssd_vectors": np.asarray(self.ssd.vectors[:n_rows]),
             "ssd_page_of": page_of,
+            "id_of": view.id_of,
             "delta_vectors": view.delta.vectors,
             "delta_tombstoned": view.delta.tombstoned,
         }
+        for name, col in view.attrs.columns.items():
+            arrays[f"attr_sealed_{name}"] = col
+        for name, col in view.delta.attrs.columns.items():
+            arrays[f"attr_delta_{name}"] = col
         if self.rotation is not None:
             arrays["rotation"] = np.asarray(self.rotation, np.float32)
         if view.graph.super_centroids is not None:
@@ -369,11 +418,14 @@ class FusionANNSIndex:
             "format_version": SNAPSHOT_FORMAT_VERSION,
             "epoch": int(view.epoch),
             "n_sealed": int(n_sealed),
+            "n_rows": int(n_rows),
+            "attr_sealed_cols": sorted(view.attrs.columns),
+            "attr_delta_cols": sorted(view.delta.attrs.columns),
             "use_kernel": bool(self.use_kernel),
             "cfg": dataclasses.asdict(self.cfg),
             "graph_entry": int(view.graph.entry),
             "ssd": {
-                "n_pages": int(page_of.max()) + 1 if n_sealed else 0,
+                "n_pages": int(page_of.max()) + 1 if n_rows else 0,
                 "per_page": int(lay.per_page),
                 "page_bytes": int(lay.page_bytes),
                 "buffer_pages": int(self.ssd.buffer_pages),
@@ -395,10 +447,10 @@ class FusionANNSIndex:
         instead of re-clustering/re-encoding from raw data."""
         with open(os.path.join(path, _SNAPSHOT_MANIFEST)) as fh:
             manifest = json.load(fh)
-        if manifest["format_version"] != SNAPSHOT_FORMAT_VERSION:
+        if manifest["format_version"] not in _SNAPSHOT_COMPAT_VERSIONS:
             raise ValueError(
-                f"snapshot format {manifest['format_version']} != "
-                f"{SNAPSHOT_FORMAT_VERSION}")
+                f"snapshot format {manifest['format_version']} not in "
+                f"{_SNAPSHOT_COMPAT_VERSIONS}")
         with np.load(os.path.join(path, _SNAPSHOT_ARRAYS)) as npz:
             arr = {k: npz[k] for k in npz.files}
         cfg = ANNSConfig(**manifest["cfg"])
@@ -423,21 +475,33 @@ class FusionANNSIndex:
                      intra_merge=ssd_meta["intra_merge"],
                      use_buffer=ssd_meta["use_buffer"])
         codes = jnp.asarray(arr["codes"])
+        # v1 snapshots carry no id map / attributes: identity + empty
+        id_of = arr.get("id_of")
+        n_sealed = int(manifest["n_sealed"])
+        sealed_attrs = AttributeTable.from_columns(
+            n_sealed, {name: arr[f"attr_sealed_{name}"]
+                       for name in manifest.get("attr_sealed_cols", [])})
+        delta_attrs = AttributeTable.from_columns(
+            len(arr["delta_vectors"]),
+            {name: arr[f"attr_delta_{name}"]
+             for name in manifest.get("attr_delta_cols", [])})
         index = cls(cfg=cfg, codebook=pq.PQCodebook(
                         codebooks=jnp.asarray(arr["codebooks"])),
                     codes=codes, posting=posting, graph=graph, ssd=ssd,
                     use_kernel=manifest["use_kernel"],
                     rotation=arr.get("rotation"),
-                    tombstones=arr["tombstones"])
+                    tombstones=arr["tombstones"], id_of=id_of)
         # restore the delta + epoch too: a hydrated replica must answer
         # bit-identically to the donor, including its unsealed tail
         index._view = IndexView(
             epoch=manifest["epoch"], codes=codes, posting=posting,
             tombstones=np.asarray(arr["tombstones"], bool), graph=graph,
-            delta=DeltaSegment(base=manifest["n_sealed"],
+            delta=DeltaSegment(base=n_sealed,
                                vectors=arr["delta_vectors"],
                                tombstoned=np.asarray(
-                                   arr["delta_tombstoned"], bool)))
+                                   arr["delta_tombstoned"], bool),
+                               attrs=delta_attrs),
+            attrs=sealed_attrs, id_of=id_of)
         return index
 
     # ------------------------------------------------------------------ query

@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.analysis.concurrency.witness import make_lock
 from repro.core import pq
+from repro.core.filters import Predicate
 from repro.core.futures import BatchTicket, DeadlineExceeded, QueryFuture
 from repro.core.rerank import heuristic_rerank
 from repro.models.layers import ShardCtx
@@ -77,7 +78,8 @@ if TYPE_CHECKING:  # pragma: no cover
 # service, replica router), so the three can't drift.  Canonical home is
 # here next to the schema; ``serve.anns_service`` re-exports it.
 QUERY_STATS_FIELDS = ("ios", "pages_requested", "buffer_hits", "ssd_bytes",
-                      "h2d_bytes", "candidates_scanned", "rerank_batches",
+                      "h2d_bytes", "candidates_scanned",
+                      "candidates_prefilter", "rerank_batches",
                       "rerank_scored")
 
 
@@ -89,6 +91,10 @@ class QueryStats:
     ssd_bytes: int
     h2d_bytes: int               # vector-IDs sent CPU -> accelerator
     candidates_scanned: int      # PQ distance calculations (union, per window)
+    candidates_prefilter: int    # union size BEFORE the predicate filter —
+    #                              scanned/prefilter is the observed
+    #                              selectivity, proving filtering happened
+    #                              at collection, not after top-k
     rerank_batches: int
     rerank_scored: int
     early_stopped: bool
@@ -121,6 +127,9 @@ class QueryPlan:
     deadline_s: Optional[float] = None  # relative to submit(); None = never
     fused: bool = False          # stage ④⑤⑥ in one LUT→ADC→top-k pipeline
     lut_int8: bool = False       # fig10 accuracy level: int8 ADC tables
+    # metadata predicate (core/filters.py) applied at candidate collection
+    # — stage ②/⑤ row lists shrink BEFORE the ADC scan (DESIGN.md §11)
+    filter: Optional[Predicate] = None
 
     @staticmethod
     def from_config(cfg, *, k: Optional[int] = None,
@@ -170,6 +179,7 @@ class PlanOverrides:
     top_m: Optional[int] = None
     top_n: Optional[int] = None
     deadline_s: Optional[float] = None
+    filter: Optional[Predicate] = None
 
     def merge_into(self, plan: QueryPlan) -> QueryPlan:
         return plan.override(self)
@@ -189,7 +199,8 @@ class _Window:
     t_scan_host: float           # host-side LUT/gather/dispatch time
     start: int = 0               # global index of this window's first query
     wi: int = 0                  # window index within the ticket
-    ids_global: bool = False     # fused path: ``pos`` holds global row ids
+    ids_global: bool = False     # fused path: ``pos`` holds physical row ids
+    prefilter: int = 0           # union size before the predicate filter
     # the IndexView pinned at dispatch (DESIGN.md §10): candidate
     # collection, the scan, re-rank, and the delta merge in
     # ``_finish_into`` all read THIS epoch's binding, so a concurrent
@@ -300,6 +311,7 @@ class QueryExecutor:
         state.pop("_dispatch_lock", None)
         state.pop("_backend_lock", None)
         state.pop("_request_tickets", None)
+        state.pop("_planner", None)        # owns a lock; rebuilt lazily
         return state
 
     def __setstate__(self, state):
@@ -307,6 +319,23 @@ class QueryExecutor:
         self._dispatch_lock = make_lock("executor")
         self._backend_lock = make_lock("executor")
         self._request_tickets = []
+
+    # ----------------------------------------------------------- adaptive
+    @property
+    def planner(self):
+        """Lazy deadline-adaptive accuracy resolver (DESIGN.md §11):
+        observes served ``QueryStats`` and suggests per-request
+        ``top_m``/``top_n`` overrides that the perf model predicts meet a
+        deadline.  Created on first use so non-adaptive serving pays
+        nothing; its own lock is ``executor``-ranked, and ``observe()``
+        must never be called while holding another executor-rank lock."""
+        pl = getattr(self, "_planner", None)
+        if pl is None:
+            from repro.core.perf_model import AdaptivePlanner
+            dim = int(self.index.ssd.vectors.shape[1])
+            pl = AdaptivePlanner(self.index.cfg, dim=dim)
+            self._planner = pl
+        return pl
 
     # ------------------------------------------------------------- sharding
     def attach_mesh(self, mesh) -> "QueryExecutor":
@@ -373,21 +402,36 @@ class QueryExecutor:
         # scan, and later the re-rank + delta merge — reads this view
         view = idx.view()
         t0 = time.perf_counter()
-        per_q = [view.candidate_ids(q, p.top_m)
+        # predicate filtering happens HERE, inside candidate collection:
+        # per_q holds only matching ids, so the scan below never spends
+        # ADC work on a row the filter would discard.  The pre-filter
+        # union size rides along as the selectivity witness.
+        pairs = [view.collect_candidates(q, p.top_m, filt=p.filter)
                  for q, p in zip(queries, plans)]
+        per_q = [p[0] for p in pairs]
         union = (np.unique(np.concatenate(per_q)).astype(np.int64)
                  if sum(len(p) for p in per_q) else np.zeros((0,), np.int64))
+        if any(p.filter is not None for p in plans):
+            pre_lists = [p[1] for p in pairs]
+            prefilter = (len(np.unique(np.concatenate(pre_lists)))
+                         if sum(len(p) for p in pre_lists) else 0)
+        else:
+            prefilter = len(union)
         t1 = time.perf_counter()
 
         if plans[0].fused:
             return self._dispatch_fused(queries, plans, per_q, union,
-                                        view=view, t_graph=t1 - t0)
+                                        view=view, t_graph=t1 - t0,
+                                        prefilter=prefilter)
         u = len(union)
         shards = self._n_shards()
         bucket = max(64, shards, 1 << int(np.ceil(np.log2(max(u, 1)))))
         bucket += (-bucket) % shards
+        # physical code rows for the gather: ids and rows diverge once a
+        # seal-time purge has run (view.row_of maps id -> row; union never
+        # contains a purged id because the tombstone filter ran first)
         padded = np.zeros(bucket, np.int64)
-        padded[:u] = union
+        padded[:u] = view.row_of[union]
         # per-query membership: only a query's own candidates compete in its
         # top-n (identical semantics at every window size)
         mask = np.zeros((len(queries), bucket), bool)
@@ -418,11 +462,13 @@ class QueryExecutor:
             use_kernel=idx.use_kernel)
         return _Window(queries=queries, plans=list(plans), per_q=per_q,
                        union=union, vals=vals, pos=pos, t_graph=t1 - t0,
-                       t_scan_host=time.perf_counter() - t1, view=view)
+                       t_scan_host=time.perf_counter() - t1, view=view,
+                       prefilter=prefilter)
 
     def _dispatch_fused(self, queries: np.ndarray,
                         plans: Sequence[QueryPlan], per_q, union, *,
-                        view, t_graph: float) -> _Window:  # holds: _dispatch_lock
+                        view, t_graph: float,
+                        prefilter: int = 0) -> _Window:  # holds: _dispatch_lock
         """Fused form of stages ④⑤⑥ (``plan.fused``): one LUT→ADC→top-k
         pipeline per shard over per-query candidate ROW LISTS.  No union
         bucket, membership mask, or candidate gather ever materialises —
@@ -438,9 +484,11 @@ class QueryExecutor:
         S = max(64, 1 << int(np.ceil(np.log2(max(maxlen, 1)))))
         rows = np.full((len(queries), S), -1, np.int32)
         for qi, ids_q in enumerate(per_q):
-            # candidate_ids output is np.unique'd => ascending, which pins
-            # top-k tie-breaks to smallest-id-first, same as the dense path
-            rows[qi, :len(ids_q)] = ids_q
+            # candidate ids are np.unique'd => ascending, and row_of is
+            # strictly increasing over live ids, so the physical row lists
+            # stay ascending — pinning top-k tie-breaks to
+            # smallest-row == smallest-id, same as the dense path
+            rows[qi, :len(ids_q)] = view.row_of[ids_q]
         qrot = jnp.asarray(np.stack(
             [idx._lut_query(np.asarray(q, np.float32)) for q in queries]))
         rows_dev = jnp.asarray(rows)
@@ -457,7 +505,7 @@ class QueryExecutor:
         return _Window(queries=queries, plans=list(plans), per_q=per_q,
                        union=union, vals=vals, pos=gids, t_graph=t_graph,
                        t_scan_host=time.perf_counter() - t1,
-                       ids_global=True, view=view)
+                       ids_global=True, view=view, prefilter=prefilter)
 
     def _finish_into(self, w: _Window, futures: Sequence[QueryFuture],
                      deadlines: Sequence[Optional[float]]) -> None:
@@ -488,9 +536,11 @@ class QueryExecutor:
                 continue
             p = w.plans[qi]
             good = np.isfinite(vals[qi])
-            # fused windows return global row ids directly; dense windows
-            # return positions into the padded candidate bucket
-            ids_sel = (pos[qi][good] if w.ids_global
+            # fused windows return physical code rows directly (mapped
+            # back to global ids through the pinned view); dense windows
+            # return positions into the padded candidate bucket, whose
+            # backing ``union`` already holds global ids
+            ids_sel = (w.view.id_of[pos[qi][good]] if w.ids_global
                        else w.union[pos[qi][good]])
             d_sel = vals[qi][good]
             # ascending (distance, id): makes sharded == unsharded exactly
@@ -499,32 +549,39 @@ class QueryExecutor:
             order_ids = ids_sel[order][:n_eff]
             t2 = time.perf_counter()
             q32 = np.asarray(q, np.float32)
+            # the SSD tier is row-indexed: purge-surviving rows pack the
+            # pages, so the re-rank walks physical rows and the result ids
+            # map back through id_of (monotone — ordering is unchanged)
             rr = heuristic_rerank(
-                q32, order_ids, idx.ssd, p.k,
+                q32, w.view.row_of[order_ids], idx.ssd, p.k,
                 batch_size=p.rerank_batch, eps=p.rerank_eps,
                 beta=p.rerank_beta,
                 disable_early_stop=p.disable_early_stop)
-            ids_out, dists_out = rr.ids, rr.dists
+            rr_ids = w.view.id_of[rr.ids] if len(rr.ids) else \
+                rr.ids.astype(np.int64)
+            ids_out, dists_out = rr_ids, rr.dists
             # delta merge (DESIGN.md §10): the pinned view's unsealed rows
-            # are scanned exactly and merged on (dist, id) — both streams
-            # are exact squared-L2, and delta ids (>= n_sealed) never
-            # appear in the sealed posting lists, so this is a disjoint
-            # k-way merge, bit-identical across replicas at one epoch
+            # are scanned exactly (under the SAME predicate) and merged on
+            # (dist, id) — both streams are exact squared-L2, and delta
+            # ids (>= n_sealed) never appear in the sealed posting lists,
+            # so this is a disjoint k-way merge, bit-identical across
+            # replicas at one epoch
             if w.view is not None and len(w.view.delta):
-                d_ids, d_d2 = w.view.delta_scan(q32)
+                d_ids, d_d2 = w.view.delta_scan(q32, filt=p.filter)
                 if len(d_ids):
-                    all_ids = np.concatenate([rr.ids.astype(np.int64),
+                    all_ids = np.concatenate([rr_ids.astype(np.int64),
                                               d_ids])
                     all_d = np.concatenate(
                         [rr.dists, d_d2.astype(rr.dists.dtype)])
                     sel = np.lexsort((all_ids, all_d))[:p.k]
-                    ids_out = all_ids[sel].astype(rr.ids.dtype)
+                    ids_out = all_ids[sel]
                     dists_out = all_d[sel]
             stats = QueryStats(
                 ios=rr.io.ios, pages_requested=rr.io.pages_requested,
                 buffer_hits=rr.io.buffer_hits, ssd_bytes=rr.io.bytes_read,
                 h2d_bytes=4 * u // max(B, 1),    # amortised union transfer
                 candidates_scanned=u,            # union, ONCE per window
+                candidates_prefilter=w.prefilter,
                 rerank_batches=rr.batches_run,
                 rerank_scored=rr.candidates_scored,
                 early_stopped=rr.early_stopped,
@@ -706,7 +763,17 @@ class QueryExecutor:
         from repro.serve.client import response_from_result
         plan = QueryPlan.from_config(self.index.cfg, k=request.k,
                                      top_n=request.top_n,
-                                     deadline_s=request.deadline_s)
+                                     deadline_s=request.deadline_s,
+                                     filter=request.filter)
+        if request.adaptive and request.deadline_s is not None:
+            sug = self.planner.suggest(request.deadline_s)
+            if sug is not None:
+                # the resolver's accuracy level shapes the scan; an
+                # EXPLICIT request top_n still wins over the adaptive one
+                plan = plan.override(
+                    top_m=sug["top_m"],
+                    top_n=None if request.top_n is not None
+                    else sug["top_n"])
         t0 = time.perf_counter()
         ticket = self.submit(request.query[None], plan)
         inner = ticket.futures[0]
@@ -743,6 +810,12 @@ class QueryExecutor:
                 for field in QUERY_STATS_FIELDS:
                     self.query_stats[field] += getattr(res.stats, field)
                 self.query_stats["served"] += 1
+            # feed the adaptive resolver OUTSIDE _backend_lock: the
+            # planner's lock is executor-ranked too, and same-rank
+            # nesting is a witnessed lock-order violation
+            pl = getattr(self, "_planner", None)
+            if pl is not None:
+                pl.observe(res.stats)
             out._set_result(resp)
 
         inner.add_done_callback(_on_done)

@@ -16,9 +16,11 @@ FusionANNS rides the IOPS/PCIe-light path to 64.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.analysis.concurrency.witness import make_lock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,3 +169,145 @@ def max_useful_replicas(d: QueryDemand, hw: DeviceModel, *,
             break
         prev, n = nxt, n + 1
     return n
+
+
+# ---------------------------------------------------------------------------
+# Deadline-adaptive accuracy (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# The paper's Fig. 10 exposes accuracy as a runtime knob (heuristic
+# re-rank depth / int8 LUTs); here the SAME knob becomes a per-request
+# resolver: pick the most accurate level whose MODELED single-thread
+# latency fits the request's ``deadline_s``.  ``top_m_frac`` scales the
+# graph traversal + scan-side demands (posting lists visited -> union
+# size -> H2D bytes + ADC lookups), ``top_n_frac`` the re-rank-side
+# demands (SSD I/O + exact distances).
+
+@dataclasses.dataclass(frozen=True)
+class AccuracyLevel:
+    name: str
+    top_m_frac: float
+    top_n_frac: float
+
+
+# most-accurate-first: the resolver returns the FIRST level that fits,
+# so an easy deadline always gets full accuracy
+ACCURACY_LEVELS: Tuple[AccuracyLevel, ...] = (
+    AccuracyLevel("full", 1.0, 1.0),
+    AccuracyLevel("high", 0.75, 0.75),
+    AccuracyLevel("balanced", 0.5, 0.5),
+    AccuracyLevel("fast", 0.25, 0.25),
+    AccuracyLevel("turbo", 0.125, 0.125),
+)
+
+
+def scale_demand(d: QueryDemand, level: AccuracyLevel,
+                 selectivity: float = 1.0) -> QueryDemand:
+    """Predicted demand at a reduced accuracy level.  ``selectivity``
+    (scanned/prefilter candidate ratio, <= 1) lets a caller predict a
+    FILTERED workload's demand from unfiltered measurements — both scan
+    and re-rank work shrink with it, because filtering happens at
+    candidate collection (not post-top-k)."""
+    m = level.top_m_frac * selectivity
+    n = level.top_n_frac * selectivity
+    return QueryDemand(
+        ssd_ios=d.ssd_ios * n,
+        ssd_requests=(d.ssd_requests if d.ssd_requests < 0
+                      else d.ssd_requests * n),
+        ssd_bytes=d.ssd_bytes * n,
+        h2d_bytes=d.h2d_bytes * m,
+        gpu_lookups=d.gpu_lookups * m,
+        cpu_lookups=d.cpu_lookups * m,
+        cpu_dist_ops=d.cpu_dist_ops * n,
+        graph_hops=d.graph_hops * level.top_m_frac)
+
+
+def resolve_accuracy(deadline_s: float, demand: QueryDemand,
+                     hw: DeviceModel, *, selectivity: float = 1.0,
+                     levels: Tuple[AccuracyLevel, ...] = ACCURACY_LEVELS,
+                     headroom: float = 1.0) -> AccuracyLevel:
+    """The most accurate level whose modeled latency fits
+    ``deadline_s * headroom``; the cheapest level when none does (a
+    best-effort answer beats none — the deadline machinery downstream
+    still expires truly hopeless requests)."""
+    for level in levels:
+        lat = single_thread_latency(
+            scale_demand(demand, level, selectivity), hw)
+        if lat <= deadline_s * headroom:
+            return level
+    return levels[-1]
+
+
+class AdaptivePlanner:
+    """Observes served ``QueryStats`` and suggests per-request plan
+    overrides that the device model predicts meet a deadline.
+
+    Holds an EWMA of per-query demand (at whatever accuracy recent
+    traffic ran) plus the observed filter selectivity; ``suggest()``
+    resolves an accuracy level against that baseline and converts its
+    fractions into concrete ``top_m``/``top_n`` values.  Thread-safe:
+    one ``executor``-ranked lock over the EWMA state — callers must not
+    hold another executor-rank lock (same-rank nesting is a witnessed
+    lock-order violation)."""
+
+    def __init__(self, cfg, hw: Optional[DeviceModel] = None, *, dim: int,
+                 pq_m: Optional[int] = None, alpha: float = 0.25,
+                 headroom: float = 0.9):
+        self.cfg = cfg
+        self.hw = hw if hw is not None else DeviceModel()
+        self.dim = int(dim)
+        self.pq_m = int(cfg.pq_m if pq_m is None else pq_m)
+        self.alpha = float(alpha)
+        self.headroom = float(headroom)
+        self._lock = make_lock("executor")
+        self._demand: Optional[QueryDemand] = None  # guarded-by: _lock
+        self._selectivity = 1.0                     # guarded-by: _lock
+        self._n_observed = 0                        # guarded-by: _lock
+
+    def observe(self, stats) -> None:
+        """Fold one served query's ``QueryStats`` into the EWMA."""
+        totals = {"ios": stats.ios, "ssd_bytes": stats.ssd_bytes,
+                  "h2d_bytes": stats.h2d_bytes,
+                  "candidates_scanned": stats.candidates_scanned,
+                  "rerank_scored": stats.rerank_scored}
+        d = demand_from_stats(totals, 1, pq_m=self.pq_m, dim=self.dim,
+                              top_m=self.cfg.top_m)
+        sel = (stats.candidates_scanned
+               / max(stats.candidates_prefilter, 1))
+        a = self.alpha
+        with self._lock:  # acquires: executor
+            if self._demand is None:
+                self._demand = d
+                self._selectivity = sel
+            else:
+                prev = self._demand
+                self._demand = QueryDemand(**{
+                    f.name: (1 - a) * getattr(prev, f.name)
+                    + a * getattr(d, f.name)
+                    for f in dataclasses.fields(QueryDemand)})
+                self._selectivity = (1 - a) * self._selectivity + a * sel
+            self._n_observed += 1
+
+    def suggest(self, deadline_s: Optional[float]) -> Optional[Dict]:
+        """Plan override for one request, or None when no adaptation is
+        needed (no deadline, nothing observed yet, or full accuracy
+        already fits).  The observed demand already reflects the live
+        selectivity, so the resolver runs at selectivity=1."""
+        if deadline_s is None:
+            return None
+        with self._lock:  # acquires: executor
+            d = self._demand
+            sel = self._selectivity
+        if d is None:
+            return None
+        level = resolve_accuracy(deadline_s, d, self.hw,
+                                 headroom=self.headroom)
+        if level.top_m_frac >= 1.0 and level.top_n_frac >= 1.0:
+            return None
+        return {"level": level.name,
+                "selectivity": sel,
+                "top_m": max(1, int(round(self.cfg.top_m
+                                          * level.top_m_frac))),
+                "top_n": max(self.cfg.top_k,
+                             int(round(self.cfg.top_n
+                                       * level.top_n_frac)))}

@@ -35,6 +35,7 @@ from typing import TYPE_CHECKING, Optional, Tuple
 import numpy as np
 
 from repro.core import navgraph as ng
+from repro.core.filters import AttributeTable, Predicate
 
 if TYPE_CHECKING:                                   # pragma: no cover
     import jax
@@ -59,6 +60,14 @@ class DeltaSegment:
     base: int                   # global id of row 0
     vectors: np.ndarray         # (D, dim) float32, raw (un-rotated) space
     tombstoned: np.ndarray      # (D,) bool
+    # per-row metadata columns (core/filters.py), local row-space; None
+    # normalizes to an empty table so pre-filter constructors keep working
+    attrs: Optional[AttributeTable] = None
+
+    def __post_init__(self):
+        if self.attrs is None:
+            object.__setattr__(
+                self, "attrs", AttributeTable.empty(len(self.vectors)))
 
     @staticmethod
     def empty(base: int, dim: int) -> "DeltaSegment":
@@ -78,40 +87,50 @@ class DeltaSegment:
     def live_count(self) -> int:
         return int(len(self.tombstoned) - np.count_nonzero(self.tombstoned))
 
-    def append(self, vectors: np.ndarray) -> "DeltaSegment":
+    def append(self, vectors: np.ndarray,
+               attributes=None) -> "DeltaSegment":
         vecs = np.atleast_2d(vectors)
         return DeltaSegment(
             base=self.base,
             vectors=np.concatenate([self.vectors, vecs]),
             tombstoned=np.concatenate(
-                [self.tombstoned, np.zeros(len(vecs), bool)]))
+                [self.tombstoned, np.zeros(len(vecs), bool)]),
+            attrs=self.attrs.append(len(vecs), attributes))
 
     def tombstone(self, local_ids: np.ndarray) -> "DeltaSegment":
         flags = self.tombstoned.copy()
         flags[local_ids] = True
         return DeltaSegment(base=self.base, vectors=self.vectors,
-                            tombstoned=flags)
+                            tombstoned=flags, attrs=self.attrs)
 
     def drop_prefix(self, n: int) -> "DeltaSegment":
         """The segment left after sealing rows ``[0, n)`` — survivors keep
         their global ids because the base advances by exactly ``n``."""
         return DeltaSegment(base=self.base + int(n),
                             vectors=self.vectors[n:],
-                            tombstoned=self.tombstoned[n:])
+                            tombstoned=self.tombstoned[n:],
+                            attrs=self.attrs.drop_prefix(n))
 
-    def scan(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact squared-L2 over live rows -> (global ids, dists).
+    def scan(self, query: np.ndarray,
+             filt: Optional[Predicate] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact squared-L2 over live rows matching ``filt`` -> (global
+        ids, dists).
 
         Same metric as ``heuristic_rerank``'s SSD re-scoring, so the two
-        result streams merge with one lexsort on ``(dist, id)``.
+        result streams merge with one lexsort on ``(dist, id)``.  The
+        predicate applies BEFORE the distance computation — selectivity
+        shrinks the delta scan exactly like it shrinks the sealed one.
         """
-        live = ~self.tombstoned
-        if not live.any():
+        live = np.flatnonzero(~self.tombstoned)
+        if filt is not None and len(live):
+            live = live[filt.mask(self.attrs, live)]
+        if not len(live):
             return (np.zeros((0,), np.int64), np.zeros((0,), np.float32))
         vecs = self.vectors[live]
         diff = vecs - query.astype(np.float32)[None]
         d2 = np.einsum("ij,ij->i", diff, diff).astype(np.float32)
-        return self.ids[live], d2
+        return self.base + live.astype(np.int64), d2
 
 
 # ---------------------------------------------------------------------------
@@ -132,15 +151,44 @@ class IndexView:
     """
 
     epoch: int
-    codes: "jax.Array"          # (n_sealed, M) uint8 — sealed PQ segment(s)
-    posting: "PostingLists"     # sealed DRAM ID metadata
-    tombstones: np.ndarray      # (n_sealed,) bool
+    codes: "jax.Array"          # (n_rows, M) uint8 — sealed PQ segment(s)
+    posting: "PostingLists"     # sealed DRAM ID metadata (row-space members)
+    tombstones: np.ndarray      # (n_sealed,) bool — ID-space
     graph: ng.NavGraph
     delta: DeltaSegment
+    # per-row metadata columns, ID-space over the sealed prefix (the
+    # tombstone filter runs first, so purged ids never reach a lookup)
+    attrs: Optional[AttributeTable] = None
+    # seal-time purge indirection (DESIGN.md §11): compaction drops
+    # tombstoned delta rows instead of encoding them, so physical code/SSD
+    # rows and global ids diverge.  ``id_of`` maps physical row -> global
+    # id (strictly increasing); ``row_of`` maps global id -> physical row
+    # (-1 for purged ids).  None normalizes to the identity, so
+    # constructors predating the purge keep working unchanged.
+    id_of: Optional[np.ndarray] = None      # (n_rows,) int64
+    row_of: Optional[np.ndarray] = None     # (n_sealed,) int64
+
+    def __post_init__(self):
+        if self.attrs is None:
+            object.__setattr__(
+                self, "attrs", AttributeTable.empty(self.n_sealed))
+        if self.id_of is None:
+            object.__setattr__(
+                self, "id_of", np.arange(self.n_sealed, dtype=np.int64))
+        if self.row_of is None:
+            object.__setattr__(
+                self, "row_of",
+                row_of_from_id_of(self.id_of, self.n_sealed))
 
     @property
     def n_sealed(self) -> int:
+        """Sealed ids ever published (id-space; includes purged ids)."""
         return len(self.tombstones)
+
+    @property
+    def n_rows(self) -> int:
+        """Physical sealed rows (``== len(codes)``; <= n_sealed)."""
+        return len(self.id_of)
 
     @property
     def n_total(self) -> int:
@@ -148,24 +196,55 @@ class IndexView:
 
     # ------------------------------------------------------------- queries
     def candidate_ids(self, query: np.ndarray, top_m: int,
-                      dedup: bool = True) -> np.ndarray:
-        """Stages ②③⑤ over the SEALED segments: graph traversal -> ID
-        collection -> dedup -> tombstone filter.  Every id returned is
-        ``< n_sealed == len(codes)`` by construction — posting lists and
-        tombstones in one view always describe the same sealed prefix,
-        which is the whole-of-PR-9 fix for the torn-tier gathers."""
+                      dedup: bool = True,
+                      filt: Optional[Predicate] = None) -> np.ndarray:
+        """Stages ②③⑤ over the SEALED segments: graph traversal -> row
+        collection -> dedup -> tombstone filter -> predicate filter.
+        Posting members are physical ROW indices; the ids returned are
+        global and ``< n_sealed`` by construction — posting lists,
+        tombstones, and the id map in one view always describe the same
+        sealed prefix, which is the whole-of-PR-9 fix for the torn-tier
+        gathers.  ``filt`` drops non-matching ids HERE, before any ADC
+        work is attributed to them."""
+        return self.collect_candidates(query, top_m, dedup=dedup,
+                                       filt=filt)[0]
+
+    def collect_candidates(self, query: np.ndarray, top_m: int,
+                           dedup: bool = True,
+                           filt: Optional[Predicate] = None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(filtered_ids, prefilter_ids)`` — the second array is the
+        candidate set BEFORE the predicate (after dedup + tombstones), so
+        callers can prove selectivity shrank the scan
+        (``QueryStats.candidates_prefilter``).  Same object twice when
+        ``filt is None``."""
         cids = ng.search(self.graph, query.astype(np.float32), top_m)
-        ids = np.concatenate([self.posting.members[c] for c in cids]) \
+        rows = np.concatenate([self.posting.members[c] for c in cids]) \
             if len(cids) else np.zeros((0,), np.int32)
         if dedup:
-            ids = np.unique(ids)
+            rows = np.unique(rows)
+        # id_of is strictly increasing, so row order == id order and the
+        # dedup above also dedups ids
+        ids = self.id_of[rows] if len(rows) else \
+            np.zeros((0,), np.int64)
         if len(ids):
             ids = ids[~self.tombstones[ids]]
-        return ids
+        if filt is None:
+            return ids, ids
+        return (ids[filt.mask(self.attrs, ids)] if len(ids) else ids), ids
 
-    def delta_scan(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def delta_scan(self, query: np.ndarray,
+                   filt: Optional[Predicate] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact scan of the delta segment -> (global ids, squared-L2)."""
-        return self.delta.scan(query)
+        return self.delta.scan(query, filt=filt)
+
+
+def row_of_from_id_of(id_of: np.ndarray, n_ids: int) -> np.ndarray:
+    """Invert a physical-row -> global-id map; purged ids map to -1."""
+    row_of = np.full(int(n_ids), -1, np.int64)
+    row_of[id_of] = np.arange(len(id_of), dtype=np.int64)
+    return row_of
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,8 @@ class Request:
     future: Optional[QueryFuture] = None
     tag: object = None                    # caller correlation handle
     tenant: Optional[str] = None          # multi-tenant attribution (edge)
+    filter: object = None                 # metadata predicate (DESIGN.md §11)
+    adaptive: bool = False                # deadline-adaptive accuracy opt-in
 
 
 class BatchingANNSService:
@@ -237,7 +239,8 @@ class BatchingANNSService:
             self._queue.append(Request(
                 rid, q_arr, now, k=k, top_n=top_n,
                 deadline=None if deadline_s is None else now + deadline_s,
-                future=fut, tag=tag, tenant=request.tenant))
+                future=fut, tag=tag, tenant=request.tenant,
+                filter=request.filter, adaptive=request.adaptive))
             self._cv.notify_all()
         return fut
 
@@ -393,11 +396,22 @@ class BatchingANNSService:
                                fused=self.fused, lut_int8=self.lut_int8)
         t0 = time.perf_counter()
         # per-request knobs reach the executor as PlanOverrides — one shared
-        # scan window honors a mixed-k batch (deadline re-based to submit)
-        overrides = [PlanOverrides(
-            k=r.k, top_n=r.top_n,
-            deadline_s=None if r.deadline is None else r.deadline - t0)
-            for r in batch]
+        # scan window honors a mixed-k batch (deadline re-based to submit).
+        # An adaptive request with a still-live deadline lets the perf-model
+        # resolver shrink its top_m/top_n to the cheapest accuracy level
+        # predicted to fit (explicit caller knobs win over the suggestion).
+        overrides = []
+        for r in batch:
+            top_m, top_n = None, r.top_n
+            dl = None if r.deadline is None else r.deadline - t0
+            if r.adaptive and dl is not None and dl > 0:
+                sug = self.executor.planner.suggest(dl)
+                if sug is not None:
+                    top_m = sug["top_m"]
+                    if top_n is None:
+                        top_n = sug["top_n"]
+            overrides.append(PlanOverrides(k=r.k, top_m=top_m, top_n=top_n,
+                                           deadline_s=dl, filter=r.filter))
         ticket = self.executor.submit(queries, plan, overrides=overrides)
         # propagate cancellations that raced the batch formation
         for r, f in zip(batch, ticket.futures):
@@ -446,6 +460,15 @@ class BatchingANNSService:
                 self.latencies_s.append(t_done - r.t_enqueue)
                 self._undrained.append(resp)
                 responses.append(resp)
+        # feed the deadline-adaptive resolver OUTSIDE the service lock:
+        # its lock is executor-ranked (below service, but observe() also
+        # runs a perf-model update that must not serialize submissions).
+        # The planner is lazy — it only exists once an adaptive request
+        # has asked for a suggestion, so non-adaptive serving pays nothing.
+        pl = getattr(self.executor, "_planner", None)
+        if pl is not None:
+            for resp in responses:
+                pl.observe(resp.stats)
         return responses
 
     def drain(self) -> List[SearchResponse]:

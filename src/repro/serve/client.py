@@ -77,6 +77,11 @@ class SearchRequest:
     tag: Any = None                     # caller correlation handle
     tenant: Optional[str] = None        # multi-tenant attribution (the HTTP
     #                                     edge stamps this from the API key)
+    filter: Optional[Any] = None        # metadata predicate (core/filters);
+    #                                     the tenant layer conjoins its base
+    #                                     predicate underneath this one
+    adaptive: bool = False              # let the deadline-adaptive planner
+    #                                     pick top_m/top_n for deadline_s
 
     def __post_init__(self):
         self.query = np.asarray(self.query, np.float32)
@@ -107,8 +112,9 @@ class SearchResponse:
 def as_request(query, k: Optional[int] = None, *,
                top_n: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               tag: Any = None, tenant: Optional[str] = None
-               ) -> SearchRequest:
+               tag: Any = None, tenant: Optional[str] = None,
+               filter: Optional[Any] = None,
+               adaptive: Optional[bool] = None) -> SearchRequest:
     """Normalize a raw query vector + kwargs into a :class:`SearchRequest`
     (the front-door convenience used by :class:`ANNSClient` /
     :class:`AsyncANNSClient`; backend ``submit`` methods take the typed
@@ -118,10 +124,12 @@ def as_request(query, k: Optional[int] = None, *,
     if isinstance(query, SearchRequest):
         over = {name: v for name, v in (
             ("k", k), ("top_n", top_n), ("deadline_s", deadline_s),
-            ("tag", tag), ("tenant", tenant)) if v is not None}
+            ("tag", tag), ("tenant", tenant), ("filter", filter),
+            ("adaptive", adaptive)) if v is not None}
         return dataclasses.replace(query, **over) if over else query
     return SearchRequest(query=query, k=k, top_n=top_n,
-                         deadline_s=deadline_s, tag=tag, tenant=tenant)
+                         deadline_s=deadline_s, tag=tag, tenant=tenant,
+                         filter=filter, adaptive=bool(adaptive))
 
 
 def response_from_result(res: QueryResult, *, latency_s: float,
@@ -181,12 +189,18 @@ def coalesce_key(request: SearchRequest, *, fused: bool = False,
     honest under streaming updates (DESIGN.md §10): an insert/delete/
     compaction bumps it, so a request arriving after a mutation never
     attaches to a leader dispatched against the pre-mutation view.
-    ``tag``/``tenant`` are correlation metadata, NOT part of the key —
-    attached waiters get their own tag/tenant stamped onto the shared
+    ``filter``, ``tenant``, and ``adaptive`` key separately too
+    (DESIGN.md §11): the predicate changes the candidate set, the tenant
+    determines the base predicate the tenant layer will stamp (two
+    tenants' identical queries must NEVER share a scan — isolation, not
+    just correctness), and an adaptive request may serve at a reduced
+    accuracy level.  Only ``tag`` is correlation metadata outside the
+    key — attached waiters get their own tag stamped onto the shared
     response."""
     q = np.ascontiguousarray(np.asarray(request.query, np.float32))
     return (q.tobytes(), q.shape, request.k, request.top_n,
-            request.deadline_s, bool(fused), bool(lut_int8), epoch)
+            request.deadline_s, bool(fused), bool(lut_int8), epoch,
+            request.filter, request.tenant, bool(request.adaptive))
 
 
 class RequestCoalescer:

@@ -13,9 +13,18 @@ HTTP/1.1 parsing — no web framework in the image, none needed):
 * **tenant auth** — when :class:`EdgeConfig.tenants` is non-empty every
   search must carry a known ``x-api-key`` header; the matching tenant's
   name is stamped on the :class:`~repro.serve.client.SearchRequest`
-  (``tenant=``) and rides to the response.  Per-tenant request counters
-  and a per-tenant :class:`TokenBucket` rate limit (``429`` with
-  ``Retry-After`` when drained).  No tenants configured = an open edge.
+  (``tenant=``) and rides to the response.  The backend is wrapped in a
+  :class:`~repro.serve.tenants.TenantManager` (PR 10): it stamps each
+  tenant's base predicate server-side (a client can narrow but never
+  widen its namespace), keeps per-tenant books, and enforces the
+  per-tenant :class:`TokenBucket` quota at submit —
+  :class:`~repro.serve.tenants.QuotaExceeded` maps to ``429`` with
+  ``Retry-After``.  No tenants configured = an open edge.
+* **filtered + adaptive search** — the search body optionally carries a
+  ``filter`` predicate (DESIGN.md §11 wire grammar:
+  ``{"eq": [col, v]}`` / ``{"in": …}`` / ``{"range": …}`` /
+  ``{"and": […]}``) applied at candidate collection, and
+  ``"adaptive": true`` opts into deadline-adaptive accuracy.
 * **coalescing** — identical in-flight queries (same query bytes + plan
   knobs, :func:`~repro.serve.client.coalesce_key`) share ONE backend
   submit via the client's :class:`~repro.serve.client.RequestCoalescer`;
@@ -46,27 +55,21 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.filters import predicate_from_json
 from repro.core.futures import DeadlineExceeded
 from repro.serve.client import (AsyncANNSClient, RequestCoalescer,
                                 SearchRequest)
+# TenantConfig/TokenBucket moved to serve/tenants.py in PR 10 (quotas are
+# now router-level admission, not an edge-local check); re-exported here
+# for existing importers
+from repro.serve.tenants import (QuotaExceeded, TenantConfig, TenantManager,
+                                 TokenBucket)
 
 __all__ = ["TenantConfig", "EdgeConfig", "TokenBucket", "AnnsEdge",
            "HttpConn"]
 
 _MAX_HEADER_BYTES = 16 * 1024
 _MAX_HEADERS = 64
-
-
-@dataclasses.dataclass(frozen=True)
-class TenantConfig:
-    """One API tenant: the key that authenticates it and its rate limit
-    (``rate_qps <= 0`` = unlimited; ``burst`` caps how far an idle tenant
-    can pre-accumulate)."""
-
-    name: str
-    api_key: str
-    rate_qps: float = 0.0
-    burst: int = 8
 
 
 @dataclasses.dataclass
@@ -79,42 +82,6 @@ class EdgeConfig:
     default_deadline_s: Optional[float] = None
     coalesce: bool = True
     max_body_bytes: int = 1 << 20
-
-
-class TokenBucket:
-    """Classic token bucket with an injectable clock (tests tick it
-    deterministically).  ``try_acquire`` never blocks; ``retry_after``
-    says how long until one token exists."""
-
-    def __init__(self, rate: float, burst: int = 8,
-                 clock: Callable[[], float] = time.monotonic):
-        self.rate = float(rate)
-        self.burst = max(int(burst), 1)
-        self.clock = clock
-        self._tokens = float(self.burst)
-        self._t = clock()
-
-    def _refill(self) -> None:
-        now = self.clock()
-        self._tokens = min(self.burst,
-                           self._tokens + (now - self._t) * self.rate)
-        self._t = now
-
-    def try_acquire(self) -> bool:
-        if self.rate <= 0:
-            return True
-        self._refill()
-        if self._tokens >= 1.0:
-            self._tokens -= 1.0
-            return True
-        return False
-
-    def retry_after(self) -> float:
-        if self.rate <= 0:
-            return 0.0
-        self._refill()
-        missing = max(1.0 - self._tokens, 0.0)
-        return missing / self.rate
 
 
 class _HttpError(Exception):
@@ -159,12 +126,19 @@ class AnnsEdge:
                 fused=bool(getattr(backend, "fused", False)),
                 lut_int8=bool(getattr(backend, "lut_int8", False)),
                 epoch_source=epoch_source)
-        self.client = AsyncANNSClient(backend,
+        # tenants configured -> wrap the backend in a TenantManager: the
+        # quota gate, base-predicate stamping (the request can only ever
+        # narrow its tenant's namespace — isolation is server-side, a
+        # client-supplied filter cannot widen it), and per-tenant query
+        # books all live at the submit layer, not in the HTTP handler
+        self.manager: Optional[TenantManager] = None
+        if self.cfg.tenants:
+            self.manager = TenantManager(backend, self.cfg.tenants,
+                                         clock=clock)
+        self.client = AsyncANNSClient(self.manager or backend,
                                       max_inflight=self.cfg.max_inflight,
                                       coalescer=coalescer)
         self._keys = {t.api_key: t for t in self.cfg.tenants}
-        self._buckets = {t.name: TokenBucket(t.rate_qps, t.burst, clock)
-                         for t in self.cfg.tenants}
         self.tenant_stats: Dict[str, Dict[str, int]] = {
             t.name: {"requests": 0, "ok": 0, "rate_limited": 0,
                      "errors": 0} for t in self.cfg.tenants}
@@ -359,15 +333,6 @@ class AnnsEdge:
         if tenant is not None:
             tstats = self.tenant_stats[tenant.name]
             tstats["requests"] += 1
-            bucket = self._buckets[tenant.name]
-            if not bucket.try_acquire():
-                self.stats["rate_limited"] += 1
-                tstats["rate_limited"] += 1
-                wait = bucket.retry_after()
-                raise _HttpError(
-                    429, "rate_limited",
-                    f"tenant {tenant.name!r} over {tenant.rate_qps} qps",
-                    {"Retry-After": f"{wait:.3f}"})
         if self._live_requests > self.cfg.max_pending:
             self.stats["overloaded"] += 1
             raise _HttpError(503, "overloaded",
@@ -376,6 +341,15 @@ class AnnsEdge:
                                  None if tenant is None else tenant.name)
         try:
             resp = await self.client.search(req)
+        except QuotaExceeded as exc:
+            # the TenantManager's admission gate (serve/tenants.py): the
+            # backend never saw the request
+            self.stats["rate_limited"] += 1
+            if tstats is not None:
+                tstats["rate_limited"] += 1
+            raise _HttpError(
+                429, "rate_limited", str(exc),
+                {"Retry-After": f"{exc.retry_after:.3f}"}) from None
         except DeadlineExceeded as exc:
             self.stats["deadline_expired"] += 1
             if tstats is not None:
@@ -423,12 +397,17 @@ class AnnsEdge:
                 top_n = int(top_n)
             if deadline_s is not None:
                 deadline_s = float(deadline_s)
+            # metadata predicate (DESIGN.md §11 wire grammar) + the
+            # deadline-adaptive accuracy opt-in; a malformed predicate is
+            # a 400 like any other bad knob
+            filt = predicate_from_json(doc.get("filter"))
+            adaptive = bool(doc.get("adaptive", False))
         except (TypeError, ValueError) as exc:
             self.stats["bad_requests"] += 1
             raise _HttpError(400, "bad_request", str(exc)) from None
         return SearchRequest(query=query, k=k, top_n=top_n,
                              deadline_s=deadline_s, tag=doc.get("tag"),
-                             tenant=tenant)
+                             tenant=tenant, filter=filt, adaptive=adaptive)
 
     def _stats_payload(self) -> Dict[str, object]:
         out: Dict[str, object] = {"edge": dict(self.stats),
@@ -438,6 +417,11 @@ class AnnsEdge:
         co = self.client.coalescer
         if co is not None:
             out["coalescer"] = {**co.stats, "live": co.live()}
+        if self.manager is not None:
+            # the submit-layer books (quota rejects, per-tenant QueryStats
+            # + latency percentiles) — distinct from the HTTP counters in
+            # "tenants" above
+            out["tenant_service"] = self.manager.tenant_rollup()
         sig = getattr(self.backend, "scaling_signals", None)
         if sig is not None:
             out["backend"] = sig()

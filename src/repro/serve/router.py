@@ -471,17 +471,20 @@ class ReplicaRouter:
                 out.append(ix)
         return out
 
-    def insert(self, vectors: np.ndarray) -> np.ndarray:
+    def insert(self, vectors: np.ndarray,
+               attributes=None) -> np.ndarray:
         """Append to every distinct index's delta segment (founding
         replicas share one; snapshot-hydrated replicas own copies kept in
         lockstep by this fan-out).  Each replica's executor pins the new
-        epoch's view at its next dispatch.  Returns the new global ids
-        (identical on every index by determinism)."""
+        epoch's view at its next dispatch.  ``attributes`` maps column
+        name -> per-row metadata ints (DESIGN.md §11), carried to every
+        index identically.  Returns the new global ids (identical on
+        every index by determinism)."""
         vecs = np.atleast_2d(np.asarray(vectors, np.float32))
         with self._lock:
             ids = None
             for ix in self._distinct_indexes_locked():
-                out = ix.insert(vecs)
+                out = ix.insert(vecs, attributes=attributes)
                 ids = out if ids is None else ids
         return ids
 

@@ -2,9 +2,10 @@
 
 Contract under test:
 * the coalescing key distinguishes EVERY effective plan knob — ``k``,
-  ``top_n``, ``deadline_s``, ``fused``, ``lut_int8`` — and the query
-  bytes; only metadata (``tag``/``tenant``) is excluded (property test
-  via tests/_propshim.py);
+  ``top_n``, ``deadline_s``, ``fused``, ``lut_int8``, and (PR 10) the
+  ``filter`` predicate, ``tenant``, and ``adaptive`` flag — and the
+  query bytes; only ``tag`` metadata is excluded (property test via
+  tests/_propshim.py);
 * a concurrent burst of N identical requests through a coalescing
   ``AsyncANNSClient`` costs exactly ONE backend submit (the serve path is
   event-gated so the overlap is deterministic, not scheduler luck), and
@@ -64,9 +65,38 @@ def test_key_separates_query_bytes_not_metadata():
     qb[3] += 1e-3
     assert _key(qa, 5, None, None, False, False) \
         != _key(qb, 5, None, None, False, False)
-    # tag/tenant are correlation metadata, never part of work identity
-    assert coalesce_key(SearchRequest(query=qa, k=5, tag="a", tenant="x")) \
-        == coalesce_key(SearchRequest(query=qa, k=5, tag="b", tenant="y"))
+    # tag is correlation metadata, never part of work identity ...
+    assert coalesce_key(SearchRequest(query=qa, k=5, tag="a")) \
+        == coalesce_key(SearchRequest(query=qa, k=5, tag="b"))
+    # ... but tenant IS (PR 10): two tenants' identical queries must
+    # never share one scan — the tenant layer stamps a different base
+    # predicate per namespace
+    assert coalesce_key(SearchRequest(query=qa, k=5, tenant="x")) \
+        != coalesce_key(SearchRequest(query=qa, k=5, tenant="y"))
+
+
+@settings(max_examples=40)
+@given(fa=st.integers(0, 3), fb=st.integers(0, 3),
+       ta=st.integers(0, 2), tb=st.integers(0, 2),
+       aa=st.integers(0, 1), ab=st.integers(0, 1))
+def test_key_distinguishes_filter_tenant_adaptive(fa, fb, ta, tb, aa, ab):
+    """PR 10: keys are equal iff (filter, tenant, adaptive) are equal —
+    a filtered request can never attach to an unfiltered leader, and
+    hashable-equal predicates (``In`` canonicalizes its values) DO
+    coalesce."""
+    from repro.core.filters import And, Eq, In, Range
+    filters = (None, Eq("cat", 3), In("cat", (2, 1, 2)),
+               And((Eq("tenant", 0), Range("ts", 10, 20))))
+    # In("cat", (1, 2)) is value-equal to filters[2]: same key by hash
+    equiv = (None, Eq("cat", 3), In("cat", (1, 2)),
+             And((Eq("tenant", 0), Range("ts", 10, 20))))
+    tenants = (None, "alice", "bob")
+    q = np.arange(8, dtype=np.float32)
+    ka = coalesce_key(SearchRequest(query=q, k=5, filter=filters[fa],
+                                    tenant=tenants[ta], adaptive=bool(aa)))
+    kb = coalesce_key(SearchRequest(query=q, k=5, filter=equiv[fb],
+                                    tenant=tenants[tb], adaptive=bool(ab)))
+    assert (ka == kb) == ((fa, ta, aa) == (fb, tb, ab))
 
 
 # ------------------------------------------------------- attached waiters

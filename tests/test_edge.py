@@ -12,7 +12,9 @@ Contract under test:
   rate_limited (+ Retry-After), 400 bad_request, 404/405, 413
   body_too_large, 503 overloaded / draining, 504 deadline_exceeded;
 * tenant auth stamps the tenant on the response and keeps per-tenant
-  books; no tenants configured = an open edge;
+  books; no tenants configured = an open edge; (PR 10) the tenant's base
+  predicate is stamped SERVER-side, so no request body a tenant can send
+  ever retrieves another tenant's rows through the socket;
 * a burst of N identical HTTP requests costs exactly ONE backend
   submit, every response bit-identical with its own tag;
 * ``aclose()`` drains gracefully: the in-flight response still flows,
@@ -182,6 +184,68 @@ def test_rate_limit_429_with_deterministic_refill(anns_bundle):
             ts = edge.tenant_stats["metered"]
             assert ts["requests"] == 4 and ts["ok"] == 3
             assert ts["rate_limited"] == 1
+            await conn.aclose()
+
+    asyncio.run(drive())
+
+
+def test_socket_level_tenant_isolation(anns_bundle):
+    """Two tenants with disjoint base predicates sharing ONE index,
+    driven through the real socket: no request body — bare, adversarially
+    filtered for the OTHER namespace, or wide-open Range — ever returns a
+    row outside the caller's namespace, because the edge stamps the base
+    predicate server-side from the API key.  Rows without a tenant column
+    are invisible to both (fail closed), a malformed predicate is a 400
+    (not a filter bypass), and the per-tenant service books stay split in
+    ``/v1/stats``."""
+    import copy
+
+    from repro.core.filters import Eq
+    b = anns_bundle
+    ix = copy.deepcopy(b.index)           # sealed rows: NO tenant column
+    half = len(b.new_vecs) // 2
+    ids_a = ix.insert(b.new_vecs[:half],
+                      attributes={"tenant": np.zeros(half, np.int64)})
+    ids_b = ix.insert(b.new_vecs[half:],
+                      attributes={"tenant": np.ones(half, np.int64)})
+    svc = BatchingANNSService(ix, threaded=True, max_batch=4,
+                              max_wait_s=0.001)
+    tenants = [TenantConfig("alice", "key-a", filter=Eq("tenant", 0)),
+               TenantConfig("bob", "key-b", filter=Eq("tenant", 1))]
+    own = {"key-a": set(ids_a.tolist()), "key-b": set(ids_b.tolist())}
+    other = {"key-a": 1, "key-b": 0}
+
+    async def drive():
+        async with AnnsEdge(svc, EdgeConfig(tenants=tenants),
+                            own_backend=True) as edge:
+            conn = await HttpConn.open("127.0.0.1", edge.port)
+            for key in ("key-a", "key-b"):
+                for qv in (b.new_vecs[0], b.new_vecs[-1], b.queries[0]):
+                    for filt in (None,
+                                 {"eq": ["tenant", other[key]]},
+                                 {"range": ["tenant", -5, 5]}):
+                        body = {"query": qv.tolist(), "k": 10}
+                        if filt is not None:
+                            body["filter"] = filt
+                        status, payload = await conn.request(
+                            "POST", "/v1/search", body,
+                            headers={"x-api-key": key})
+                        assert status == 200
+                        assert set(payload["ids"]) <= own[key]
+            # a malformed predicate is a structured 400, never a bypass
+            status, payload = await conn.request(
+                "POST", "/v1/search",
+                {"query": b.queries[0].tolist(), "filter": {"bogus": []}},
+                headers={"x-api-key": "key-a"})
+            assert status == 400
+            assert payload["error"]["code"] == "bad_request"
+            # the TenantManager books surface per tenant, never mixed
+            status, stats = await conn.request("GET", "/v1/stats")
+            assert status == 200
+            ts = stats["tenant_service"]
+            assert ts["alice"]["ok"] == 9 and ts["bob"]["ok"] == 9
+            assert ts["alice"]["errors"] == ts["bob"]["errors"] == 0
+            assert ts["alice"]["quota_rejected"] == 0
             await conn.aclose()
 
     asyncio.run(drive())

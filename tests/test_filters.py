@@ -1,0 +1,362 @@
+"""Filtered search (PR 10 — DESIGN.md §11).
+
+The acceptance bar, verified end to end:
+
+* filtered top-k ids are BIT-IDENTICAL to an exact brute-force
+  post-filter oracle (numpy squared-L2 over the matching rows, ties
+  broken by smaller id) under an exhaustive plan — across a selectivity
+  sweep, for empty-result predicates, delta-only matches, tombstoned
+  rows, and through a snapshot round-trip;
+* ``QueryStats`` proves the predicate ran at candidate COLLECTION:
+  ``candidates_scanned`` equals the matching-row count exactly while
+  ``candidates_prefilter`` holds the unfiltered union — scanned/prefilter
+  IS the selectivity, and it shrinks proportionally with the predicate;
+* the fused LUT→ADC→top-k path honors the same predicate bit-identically
+  to the dense path.
+
+Plus unit coverage for the building blocks: :class:`AttributeTable`
+functional semantics, fail-closed UNSET handling in every predicate, and
+the JSON wire grammar.
+"""
+
+import copy
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.engine import FusionANNSIndex
+from repro.core.filters import (UNSET, And, AttributeTable, Eq, In, Range,
+                                combine, predicate_from_json,
+                                predicate_to_json)
+
+# ---------------------------------------------------------------------------
+# AttributeTable
+# ---------------------------------------------------------------------------
+
+
+def test_attribute_table_is_functional():
+    t0 = AttributeTable.from_columns(3, {"cat": [1, 2, 3]})
+    t1 = t0.append(2, {"cat": [4, 5], "ts": [10, 20]})
+    # t0 untouched; t1 backfills the new column with UNSET for old rows
+    assert t0.n == 3 and set(t0.columns) == {"cat"}
+    assert t1.n == 5
+    assert t1.lookup("cat", np.arange(5)).tolist() == [1, 2, 3, 4, 5]
+    assert t1.lookup("ts", np.arange(5)).tolist() == [UNSET] * 3 + [10, 20]
+    # append WITHOUT the old column backfills it too
+    t2 = t1.append(1)
+    assert t2.lookup("cat", np.array([5])).tolist() == [UNSET]
+    # head / drop_prefix slice rows, extend concatenates tables
+    assert t1.head(2).lookup("cat", np.arange(2)).tolist() == [1, 2]
+    assert t1.drop_prefix(3).lookup("ts", np.arange(2)).tolist() == [10, 20]
+    t3 = t0.extend(t1.drop_prefix(3))
+    assert t3.n == 5
+    assert t3.lookup("cat", np.arange(5)).tolist() == [1, 2, 3, 4, 5]
+
+
+def test_attribute_table_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="shape"):
+        AttributeTable.from_columns(3, {"cat": [1, 2]})
+    with pytest.raises(ValueError, match="shape"):
+        AttributeTable.empty(2).append(2, {"cat": [1, 2, 3]})
+
+
+def test_unknown_column_reads_unset():
+    t = AttributeTable.from_columns(2, {"cat": [1, 2]})
+    assert t.lookup("nope", np.arange(2)).tolist() == [UNSET, UNSET]
+
+
+# ---------------------------------------------------------------------------
+# Predicates: masks fail closed on UNSET
+# ---------------------------------------------------------------------------
+
+
+def _table():
+    return AttributeTable.from_columns(
+        5, {"cat": [0, 1, 2, UNSET, 1], "ts": [10, 20, 30, 40, UNSET]})
+
+
+def test_masks_and_unset_fail_closed():
+    t, rows = _table(), np.arange(5)
+    assert Eq("cat", 1).mask(t, rows).tolist() == \
+        [False, True, False, False, True]
+    assert In("cat", (0, 2)).mask(t, rows).tolist() == \
+        [True, False, True, False, False]
+    assert Range("ts", 10, 30).mask(t, rows).tolist() == \
+        [True, True, False, False, False]          # half-open: 30 excluded
+    # UNSET never matches, even via Eq(col, UNSET) or a Range spanning it
+    assert not Eq("cat", UNSET).mask(t, rows).any()
+    assert not Range("cat", -5, 5).mask(t, rows)[3]
+    assert not In("ts", (UNSET,)).mask(t, rows).any()
+    # a column nobody ever wrote matches nothing at all
+    assert not Eq("ghost", 0).mask(t, rows).any()
+    # And = intersection
+    both = And((Eq("cat", 1), Range("ts", 0, 25)))
+    assert both.mask(t, rows).tolist() == [False, True, False, False, False]
+
+
+def test_in_canonicalizes_and_hashes():
+    assert In("c", (2, 1, 2)) == In("c", (1, 2))
+    assert hash(In("c", (2, 1, 2))) == hash(In("c", (1, 2)))
+    assert len({Eq("c", 1), Eq("c", 1), Eq("c", 2)}) == 2
+
+
+def test_combine_none_semantics():
+    p = Eq("c", 1)
+    assert combine(None, None) is None
+    assert combine(p, None) is p and combine(None, p) is p
+    assert combine(p, Eq("d", 2)) == And((p, Eq("d", 2)))
+
+
+def test_predicate_json_roundtrip():
+    preds = [Eq("cat", 3), In("cat", (5, 1, 3)), Range("ts", 0, 100),
+             And((Eq("tenant", 2), Range("ts", 10, 20),
+                  In("cat", (0, 1)))), None]
+    for p in preds:
+        assert predicate_from_json(predicate_to_json(p)) == p
+
+
+@pytest.mark.parametrize("doc", [
+    ["eq", "cat", 1],                 # not a dict
+    {"eq": ["cat"]},                  # arity
+    {"eq": ["cat", "notanint"]},      # type
+    {"range": ["ts", 1]},             # arity
+    {"bogus": ["cat", 1]},            # unknown kind
+    {"and": [None]},                  # null child
+    {"and": [{"eq": ["c", 1]}, {"nope": []}]},
+    {"eq": ["a", 1], "in": ["b", [1]]},   # two keys
+])
+def test_malformed_predicate_json_rejected(doc):
+    with pytest.raises(ValueError):
+        predicate_from_json(doc)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: exhaustive filtered queries vs the brute-force oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fmod(anns_bundle):
+    """An attributed build over the bundle's data: deterministic columns
+    (``cat = id % 8``, ``tenant = id % 3``, ``ts = id % 100``) so every
+    oracle mask is computable by hand."""
+    b = anns_bundle
+    ids = np.arange(len(b.data))
+    cats, tens, ts = ids % 8, ids % 3, ids % 100
+    index = FusionANNSIndex.build(
+        b.data, b.cfg, attributes={"cat": cats, "tenant": tens, "ts": ts})
+    return SimpleNamespace(index=index, data=b.data, cats=cats, tens=tens,
+                           ts=ts, queries=b.queries, new_vecs=b.new_vecs)
+
+
+@pytest.fixture()
+def fidx(fmod):
+    """Private deepcopy for mutation tests (fresh locks, no shared state)."""
+    return copy.deepcopy(fmod.index)
+
+
+def _exhaustive_plan(index, pred, k=10, fused=False):
+    """Visit every posting list, disable the rerank early stop, and set
+    ``top_n`` past the row count: the pipeline exactly-scores EVERY
+    matching row, so the result must be bit-identical to brute force."""
+    view = index.view()
+    return index.plan(k=k, top_m=len(index.posting.members),
+                      top_n=view.n_rows + len(view.delta),
+                      disable_early_stop=True, filter=pred, fused=fused)
+
+
+def _run_filtered(index, pred, q, k=10, fused=False):
+    return index.executor.run_one(q, _exhaustive_plan(index, pred,
+                                                      k=k, fused=fused))
+
+
+def _oracle(vecs, ids, keep, q, k):
+    """Brute-force post-filter top-k: exact float32 squared L2 over the
+    kept rows, ties broken by smaller id (the engine's tie-break)."""
+    sel = np.flatnonzero(keep)
+    d2 = np.sum((vecs[sel].astype(np.float32)
+                 - q.astype(np.float32)[None]) ** 2, axis=1)
+    order = np.lexsort((ids[sel], d2))[:k]
+    return ids[sel][order], d2[order]
+
+
+def _sealed_preds(f):
+    """(predicate, oracle row mask) pairs spanning a selectivity sweep."""
+    return [
+        (None, np.ones(len(f.data), bool)),                       # 1.0
+        (In("cat", (0, 1, 2, 3)), f.cats < 4),                    # 0.5
+        (Range("ts", 0, 25), f.ts < 25),                          # 0.25
+        (Eq("cat", 0), f.cats == 0),                              # 0.125
+        (And((Eq("cat", 0), Range("ts", 0, 50))),                 # ~0.065
+         (f.cats == 0) & (f.ts < 50)),
+    ]
+
+
+def test_filtered_topk_matches_post_filter_oracle(fmod):
+    f = fmod
+    ids_all = np.arange(len(f.data))
+    for pred, keep in _sealed_preds(f):
+        for q in f.queries[:6]:
+            res = _run_filtered(f.index, pred, q, k=10)
+            want_ids, want_d2 = _oracle(f.data, ids_all, keep, q, k=10)
+            np.testing.assert_array_equal(np.asarray(res.ids, np.int64),
+                                          want_ids)
+            np.testing.assert_allclose(res.dists, want_d2, rtol=1e-4)
+
+
+def test_selectivity_shrinks_candidates_proportionally(fmod):
+    """The isolation of WHERE filtering happens: ``candidates_scanned``
+    equals the number of union candidates the predicate kept EXACTLY,
+    ``candidates_prefilter`` holds the unfiltered union, and their ratio
+    tracks the predicate's selectivity — proof the mask ran before the
+    ADC scan, not after top-k.  (The union is the graph-reachable row
+    set, not all of ``n``: coverage is the traversal's business, the
+    filter's job is only to shrink whatever was collected.)"""
+    f = fmod
+    q = f.queries[0]
+    view = f.index.view()
+    top_m = len(f.index.posting.members)
+    union = view.collect_candidates(q, top_m)[1]     # unfiltered union ids
+    prev = len(union) + 1
+    for pred, keep in _sealed_preds(f):
+        res = _run_filtered(f.index, pred, q, k=10)
+        assert res.stats.candidates_prefilter == len(union)
+        assert res.stats.candidates_scanned == int(keep[union].sum())
+        ratio = res.stats.candidates_scanned / res.stats.candidates_prefilter
+        # attrs are uniform mod-patterns, so the union's selectivity sits
+        # within a few percent of the whole-index selectivity
+        assert abs(ratio - keep.mean()) < 0.05
+        assert res.stats.candidates_scanned < prev   # sweep is monotone
+        prev = res.stats.candidates_scanned
+    # the default (non-exhaustive) plan keeps the invariant too
+    res = f.index.executor.run_one(f.queries[0],
+                                   f.index.plan(filter=Eq("cat", 0)))
+    assert 0 < res.stats.candidates_scanned <= res.stats.candidates_prefilter
+
+
+def test_empty_result_predicate(fmod):
+    f = fmod
+    res = _run_filtered(f.index, Eq("cat", 99), f.queries[0], k=10)
+    assert len(res.ids) == 0 and len(res.dists) == 0
+    assert res.stats.candidates_scanned == 0
+    assert res.stats.candidates_prefilter > 0      # the union existed;
+    #                                                the predicate emptied it
+
+
+def test_fewer_matches_than_k_returns_all_matches(fmod):
+    f = fmod
+    pred = And((Eq("cat", 0), Eq("ts", 0)))     # ids ≡ 0 (mod 200) → 13 rows
+    keep = (f.cats == 0) & (f.ts == 0)
+    res = _run_filtered(f.index, pred, f.queries[0], k=50)
+    want_ids, _ = _oracle(f.data, np.arange(len(f.data)), keep,
+                          f.queries[0], k=50)
+    assert len(res.ids) == int(keep.sum()) < 50
+    np.testing.assert_array_equal(np.asarray(res.ids, np.int64), want_ids)
+
+
+def test_fused_path_honors_filter_bit_identically(fmod):
+    f = fmod
+    for pred in (Eq("cat", 0), Range("ts", 0, 25)):
+        for q in f.queries[:3]:
+            dense = _run_filtered(f.index, pred, q, k=10, fused=False)
+            fused = _run_filtered(f.index, pred, q, k=10, fused=True)
+            np.testing.assert_array_equal(dense.ids, fused.ids)
+            np.testing.assert_allclose(dense.dists, fused.dists, rtol=1e-4)
+            assert fused.stats.candidates_prefilter \
+                == dense.stats.candidates_prefilter > 0
+
+
+# ---------------------------------------------------------------------------
+# Mutations: delta-only matches, tombstones, purge, snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_delta_only_matches(fmod, fidx):
+    """A predicate only the unsealed delta satisfies: every sealed
+    candidate is filtered out at collection and the answer comes purely
+    from the delta scan — still oracle-exact."""
+    f = fmod
+    new_ids = fidx.insert(f.new_vecs,
+                          attributes={"cat": np.full(len(f.new_vecs), 42)})
+    q = f.queries[0]
+    res = _run_filtered(fidx, Eq("cat", 42), q, k=30)
+    want_ids, want_d2 = _oracle(f.new_vecs, new_ids,
+                                np.ones(len(new_ids), bool), q, k=30)
+    np.testing.assert_array_equal(np.asarray(res.ids, np.int64), want_ids)
+    np.testing.assert_allclose(res.dists, want_d2, rtol=1e-4)
+    # sealed rows contributed zero scanned candidates
+    assert res.stats.candidates_scanned == 0     # delta rows are counted
+    #                                              by the delta scan path
+
+
+def test_delta_rows_with_unset_attrs_never_match(fmod, fidx):
+    f = fmod
+    fidx.insert(f.new_vecs)                      # no attributes: all UNSET
+    res = _run_filtered(fidx, Eq("cat", 0), f.queries[0], k=10)
+    assert all(int(i) < len(f.data) for i in res.ids)   # sealed rows only
+    ids_all = np.arange(len(f.data))
+    want_ids, _ = _oracle(f.data, ids_all, f.cats == 0, f.queries[0], k=10)
+    np.testing.assert_array_equal(np.asarray(res.ids, np.int64), want_ids)
+
+
+def test_tombstones_respected_through_filter_and_purge(fmod, fidx):
+    """Delete rows a predicate matches — in the sealed base AND the
+    attributed delta — then verify oracle equality both before compaction
+    (tombstone masks) and after (seal-time purge + id remap)."""
+    f = fmod
+    q = f.queries[1]
+    new_ids = fidx.insert(
+        f.new_vecs, attributes={"cat": np.asarray(new_cats := np.arange(
+            len(f.new_vecs)) % 8)})
+    keep_sealed = f.cats == 0
+    want_pre, _ = _oracle(f.data, np.arange(len(f.data)), keep_sealed, q, 60)
+    sealed_hits = set(want_pre[:3].tolist())          # 3 best sealed rows
+    delta_hits = set(new_ids[new_cats == 0][:2].tolist())
+    fidx.delete(np.asarray(sorted(sealed_hits | delta_hits)))
+
+    all_vecs = np.concatenate([f.data, f.new_vecs])
+    all_ids = np.arange(len(all_vecs))
+    keep = np.concatenate([keep_sealed, new_cats == 0])
+    keep[list(sealed_hits | delta_hits)] = False      # the oracle drops
+    #                                                   tombstoned rows too
+    want_ids, want_d2 = _oracle(all_vecs, all_ids, keep, q, k=10)
+
+    res = _run_filtered(fidx, Eq("cat", 0), q, k=10)
+    np.testing.assert_array_equal(np.asarray(res.ids, np.int64), want_ids)
+    np.testing.assert_allclose(res.dists, want_d2, rtol=1e-4)
+
+    fidx.compact()                                    # purge + id remap
+    res2 = _run_filtered(fidx, Eq("cat", 0), q, k=10)
+    np.testing.assert_array_equal(np.asarray(res2.ids, np.int64), want_ids)
+    np.testing.assert_allclose(res2.dists, want_d2, rtol=1e-4)
+    # post-purge stats: scanned still counts exactly the union candidates
+    # the predicate kept — purged rows are gone from both sides
+    view = fidx.view()
+    filt_ids, pre_ids = view.collect_candidates(
+        q, len(fidx.posting.members), filt=Eq("cat", 0))
+    assert res2.stats.candidates_prefilter == len(pre_ids)
+    assert res2.stats.candidates_scanned == len(filt_ids)
+    assert not (set(np.asarray(filt_ids).tolist())
+                & (sealed_hits | delta_hits))
+
+
+def test_attributes_survive_snapshot_roundtrip(fmod, fidx, tmp_path):
+    """Sealed attrs, delta attrs, and tombstones all round-trip through
+    save_snapshot/load_snapshot: filtered results stay bit-identical."""
+    f = fmod
+    fidx.insert(f.new_vecs[:10],
+                attributes={"cat": np.full(10, 5), "ts": np.arange(10)})
+    fidx.delete(np.array([0, 8]))                 # sealed rows with cat==0
+    fidx.save_snapshot(str(tmp_path / "snap"))
+    restored = FusionANNSIndex.load_snapshot(str(tmp_path / "snap"))
+    for pred in (Eq("cat", 0), Eq("cat", 5), Range("ts", 0, 5),
+                 And((Eq("cat", 5), Range("ts", 0, 5))), None):
+        for q in f.queries[:3]:
+            a = _run_filtered(fidx, pred, q, k=10)
+            b = _run_filtered(restored, pred, q, k=10)
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.dists, b.dists)
+    # deleted sealed rows stay invisible to the restored filter too
+    got = _run_filtered(restored, Eq("cat", 0), f.queries[0], k=50)
+    assert not ({0, 8} & set(np.asarray(got.ids).tolist()))

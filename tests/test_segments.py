@@ -66,7 +66,12 @@ def test_views_are_immutable_and_epoch_stamped(index_and_data):
     v3 = index.view()
     assert v3.epoch == v2.epoch + 1
     assert v1.codes.shape[0] == v0.n_sealed       # old binding preserved
-    assert v3.codes.shape[0] == v0.n_sealed + len(new_vecs)
+    # seal-time purge (PR 10): the row tombstoned in the delta is DROPPED
+    # at the seal instead of being encoded — one fewer physical row than
+    # sealed ids
+    assert v3.codes.shape[0] == v0.n_sealed + len(new_vecs) - 1
+    assert v3.n_rows == v3.codes.shape[0]
+    assert v3.n_sealed == v0.n_sealed + len(new_vecs)   # ids never recycle
 
 
 def test_candidate_ids_never_exceed_sealed_prefix(index_and_data):
@@ -80,15 +85,52 @@ def test_candidate_ids_never_exceed_sealed_prefix(index_and_data):
 
 
 def test_compaction_purges_tombstoned_delta_rows(index_and_data):
-    """Rows tombstoned before the seal never enter the posting lists."""
+    """Rows tombstoned before the seal never enter the posting lists.
+    Posting members are physical ROW indices since the PR-10 purge; the
+    view's ``id_of`` maps them back to global ids."""
     cfg, data, new_vecs, queries, index = index_and_data
     ids = index.insert(new_vecs)
     index.delete(ids[:3])
     index.compact()
-    members = np.concatenate(index.posting.members)
-    assert not (set(ids[:3].tolist()) & set(members.tolist()))
+    view = index.view()
+    member_ids = view.id_of[np.concatenate(index.posting.members)]
+    assert not (set(ids[:3].tolist()) & set(member_ids.tolist()))
     # surviving rows ARE reachable through the sealed tiers
-    assert set(ids[3:].tolist()) <= set(members.tolist())
+    assert set(ids[3:].tolist()) <= set(member_ids.tolist())
+
+
+def test_seal_time_purge_accounting(index_and_data):
+    """The purge's whole ledger: physical rows, SSD rows, id maps, and
+    the n_sealed/n_rows split all agree after sealing a delta with
+    tombstoned rows — and purged ids stay tombstoned forever (they can
+    never resurface through row arithmetic)."""
+    cfg, data, new_vecs, queries, index = index_and_data
+    n0 = index.view().n_sealed
+    ids = index.insert(new_vecs)
+    index.delete(ids[5:9])                         # 4 of 20 purged at seal
+    sealed = index.compact()
+    assert sealed == len(new_vecs)                 # delta rows consumed
+    view = index.view()
+    n_live = len(new_vecs) - 4
+    assert view.n_sealed == n0 + len(new_vecs)
+    assert view.n_rows == n0 + n_live
+    assert view.codes.shape[0] == view.n_rows
+    assert len(index.ssd.vectors) >= view.n_rows   # SSD rows track rows,
+    #                                                not ids
+    # id_of is strictly increasing (order-preserving seal) and row_of is
+    # its exact inverse, with purged ids mapped to -1
+    assert (np.diff(view.id_of) > 0).all()
+    np.testing.assert_array_equal(view.row_of[view.id_of],
+                                  np.arange(view.n_rows))
+    assert (view.row_of[ids[5:9]] == -1).all()
+    assert view.tombstones[ids[5:9]].all()
+    # survivors stay queryable under their ORIGINAL global ids
+    for j in list(range(5)) + list(range(9, len(new_vecs))):
+        assert int(index.query(new_vecs[j], k=1).ids[0]) == int(ids[j])
+    # purged ids never appear in any result
+    for q in list(queries[:4]) + list(new_vecs[5:9]):
+        got = index.query(q, k=10).ids
+        assert not (set(got.tolist()) & set(ids[5:9].tolist()))
 
 
 def test_concurrent_compact_serializes(index_and_data):

@@ -1,0 +1,326 @@
+"""Tenant namespaces, quotas, and the deadline-adaptive planner (PR 10 —
+DESIGN.md §11).
+
+Contract under test:
+* ``TenantManager`` stamps each tenant's base predicate UNDER the
+  request's own filter (narrow, never widen), passes ``tenant=None``
+  through untouched, and refuses unknown tenants (fail closed);
+* quotas: a drained ``TokenBucket`` raises :class:`QuotaExceeded` (NOT a
+  ``BackpressureError`` — it must surface, not spin) with an honest
+  ``retry_after``; a token spent on a submit the backend refused is
+  refunded;
+* books: per-tenant submitted/ok/errors/quota_rejected counters, latency
+  percentiles, and summed ``QueryStats`` — two tenants' rollups never
+  mix, and the manager folds them into the Backend ``stats_rollup()``;
+* end to end over a REAL executor: two tenants with disjoint base
+  predicates sharing one index can never retrieve each other's rows;
+* ``AdaptivePlanner``/``resolve_accuracy``: most-accurate level that
+  fits the deadline, monotone in the deadline, cheapest level as the
+  floor, and no suggestion before any traffic was observed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import QUERY_STATS_FIELDS, QueryStats
+from repro.core.filters import And, Eq
+from repro.core.futures import BackpressureError, QueryFuture
+from repro.core.perf_model import (ACCURACY_LEVELS, AdaptivePlanner,
+                                   DeviceModel, QueryDemand,
+                                   resolve_accuracy, scale_demand)
+from repro.serve.client import SearchRequest, SearchResponse
+from repro.serve.tenants import (QuotaExceeded, TenantConfig, TenantManager,
+                                 TokenBucket)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _stats(**kw) -> QueryStats:
+    base = dict.fromkeys(QUERY_STATS_FIELDS, 0)
+    base["early_stopped"] = False
+    base.update(kw)
+    return QueryStats(**base)
+
+
+def _resp(latency_s=0.01, **stat_kw) -> SearchResponse:
+    return SearchResponse(ids=np.arange(3), dists=np.zeros(3),
+                          stats=_stats(**stat_kw), latency_s=latency_s)
+
+
+class StubBackend:
+    """Records submits; the test resolves the returned futures by hand."""
+
+    def __init__(self):
+        self.requests = []
+        self.futures = []
+        self.fail_next = None          # raise this on the next submit
+
+    def submit(self, request: SearchRequest) -> QueryFuture:
+        if self.fail_next is not None:
+            exc, self.fail_next = self.fail_next, None
+            raise exc
+        fut = QueryFuture(tag=request.tag, blocking=True)
+        self.requests.append(request)
+        self.futures.append(fut)
+        return fut
+
+    def stats_rollup(self):
+        return {"backend": "stub"}
+
+    @property
+    def epoch(self):
+        return 7
+
+
+def _mgr(*tenants, clock=None):
+    be = StubBackend()
+    mgr = TenantManager(be, tenants, clock=clock or FakeClock())
+    return be, mgr
+
+
+Q = np.ones(8, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Namespacing
+# ---------------------------------------------------------------------------
+
+def test_none_tenant_passes_through_untouched():
+    be, mgr = _mgr(TenantConfig("a", "ka", filter=Eq("tenant", 0)))
+    req = SearchRequest(query=Q, k=5)
+    mgr.submit(req)
+    assert be.requests[0] is req                  # not even copied
+    assert mgr.tenant_rollup()["a"]["submitted"] == 0
+
+
+def test_unknown_tenant_refused():
+    be, mgr = _mgr(TenantConfig("a", "ka"))
+    with pytest.raises(ValueError, match="unknown tenant"):
+        mgr.submit(SearchRequest(query=Q, k=5, tenant="mallory"))
+    assert not be.requests                        # fail closed: no submit
+
+
+def test_base_predicate_stamped_under_request_filter():
+    base = Eq("tenant", 0)
+    be, mgr = _mgr(TenantConfig("a", "ka", filter=base),
+                   TenantConfig("open", "ko"))    # no base predicate
+    # no request filter -> the base predicate alone
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    assert be.requests[-1].filter == base
+    # a request filter NARROWS the namespace: And((base, request))
+    mine = Eq("cat", 3)
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="a", filter=mine))
+    assert be.requests[-1].filter == And((base, mine))
+    # a tenant without a base predicate forwards the request filter as-is
+    req = SearchRequest(query=Q, k=5, tenant="open", filter=mine)
+    mgr.submit(req)
+    assert be.requests[-1] is req                 # unchanged -> no copy
+    assert mgr.base_filter("a") == base and mgr.base_filter("open") is None
+    assert mgr.tenant_names() == ["a", "open"]
+
+
+# ---------------------------------------------------------------------------
+# Quotas
+# ---------------------------------------------------------------------------
+
+def test_quota_enforced_with_retry_after():
+    clk = FakeClock()
+    be, mgr = _mgr(TenantConfig("a", "ka", rate_qps=1.0, burst=2),
+                   clock=clk)
+    for _ in range(2):                            # burst admits
+        mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    with pytest.raises(QuotaExceeded) as ei:
+        mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    assert ei.value.tenant == "a"
+    assert ei.value.retry_after == pytest.approx(1.0)
+    assert not isinstance(ei.value, BackpressureError)   # must surface,
+    #                                                      never spin
+    book = mgr.tenant_rollup()["a"]
+    assert book["submitted"] == 2 and book["quota_rejected"] == 1
+    clk.t += 1.0                                  # one token re-accrues
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    assert len(be.requests) == 3
+
+
+def test_quota_is_per_tenant():
+    clk = FakeClock()
+    be, mgr = _mgr(TenantConfig("a", "ka", rate_qps=1.0, burst=1),
+                   TenantConfig("b", "kb", rate_qps=1.0, burst=1),
+                   clock=clk)
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    with pytest.raises(QuotaExceeded):
+        mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    # a's drained bucket never touches b
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="b"))
+    roll = mgr.tenant_rollup()
+    assert roll["a"]["quota_rejected"] == 1
+    assert roll["b"]["quota_rejected"] == 0
+
+
+def test_backend_refusal_refunds_the_token():
+    clk = FakeClock()
+    be, mgr = _mgr(TenantConfig("a", "ka", rate_qps=1.0, burst=1),
+                   clock=clk)
+    be.fail_next = BackpressureError("queue full")
+    with pytest.raises(BackpressureError):
+        mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    # the token came back: the retry is admitted with NO clock advance
+    mgr.submit(SearchRequest(query=Q, k=5, tenant="a"))
+    assert len(be.requests) == 1
+    assert mgr.tenant_rollup()["a"]["submitted"] == 1
+
+
+def test_token_bucket_refund_caps_at_burst():
+    clk = FakeClock()
+    b = TokenBucket(rate=1.0, burst=2, clock=clk)
+    assert b.try_acquire() and b.try_acquire() and not b.try_acquire()
+    b.refund()
+    assert b.try_acquire() and not b.try_acquire()
+    b.refund()
+    b.refund()                                    # over-refund clamps
+    b.refund()
+    assert b.try_acquire() and b.try_acquire() and not b.try_acquire()
+
+
+# ---------------------------------------------------------------------------
+# Books
+# ---------------------------------------------------------------------------
+
+def test_per_tenant_books_and_stats_are_isolated():
+    be, mgr = _mgr(TenantConfig("a", "ka"), TenantConfig("b", "kb"))
+    for tenant, n in (("a", 3), ("b", 1)):
+        for _ in range(n):
+            mgr.submit(SearchRequest(query=Q, k=5, tenant=tenant))
+    # resolve: a gets 2 oks + 1 error, b gets 1 ok
+    be.futures[0]._set_result(_resp(latency_s=0.010, candidates_scanned=100,
+                                    candidates_prefilter=400, ios=7))
+    be.futures[1]._set_result(_resp(latency_s=0.030, candidates_scanned=50,
+                                    candidates_prefilter=400))
+    be.futures[2]._set_exception(RuntimeError("boom"))
+    be.futures[3]._set_result(_resp(latency_s=0.500, candidates_scanned=9,
+                                    candidates_prefilter=9))
+    roll = mgr.tenant_rollup()
+    a, b = roll["a"], roll["b"]
+    assert (a["submitted"], a["ok"], a["errors"]) == (3, 2, 1)
+    assert (b["submitted"], b["ok"], b["errors"]) == (1, 1, 0)
+    assert a["query_stats"]["candidates_scanned"] == 150
+    assert a["query_stats"]["candidates_prefilter"] == 800
+    assert a["query_stats"]["ios"] == 7
+    assert b["query_stats"]["candidates_scanned"] == 9   # never mixed
+    assert a["latency"]["n"] == 2
+    assert a["latency"]["p99"] < 0.1 < b["latency"]["p50"]
+    # percentiles helper agrees with the rollup
+    assert mgr.tenant_percentiles("b")["n"] == 1
+
+
+def test_stats_rollup_folds_tenants_into_backend_rollup():
+    be, mgr = _mgr(TenantConfig("a", "ka"))
+    roll = mgr.stats_rollup()
+    assert roll["backend"] == "stub"              # delegation preserved
+    assert set(roll["tenants"]) == {"a"}
+    assert mgr.epoch == 7                         # property delegation
+    assert mgr.tenant_rollup()["a"]["ok"] == 0
+
+
+def test_getattr_delegates_but_guards_reentry():
+    be, mgr = _mgr()
+    be.anything = "delegated"
+    assert mgr.anything == "delegated"
+    with pytest.raises(AttributeError):
+        TenantManager.__getattr__(mgr, "backend")
+
+
+# ---------------------------------------------------------------------------
+# End to end: two tenants over one REAL index can never see each other
+# ---------------------------------------------------------------------------
+
+def test_tenants_cannot_retrieve_each_others_rows(anns_bundle, fresh_index):
+    """Disjoint base predicates over one shared executor: every result id
+    belongs to the requesting tenant's rows — even when the request
+    carries an adversarially wide filter — and rows without a tenant
+    column are invisible to BOTH (fail closed)."""
+    b = anns_bundle
+    index = fresh_index                     # sealed rows: NO tenant column
+    half = len(b.new_vecs) // 2
+    ids_a = index.insert(b.new_vecs[:half],
+                         attributes={"tenant": np.zeros(half, np.int64)})
+    ids_b = index.insert(b.new_vecs[half:],
+                         attributes={"tenant": np.ones(half, np.int64)})
+    mgr = TenantManager(index.executor,
+                        (TenantConfig("alice", "ka", filter=Eq("tenant", 0)),
+                         TenantConfig("bob", "kb", filter=Eq("tenant", 1))))
+    own = {"alice": set(ids_a.tolist()), "bob": set(ids_b.tolist())}
+    for tenant in ("alice", "bob"):
+        for q in list(b.queries[:3]) + list(b.new_vecs[:2]):
+            for filt in (None, Eq("tenant", 1 - (tenant == "bob"))):
+                # the second filter ASKS for the other tenant's rows; the
+                # conjunction with the base predicate yields nothing else
+                got = mgr.submit(SearchRequest(
+                    query=q, k=10, tenant=tenant, filter=filt)).result()
+                assert set(np.asarray(got.ids).tolist()) <= own[tenant]
+    roll = mgr.tenant_rollup()
+    assert roll["alice"]["ok"] == roll["bob"]["ok"] == 10
+    assert roll["alice"]["errors"] == roll["bob"]["errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadline-adaptive accuracy
+# ---------------------------------------------------------------------------
+
+_DEMAND = QueryDemand(ssd_ios=64, ssd_bytes=64 * 4096, h2d_bytes=40_000,
+                      gpu_lookups=5e5, cpu_dist_ops=2e5, graph_hops=100)
+
+
+def test_resolve_accuracy_monotone_in_deadline():
+    hw = DeviceModel()
+    deadlines = (10.0, 1e-3, 3e-4, 1e-4, 1e-5, 1e-9)
+    picked = [resolve_accuracy(dl, _DEMAND, hw) for dl in deadlines]
+    order = {lvl.name: i for i, lvl in enumerate(ACCURACY_LEVELS)}
+    ranks = [order[p.name] for p in picked]
+    assert ranks == sorted(ranks)                 # tighter never finer
+    assert picked[0].name == "full"               # easy deadline: full
+    assert picked[-1].name == "turbo"             # hopeless: cheapest floor
+
+
+def test_scale_demand_tracks_selectivity():
+    lvl = ACCURACY_LEVELS[2]                      # balanced: 0.5 / 0.5
+    d = scale_demand(_DEMAND, lvl, selectivity=0.25)
+    assert d.gpu_lookups == pytest.approx(_DEMAND.gpu_lookups * 0.125)
+    assert d.ssd_ios == pytest.approx(_DEMAND.ssd_ios * 0.125)
+    # graph hops scale with top_m only — traversal cost ignores the filter
+    assert d.graph_hops == pytest.approx(_DEMAND.graph_hops * 0.5)
+
+
+def _planner(cfg):
+    return AdaptivePlanner(cfg, DeviceModel(), dim=32)
+
+
+def test_planner_suggests_nothing_without_traffic(anns_bundle):
+    pl = _planner(anns_bundle.cfg)
+    assert pl.suggest(0.001) is None              # nothing observed yet
+    pl.observe(_stats(ios=10, ssd_bytes=40960, h2d_bytes=10_000,
+                      candidates_scanned=1000, candidates_prefilter=1000))
+    assert pl.suggest(None) is None               # no deadline, no change
+    assert pl.suggest(10.0) is None               # full accuracy fits
+
+
+def test_planner_descends_under_tight_deadlines(anns_bundle):
+    cfg = anns_bundle.cfg
+    pl = _planner(cfg)
+    for _ in range(4):                            # heavy observed traffic
+        pl.observe(_stats(ios=500, ssd_bytes=500 * 4096, h2d_bytes=4e6,
+                          candidates_scanned=200_000,
+                          candidates_prefilter=400_000))
+    sug = pl.suggest(1e-4)
+    assert sug is not None and sug["level"] != "full"
+    assert 1 <= sug["top_m"] < cfg.top_m
+    assert cfg.top_k <= sug["top_n"] < cfg.top_n
+    assert sug["selectivity"] == pytest.approx(0.5)
+    # a relaxed deadline at the same demand stays at full accuracy
+    assert pl.suggest(60.0) is None

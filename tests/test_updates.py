@@ -185,9 +185,16 @@ def test_view_publication_is_atomic_across_tiers(index_and_data):
     try:
         for _ in range(60):
             view = index.view()
-            n_sealed = view.n_sealed
-            assert view.codes.shape[0] == n_sealed
-            assert len(view.posting.primary) == n_sealed
+            n_sealed, n_rows = view.n_sealed, view.n_rows
+            # physical tiers (codes/posting/id_of) describe the same row
+            # space; id-space tiers (tombstones/row_of) the same id space.
+            # n_rows < n_sealed is LEGAL once seal-time purge has dropped
+            # tombstoned rows (PR 10) — torn would be the tiers diverging.
+            assert view.codes.shape[0] == n_rows
+            assert len(view.posting.primary) == n_rows
+            assert len(view.id_of) == n_rows
+            assert len(view.row_of) == n_sealed
+            assert n_rows <= n_sealed
             for q in queries[:2]:
                 ids = view.candidate_ids(q, cfg.top_m)
                 if len(ids):
